@@ -1,0 +1,92 @@
+"""Shared benchmark helpers: memoised params, engine factory, timing, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ModelConfig, get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+_PARAMS: Dict[str, object] = {}
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def get_params(cfg: ModelConfig):
+    if cfg.name not in _PARAMS:
+        from repro.models import build_model
+        _PARAMS[cfg.name] = build_model(cfg).init(jax.random.PRNGKey(0))
+    return _PARAMS[cfg.name]
+
+
+def make_engine(arch: str, *, max_batch: int = 8, cache_len: int = 256,
+                baseline: bool = False, **kw) -> InferenceEngine:
+    """baseline=True: the llama.cpp stand-in — strictly sequential (batch 1),
+    no prefix cache, no content cache."""
+    cfg = get_config(arch)
+    if baseline:
+        kw.update(max_batch=1, enable_prefix_cache=False,
+                  enable_content_cache=False)
+    else:
+        kw.setdefault("max_batch", max_batch)
+    kw.setdefault("cache_len", cache_len)
+    return InferenceEngine(cfg, params=get_params(cfg), **kw)
+
+
+def text_requests(n: int, *, prompt_len: int = 24, max_tokens: int = 24,
+                  prefix: str = "") -> List[Request]:
+    out = []
+    for i in range(n):
+        body = f"{prefix}request number {i} " + "x" * max(0, prompt_len - 20)
+        out.append(Request(prompt_tokens=TOK.encode(body)[:prompt_len],
+                           sampling=SamplingParams(max_tokens=max_tokens)))
+    return out
+
+
+def run_requests(engine: InferenceEngine, reqs: List[Request]) -> float:
+    """Wall-clock seconds to serve all requests to completion."""
+    t0 = time.monotonic()
+    engine.generate(reqs)
+    return time.monotonic() - t0
+
+
+def warmup(engine: InferenceEngine, *, images=None, video_frames=None,
+           audio=None, prompt_len: int = 24) -> None:
+    """Compile all hot paths outside timing: cold prefill, decode, AND the
+    cache-hit variants.  Pass 2 reuses the same media with a *different*
+    prompt of the same bucket (content-cache hit + prefix miss -> the
+    cross_cached full-bucket prefill); pass 3 repeats a prompt exactly
+    (prefix full-hit -> the short resumed bucket)."""
+    prompts = ["w" * prompt_len, "v" * prompt_len, "v" * prompt_len]
+    for body in prompts:
+        r = Request(prompt_tokens=TOK.encode(body)[:prompt_len],
+                    images=list(images or []),
+                    video_frames=list(video_frames or []),
+                    audio=audio, sampling=SamplingParams(max_tokens=2))
+        engine.generate([r])
+
+
+def decode_tok_s(engine: InferenceEngine, n_requests: int, *,
+                 max_tokens: int = 24, prompt_len: int = 24) -> float:
+    reqs = text_requests(n_requests, prompt_len=prompt_len,
+                         max_tokens=max_tokens)
+    dt = run_requests(engine, reqs)
+    toks = sum(r.num_generated for r in reqs)
+    return toks / dt
+
+
+def rand_image(seed: int, size: int = 64) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 255, (size, size, 3), dtype=np.uint8)

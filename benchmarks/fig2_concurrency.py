@@ -1,0 +1,33 @@
+"""Paper Figure 2: aggregate and request throughput vs concurrency (1..16).
+
+Claim shape: 3.7x aggregate throughput at 16 concurrent requests for the
+small model, diminishing for larger models; 25+ req/s at 16 concurrent."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, run_requests, text_requests, warmup
+
+LEVELS = [1, 2, 4, 8, 16]
+MODELS = ["qwen3-0.6b-toy", "qwen3-8b-toy"]
+MAX_TOKENS = 16
+
+
+def run() -> None:
+    for arch in MODELS:
+        base_tok_s = None
+        for n in LEVELS:
+            eng = make_engine(arch, max_batch=n)
+            warmup(eng)
+            reqs = text_requests(n * 2, max_tokens=MAX_TOKENS)
+            dt = run_requests(eng, reqs)
+            toks = sum(r.num_generated for r in reqs)
+            tok_s = toks / dt
+            req_s = len(reqs) / dt
+            base_tok_s = base_tok_s or tok_s if n == 1 else base_tok_s
+            scale = tok_s / base_tok_s if base_tok_s else 1.0
+            emit(f"fig2/{arch}/c{n}", 1e6 / tok_s,
+                 f"agg={tok_s:.1f}tok/s req={req_s:.2f}req/s "
+                 f"scaling={scale:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,127 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (per arch × shape: three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio, next lever).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+LEVERS = {
+    ("moe", "collective"): "shard experts (a2a token dispatch) instead of "
+                           "gathering expert weights",
+    ("moe", "memory"): "int8 weights / larger per-chip batch",
+    ("hybrid", "collective"): "expert a2a + gather-free SSD head sharding",
+    ("dense", "collective"): "reduce FSDP re-gathers (overlap or TP-only "
+                             "inference layout)",
+    ("dense", "memory"): "int8 weights; fuse attention cache update",
+    ("vlm", "memory"): "int8 weights; shrink replicated cross-KV",
+    ("audio", "collective"): "TP-only layout for the small model "
+                             "(FSDP gathers dominate)",
+    ("ssm", "memory"): "state in bf16; fuse conv+gate",
+    ("ssm", "collective"): "batch-only sharding for the small model",
+    ("audio", "memory"): "int8 weights",
+    ("vlm", "collective"): "reduce FSDP re-gathers",
+    ("hybrid", "memory"): "int8 weights; smaller SSD chunk",
+    ("dense", "compute"): "causal-blocks flash schedule (skip masked blocks)",
+}
+
+
+def load(dir_: str, suffix: str = "") -> List[Dict]:
+    shapes = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*{suffix}.json"))):
+        base = os.path.basename(path)[:-5]
+        if suffix == "" and not base.endswith(shapes):
+            continue                 # baseline records only: <arch>_<shape>
+        if suffix and not base.endswith(suffix):
+            continue
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def load_merged(dir_: str) -> List[Dict]:
+    """Baseline table: prefer the exact (unrolled) record per (arch, shape);
+    fall back to the scan-counted one, marked."""
+    from repro.launch.dryrun import ALL_ARCHS, ALL_SHAPES
+    out = []
+    for arch in ALL_ARCHS:
+        for shape in ALL_SHAPES:
+            exact = os.path.join(dir_, f"{arch}_{shape}_exact.json")
+            scan = os.path.join(dir_, f"{arch}_{shape}.json")
+            path = exact if os.path.exists(exact) else scan
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            rec["counting"] = ("exact" if path == exact and rec.get("ok")
+                               else "scan-body-once")
+            out.append(rec)
+    return out
+
+
+def fam(arch: str) -> str:
+    from repro.configs import get_config
+    return get_config(arch).family
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | step | t_compute | t_memory | t_collective | "
+        "dominant | useful FLOP frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"FAILED | — | {r.get('error','')[:60]} |")
+            continue
+        lever = LEVERS.get((fam(r["arch"]), r["dominant"]), "—")
+        mark = "" if r.get("counting", "exact") == "exact" else " †"
+        lines.append(
+            f"| {r['arch']} | {r['shape']}{mark} | {r['step']} "
+            f"| {r['t_compute_s']:.2e} s | {r['t_memory_s']:.2e} s "
+            f"| {r['t_collective_s']:.2e} s | **{r['dominant']}** "
+            f"| {min(r['useful_flop_frac'], 9.99):.2f} | {lever} |")
+    return "\n".join(lines)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    worst = max(ok, key=lambda r: max(r["t_compute_s"], r["t_memory_s"],
+                                      r["t_collective_s"]))
+    most_coll = max(ok, key=lambda r: (r["t_collective_s"]
+                                       / max(r["t_compute_s"]
+                                             + r["t_memory_s"], 1e-12)))
+    return (f"{len(ok)}/{len(recs)} combos compiled. "
+            f"Dominant terms: {doms}. "
+            f"Worst absolute: {worst['arch']}×{worst['shape']} "
+            f"({max(worst['t_compute_s'], worst['t_memory_s'], worst['t_collective_s']):.1f}s). "
+            f"Most collective-bound: {most_coll['arch']}×{most_coll['shape']}.")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--suffix", default="",
+                    help="e.g. _mp for the multi-pod records; 'merged' "
+                         "prefers exact per combo")
+    args = ap.parse_args()
+    recs = (load_merged(args.dir) if args.suffix == "merged"
+            else load(args.dir, args.suffix))
+    print(summary(recs))
+    print()
+    print(markdown_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
+``--only table4,fig2``.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAMES]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (fig2_concurrency, table1_throughput,
+                        table2_mllm_cache, table3_video, table4_ablation,
+                        table5_resolution, table6_video_frames,
+                        table7_text_prefix)
+from benchmarks.common import ROWS
+
+SUITES = [
+    ("table1", table1_throughput.run),
+    ("fig2", fig2_concurrency.run),
+    ("table2", table2_mllm_cache.run),
+    ("table3", table3_video.run),
+    ("table4", table4_ablation.run),
+    ("table5", table5_resolution.run),
+    ("table6", table6_video_frames.run),
+    ("table7", table7_text_prefix.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (e.g. table1,fig2)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name, fn in SUITES:
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:                              # noqa: BLE001
+            failures.append((name, e))
+            import traceback
+            traceback.print_exc()
+            print(f"# {name} FAILED: {e}", flush=True)
+    print(f"# total {time.time()-t0:.0f}s, {len(ROWS)} rows, "
+          f"{len(failures)} failed suites")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

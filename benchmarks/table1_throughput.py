@@ -1,0 +1,40 @@
+"""Paper Table 1: text-model decode throughput, ours vs the sequential
+baseline (llama.cpp stand-in: one request at a time, no caches), across the
+paper's model families as CPU-sized toy variants.
+
+The paper's claim shape: vllm-mlx 1.17-1.87x over llama.cpp, advantage
+largest on small models.  Here the 'ours' engine uses continuous batching
+over 4 concurrent requests (the paper's serving scenario); the baseline
+serves the same requests strictly sequentially."""
+from __future__ import annotations
+
+from benchmarks.common import decode_tok_s, emit, make_engine, text_requests, warmup
+
+MODELS = [
+    "qwen3-0.6b-toy", "qwen3-4b-toy", "qwen3-8b-toy", "qwen3-30b-a3b-toy",
+    "llama-3.2-1b-toy", "llama-3.2-3b-toy", "gemma3-4b-toy",
+    "nemotron-30b-a3b-toy",
+]
+N_REQ = 8
+MAX_TOKENS = 24
+
+
+def run() -> None:
+    for arch in MODELS:
+        ours = make_engine(arch, max_batch=4)
+        warmup(ours)
+        ours_tok_s = decode_tok_s(ours, N_REQ, max_tokens=MAX_TOKENS)
+
+        base = make_engine(arch, baseline=True)
+        warmup(base)
+        base_tok_s = decode_tok_s(base, N_REQ, max_tokens=MAX_TOKENS)
+
+        speedup = ours_tok_s / base_tok_s
+        us = 1e6 / ours_tok_s                       # us per generated token
+        emit(f"table1/{arch}", us,
+             f"ours={ours_tok_s:.1f}tok/s baseline={base_tok_s:.1f}tok/s "
+             f"speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Table 2: multi-turn MLLM latency with content-based prefix caching.
+
+Claim shape: turn-1 cold == no-cache; turn-2 ~19x faster; turn-3+ ~28x
+(cold 21.7s -> 0.78s on M4 Max).  Same image queried repeatedly; the cache
+eliminates vision encoding and prompt reprocessing."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import TOK, emit, make_engine, rand_image, warmup
+from repro.core.request import Request, SamplingParams
+
+TURNS = 4
+WORK = 8000        # encoder-dominated cost structure, as in the paper
+
+
+def _turn(eng, img, i):
+    r = Request(prompt_tokens=TOK.encode(f"turn {i}: describe the image"),
+                images=[img], sampling=SamplingParams(max_tokens=6))
+    t0 = time.monotonic()
+    eng.generate([r])
+    return time.monotonic() - t0
+
+
+def run() -> None:
+    img = rand_image(0, 96)
+    eng = make_engine("qwen3-vl-toy", max_batch=2, vision_work_iters=WORK)
+    warmup(eng, images=[rand_image(99, 96)])    # compile paths w/ other image
+
+    nocache = make_engine("qwen3-vl-toy", max_batch=2,
+                          vision_work_iters=WORK, enable_prefix_cache=False,
+                          enable_content_cache=False)
+    warmup(nocache, images=[rand_image(99, 96)])
+
+    cold = _turn(eng, img, 0)
+    lat_nc = [_turn(nocache, img, i) for i in range(1, TURNS)]
+    lat_c = [_turn(eng, img, i) for i in range(1, TURNS)]
+
+    emit("table2/turn1_cold", cold * 1e6, "speedup=1.0x")
+    for i, (nc, c) in enumerate(zip(lat_nc, lat_c), start=2):
+        emit(f"table2/turn{i}", c * 1e6,
+             f"nocache={nc*1e3:.0f}ms cached={c*1e3:.0f}ms "
+             f"speedup={nc/c:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table 3: video benchmark vs frame count (cold path).
+
+Claim shape: latency grows ~linearly with frames; tok/s drops; memory grows.
+Frame counts reduced for CPU (paper: 2-64 @ up to 8fps)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import TOK, emit, make_engine, rand_image, warmup
+from repro.core.kv_cache import tree_bytes
+from repro.core.request import Request, SamplingParams
+
+FRAME_COUNTS = [2, 4, 8, 16]
+WORK = 2000
+
+
+def run() -> None:
+    for nf in FRAME_COUNTS:
+        eng = make_engine("qwen3-vl-toy", max_batch=1, max_media_items=4,
+                          vision_work_iters=WORK, enable_content_cache=False,
+                          enable_prefix_cache=False)
+        frames = [rand_image(1000 + i, 48) for i in range(nf)]
+        warmup(eng, video_frames=[rand_image(1, 48)])
+        r = Request(prompt_tokens=TOK.encode("summarize the video"),
+                    video_frames=frames,
+                    sampling=SamplingParams(max_tokens=8))
+        t0 = time.monotonic()
+        eng.generate([r])
+        dt = time.monotonic() - t0
+        tok_s = r.num_generated / dt
+        mem = tree_bytes(eng.pool.cache) / 1e6
+        emit(f"table3/frames{nf}", dt * 1e6,
+             f"time={dt*1e3:.0f}ms tok/s={tok_s:.1f} cache_mb={mem:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Content-based multimodal prefix caching (the paper's core contribution):
+the same image in three transport formats hits one cache entry; repeated
+queries skip the vision encoder entirely; video frames share entries.
+
+  PYTHONPATH=src python examples/multimodal_cache.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.serving.media import encode_b64, register_url
+from repro.serving.tokenizer import ByteTokenizer
+
+tok = ByteTokenizer()
+cfg = get_config("qwen3-vl-toy")
+engine = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                         vision_work_iters=4000)
+
+img = np.random.default_rng(0).integers(0, 255, (96, 96, 3), dtype=np.uint8)
+register_url("demo://cat.png", img)
+
+FORMATS = [("raw array", img),
+           ("base64", encode_b64(img)),
+           ("url", {"url": "demo://cat.png"})]
+
+
+def ask(payload, text="what is in this image, described fully?"):
+    r = Request(prompt_tokens=tok.encode(text), images=[payload],
+                sampling=SamplingParams(max_tokens=6))
+    t0 = time.monotonic()
+    engine.generate([r])
+    return r, time.monotonic() - t0
+
+
+print("multi-turn conversation about one image (three formats):")
+for i, (name, payload) in enumerate(FORMATS):
+    r, dt = ask(payload)
+    kind = "MISS (encoded)" if r.vision_cache_misses else "HIT  (cached) "
+    print(f"  turn {i+1} [{name:10s}] {kind} latency={dt*1e3:7.1f}ms "
+          f"output={r.output_tokens}")
+
+print(f"\ncache: {len(engine.content_cache)} entries, "
+      f"{engine.content_cache.nbytes/1e6:.2f} MB, "
+      f"hit-rate {engine.content_cache.stats.hit_rate:.0%}")
+
+# --- video: per-frame entries are shared across clips --------------------- #
+frames = [np.random.default_rng(i).integers(0, 255, (48, 48, 3),
+                                            dtype=np.uint8) for i in range(4)]
+r1 = Request(prompt_tokens=tok.encode("summarize the following video"),
+             video_frames=frames, sampling=SamplingParams(max_tokens=4))
+t0 = time.monotonic(); engine.generate([r1]); cold = time.monotonic() - t0
+# a second clip reusing 3 of the 4 frames
+clip2 = frames[1:] + [np.random.default_rng(9).integers(
+    0, 255, (48, 48, 3), dtype=np.uint8)]
+r2 = Request(prompt_tokens=tok.encode("summarize the following video"),
+             video_frames=clip2, sampling=SamplingParams(max_tokens=4))
+t0 = time.monotonic(); engine.generate([r2]); warm = time.monotonic() - t0
+print(f"\nvideo clip 1 (cold): {cold*1e3:.0f}ms "
+      f"({r1.vision_cache_misses} frames encoded)")
+print(f"video clip 2 (3/4 frames shared): {warm*1e3:.0f}ms "
+      f"({r2.vision_cache_hits} hits, {r2.vision_cache_misses} encoded)")

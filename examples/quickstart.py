@@ -1,0 +1,55 @@
+"""Quickstart: build an engine, serve a few concurrent requests, stream one.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.serving.tokenizer import ByteTokenizer
+
+tok = ByteTokenizer()
+cfg = get_config("qwen3-0.6b-toy")
+print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+      f"{cfg.family})")
+
+engine = InferenceEngine(cfg, max_batch=4, cache_len=256)
+
+# --- batch of concurrent requests (continuous batching) ------------------- #
+requests = [
+    Request(prompt_tokens=tok.encode(p),
+            sampling=SamplingParams(max_tokens=16))
+    for p in ["hello there", "the meaning of life is",
+              "once upon a time", "def fibonacci(n):"]
+]
+t0 = time.monotonic()
+engine.generate(requests)
+dt = time.monotonic() - t0
+total = sum(r.num_generated for r in requests)
+print(f"\nserved {len(requests)} requests / {total} tokens "
+      f"in {dt:.2f}s ({total/dt:.1f} tok/s aggregate)")
+for r in requests:
+    print(f"  [{r.request_id}] ttft={r.ttft*1e3:.0f}ms "
+          f"tokens={r.output_tokens[:6]}...")
+
+# --- token streaming ------------------------------------------------------ #
+print("\nstreaming:")
+req = Request(prompt_tokens=tok.encode("stream this"),
+              sampling=SamplingParams(max_tokens=12))
+engine.add_request(req)
+while not req.is_finished:
+    for ev in engine.step():
+        if ev.token is not None:
+            print(f"  token={ev.token:5d} text={ev.text!r}")
+print("done:", req.finish_reason)
+
+# --- prefix cache --------------------------------------------------------- #
+shared = tok.encode("You are a helpful assistant. " * 4)
+for i in range(2):
+    r = Request(prompt_tokens=shared + tok.encode(f"Q{i}", add_bos=False),
+                sampling=SamplingParams(max_tokens=4))
+    t0 = time.monotonic()
+    engine.generate([r])
+    print(f"turn {i}: ttft={r.ttft*1e3:6.1f}ms "
+          f"cached_prefix={r.cached_prefix_len} tokens")

@@ -1,0 +1,49 @@
+"""Train a ~small dense model for a few hundred steps on the synthetic
+bigram corpus and checkpoint it — exercises the full training substrate
+(data pipeline -> train_step -> AdamW -> checkpoint).
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.data import BigramDataPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="qwen3-0.6b-toy")
+args = ap.parse_args()
+
+cfg = get_config(args.arch)
+print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+B, S = 8, 64
+data = BigramDataPipeline(min(cfg.vocab_size, 512), S, B, seed=0)
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+step_fn = jax.jit(make_train_step(cfg, opt, remat=False), donate_argnums=(0,))
+
+t0, losses = time.time(), []
+for i in range(args.steps):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+    state, m = step_fn(state, batch)
+    losses.append(float(m["loss"]))
+    if i % 20 == 0 or i == args.steps - 1:
+        tput = B * S * (i + 1) / (time.time() - t0)
+        print(f"  step {i:4d} loss={losses[-1]:.4f} "
+              f"lr={float(m['lr']):.2e} {tput:,.0f} tok/s")
+
+print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"(Δ={losses[0]-losses[-1]:+.3f})")
+save_checkpoint("/tmp/repro_tiny.npz", state, step=args.steps)
+restored = restore_checkpoint("/tmp/repro_tiny.npz", state)
+print("checkpoint roundtrip OK:",
+      all(bool(jnp.all(a == b)) for a, b in
+          zip(jax.tree.leaves(state), jax.tree.leaves(restored))))

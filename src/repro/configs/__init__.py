@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    AudioConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    VisionConfig,
+    get_config,
+    register,
+    registry,
+)

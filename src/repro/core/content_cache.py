@@ -1,0 +1,99 @@
+"""Content-based multimodal prefix cache — paper Algorithm 3.
+
+The key property (paper §3.3): identical media hit the same entry *regardless
+of input format* — URL, base64, file path, raw array — because the SHA-256
+is computed over **decoded pixel values** (canonicalised to uint8 bytes plus
+shape/dtype header), not over the transport encoding.
+
+Two entry kinds:
+  * per-frame **embedding** entries (skip the vision/audio encoder), keyed by
+    a single frame's content hash;
+  * per-media-set **cross-KV** entries (skip the per-layer xk/xv projection
+    of the context during prefill), keyed by the digest of the frame-hash
+    list — videos with shared frames share embedding entries even when the
+    set digest differs (paper §4.2 video caching).
+
+Eviction: byte-budget LRU (default 512 MB, paper §3.3).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lru import LRUCache
+
+
+def content_hash(pixels: np.ndarray) -> str:
+    """SHA-256 over decoded, canonicalised pixel values (format-independent)."""
+    arr = np.ascontiguousarray(pixels)
+    if arr.dtype != np.uint8:
+        arr = np.clip(arr, 0.0, 1.0) if arr.dtype.kind == "f" else arr
+        arr = (arr * 255).astype(np.uint8) if arr.dtype.kind == "f" \
+            else arr.astype(np.uint8)
+    m = hashlib.sha256()
+    m.update(str(arr.shape).encode())
+    m.update(arr.tobytes())
+    return m.hexdigest()
+
+
+def media_set_digest(frame_hashes: Sequence[str]) -> str:
+    m = hashlib.sha256(b"media-set")
+    for h in frame_hashes:
+        m.update(bytes.fromhex(h))
+    return m.hexdigest()
+
+
+@dataclass
+class EmbeddingEntry:
+    embeddings: Any                 # [T_frame, De] precomputed frame embedding
+    nbytes: int
+
+
+@dataclass
+class CrossKVEntry:
+    xkv: Any                        # per-layer {'xk','xv'} pytree (batch=1)
+    num_tokens: int
+    nbytes: int
+
+
+class ContentCache:
+    def __init__(self, max_bytes: int = 512 * 1024 * 1024, *,
+                 cache_embeddings: bool = True, cache_kv: bool = True):
+        self._lru = LRUCache(max_bytes=max_bytes)
+        self.cache_embeddings = cache_embeddings
+        self.cache_kv = cache_kv
+
+    @property
+    def stats(self):
+        return self._lru.stats
+
+    @property
+    def nbytes(self) -> int:
+        return self._lru.nbytes
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # -- per-frame embeddings ------------------------------------------- #
+    def get_embedding(self, frame_hash: str) -> Optional[EmbeddingEntry]:
+        if not self.cache_embeddings:
+            return None
+        val = self._lru.get("emb:" + frame_hash)
+        return val
+
+    def put_embedding(self, frame_hash: str, entry: EmbeddingEntry) -> None:
+        if self.cache_embeddings:
+            self._lru.put("emb:" + frame_hash, entry, entry.nbytes)
+
+    # -- per-media-set cross KV ----------------------------------------- #
+    def get_cross_kv(self, set_digest: str) -> Optional[CrossKVEntry]:
+        if not self.cache_kv:
+            return None
+        return self._lru.get("xkv:" + set_digest)
+
+    def put_cross_kv(self, set_digest: str, entry: CrossKVEntry) -> None:
+        if self.cache_kv:
+            self._lru.put("xkv:" + set_digest, entry, entry.nbytes)

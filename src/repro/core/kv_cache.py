@@ -1,0 +1,107 @@
+"""Slot-based decode cache pool.
+
+TPU adaptation of continuous batching (DESIGN.md §2): the decode batch has a
+*static* shape of ``max_batch`` slots over a pre-allocated cache; requests
+occupy slots, admission fills free slots at step boundaries, retirement frees
+them.  The pool also provides jit'd slot read/insert (used to move prefilled
+KV state / prefix-cache entries in and out of the batch cache with no
+re-materialisation — the unified-memory "zero-copy" analogue: only block
+indices change, plus one device-side dynamic-update per admission)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.model import init_cache
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+@functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))
+def _insert_slot(batch_cache, single_cache, *, slot: int):
+    def ins_prefix(full, one):
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                                   slot, axis=0)
+
+    def ins_block(full, one):
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                                   slot, axis=1)
+
+    out = dict(batch_cache)
+    out["prefix"] = [jax.tree.map(ins_prefix, bp, sp)
+                     for bp, sp in zip(batch_cache["prefix"],
+                                       single_cache["prefix"])]
+    if batch_cache.get("block") is not None:
+        out["block"] = jax.tree.map(ins_block, batch_cache["block"],
+                                    single_cache["block"])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("slot",))
+def _read_slot(batch_cache, *, slot: int):
+    def rd_prefix(full):
+        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=0)
+
+    def rd_block(full):
+        return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1)
+
+    out = {"prefix": [jax.tree.map(rd_prefix, bp)
+                      for bp in batch_cache["prefix"]]}
+    out["block"] = (jax.tree.map(rd_block, batch_cache["block"])
+                    if batch_cache.get("block") is not None else None)
+    return out
+
+
+class SlotKVPool:
+    """Fixed-capacity decode cache with slot allocation."""
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, cache_len: int, *,
+                 ctx_len: int = 0, dtype=None):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.ctx_len = ctx_len
+        self.cache = init_cache(cfg, max_batch, cache_len, ctx_len=ctx_len,
+                                dtype=dtype)
+        self._free: List[int] = list(range(max_batch))[::-1]
+        self._used: Set[int] = set()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def allocate(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        assert slot in self._used, f"double free of slot {slot}"
+        self._used.remove(slot)
+        self._free.append(slot)
+
+    # ------------------------------------------------------------------ #
+    def insert(self, slot: int, single_cache) -> None:
+        """Install a batch=1 cache (from prefill or a cache hit) into a slot."""
+        self.cache = _insert_slot(self.cache, single_cache, slot=slot)
+
+    def read(self, slot: int):
+        """Extract a slot's cache as a batch=1 pytree (for prefix caching)."""
+        return _read_slot(self.cache, slot=slot)
+
+    def single_cache_zeros(self):
+        return init_cache(self.cfg, 1, self.cache_len, ctx_len=self.ctx_len,
+                          dtype=None if self.cfg.dtype is None else self.cfg.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self.cache)

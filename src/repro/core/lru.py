@@ -1,0 +1,84 @@
+"""Byte-budget LRU store (paper §3.3 Memory Management, default 512 MB).
+
+Keys are content hashes; values are arbitrary objects with a caller-supplied
+byte size.  Eviction is strict LRU on *access* order.  Thread-unsafe by
+design (the engine is single-threaded per step, like the paper's)."""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional, Tuple
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    bytes_evicted: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class LRUCache:
+    def __init__(self, max_bytes: int = 512 * 1024 * 1024,
+                 on_evict: Optional[Callable[[str, Any], None]] = None):
+        self.max_bytes = max_bytes
+        self._store: "OrderedDict[str, Tuple[Any, int]]" = OrderedDict()
+        self._bytes = 0
+        self._on_evict = on_evict
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._store
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, key: str) -> Optional[Any]:
+        if key not in self._store:
+            self.stats.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.stats.hits += 1
+        return self._store[key][0]
+
+    def peek(self, key: str) -> Optional[Any]:
+        """Get without touching LRU order or stats."""
+        entry = self._store.get(key)
+        return entry[0] if entry else None
+
+    def put(self, key: str, value: Any, nbytes: int) -> None:
+        if key in self._store:
+            _, old = self._store.pop(key)
+            self._bytes -= old
+        if nbytes > self.max_bytes:
+            return                               # would never fit; skip
+        self._store[key] = (value, nbytes)
+        self._bytes += nbytes
+        self.stats.insertions += 1
+        self._evict_to_budget()
+
+    def _evict_to_budget(self) -> None:
+        while self._bytes > self.max_bytes and self._store:
+            key, (value, nbytes) = self._store.popitem(last=False)
+            self._bytes -= nbytes
+            self.stats.evictions += 1
+            self.stats.bytes_evicted += nbytes
+            if self._on_evict:
+                self._on_evict(key, value)
+
+    def keys(self) -> Iterator[str]:
+        return iter(self._store.keys())
+
+    def clear(self) -> None:
+        self._store.clear()
+        self._bytes = 0

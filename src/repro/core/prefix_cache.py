@@ -1,0 +1,79 @@
+"""Text prefix cache — paper Algorithm 2, plus a block-aligned production mode.
+
+The paper hashes every prefix of the prompt (SHA-256) and walks from the
+longest down (O(n) hashes per lookup, O(n^2) bytes hashed).  We implement
+that *faithful* variant (``block_size=1``) and a block-aligned hash-chain
+variant (``block_size=16``, default):  ``h_i = H(h_{i-1} || block_i)`` — one
+chain computation per lookup/insert, cache granularity of one block.  The
+chain construction makes equal prefixes collide by construction regardless
+of what follows (RadixAttention-style), and is our beyond-paper optimization
+for long prompts (benchmarked in EXPERIMENTS.md §Perf).
+
+Values are opaque to this module (the engine stores a (cache-pytree, length)
+pair); eviction is byte-budget LRU.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.core.lru import LRUCache
+
+
+def _h(prev: bytes, chunk: Sequence[int]) -> bytes:
+    m = hashlib.sha256(prev)
+    m.update(b",".join(str(t).encode() for t in chunk))
+    return m.digest()
+
+
+class TextPrefixCache:
+    def __init__(self, block_size: int = 16,
+                 max_bytes: int = 512 * 1024 * 1024):
+        assert block_size >= 1
+        self.block_size = block_size
+        self._lru = LRUCache(max_bytes=max_bytes)
+
+    @property
+    def stats(self):
+        return self._lru.stats
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # ------------------------------------------------------------------ #
+    def _chain(self, tokens: Sequence[int], salt: bytes) -> List[bytes]:
+        """Hash-chain digests for every block-aligned prefix (ascending)."""
+        bs = self.block_size
+        out: List[bytes] = []
+        prev = hashlib.sha256(b"prefix:" + salt).digest()
+        for i in range(0, len(tokens) - len(tokens) % bs, bs):
+            prev = _h(prev, tokens[i:i + bs])
+            out.append(prev)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def lookup(self, tokens: Sequence[int], *, salt: bytes = b"",
+               max_len: Optional[int] = None) -> Tuple[Optional[Any], int]:
+        """Longest cached block-aligned prefix of ``tokens``.
+
+        ``max_len`` caps the usable match (the engine passes len(prompt)-1 so
+        a full hit still leaves one token to produce first-step logits).
+        Returns (value, matched_token_count) or (None, 0).
+        """
+        limit = len(tokens) if max_len is None else min(max_len, len(tokens))
+        chain = self._chain(tokens[:limit], salt)
+        for nblocks in range(len(chain), 0, -1):            # longest first
+            val = self._lru.get(chain[nblocks - 1].hex())
+            if val is not None:
+                return val, nblocks * self.block_size
+        return None, 0
+
+    def insert(self, tokens: Sequence[int], value: Any, nbytes: int, *,
+               salt: bytes = b"") -> int:
+        """Cache ``value`` under the longest block-aligned prefix of
+        ``tokens``.  Returns the cached prefix length (0 if too short)."""
+        chain = self._chain(tokens, salt)
+        if not chain:
+            return 0
+        self._lru.put(chain[-1].hex(), value, nbytes)
+        return len(chain) * self.block_size

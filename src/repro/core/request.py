@@ -1,0 +1,74 @@
+"""Request / sequence-state types shared by the scheduler and engine."""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, List, Optional
+
+_req_counter = itertools.count()
+
+
+class FinishReason(str, Enum):
+    STOP = "stop"            # EOS sampled
+    LENGTH = "length"        # max_tokens reached
+    ABORT = "abort"
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = off
+    top_p: float = 1.0                # 1 = off
+    max_tokens: int = 64
+    stop_token_ids: tuple = ()
+    seed: Optional[int] = None
+
+
+@dataclass
+class Request:
+    prompt_tokens: List[int]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    # multimodal inputs: list of image/audio/video payloads in any supported
+    # format (ndarray | {'base64': ...} | {'url': ...}); see serving/media.py
+    images: List[Any] = field(default_factory=list)
+    video_frames: List[Any] = field(default_factory=list)
+    audio: Optional[Any] = None
+    request_id: int = field(default_factory=lambda: next(_req_counter))
+    arrival_time: float = field(default_factory=time.monotonic)
+
+    # -- filled in by the engine --------------------------------------- #
+    output_tokens: List[int] = field(default_factory=list)
+    finish_reason: Optional[FinishReason] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    prefill_time: Optional[float] = None
+    cached_prefix_len: int = 0        # tokens served from the prefix cache
+    vision_cache_hits: int = 0
+    vision_cache_misses: int = 0
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def is_finished(self) -> bool:
+        return self.finish_reason is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output_tokens)
+
+
+@dataclass
+class StreamEvent:
+    """One emission from the engine: a freshly decoded token (or final)."""
+    request_id: int
+    token: Optional[int]
+    text: str = ""
+    finished: bool = False
+    finish_reason: Optional[FinishReason] = None

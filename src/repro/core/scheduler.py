@@ -1,0 +1,68 @@
+"""Continuous batching scheduler — paper Algorithm 1, slot-based for TPU.
+
+The paper's loop:  admit pending requests while |B| < M at token boundaries;
+generate one token for every active request; retire completed requests
+immediately.  On TPU the batch is a fixed set of ``max_batch`` slots (static
+shapes — DESIGN.md §2); admission binds a request to a free slot, retirement
+frees it.  The scheduler owns request bookkeeping only — the engine owns the
+compiled step functions and cache pool."""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.request import Request
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    retired: int = 0
+    steps: int = 0
+    tokens_generated: int = 0
+    peak_batch: int = 0
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.pending: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}       # slot -> request
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------------ #
+    def add(self, request: Request) -> None:
+        self.pending.append(request)
+
+    def admit(self, free_slots: List[int]) -> List[Tuple[int, Request]]:
+        """Alg.1 lines 3-6: fill free slots from the pending queue (called at
+        a token boundary, before the next generation step)."""
+        admitted = []
+        for slot in free_slots:
+            if not self.pending or len(self.active) >= self.max_batch:
+                break
+            req = self.pending.popleft()
+            self.active[slot] = req
+            admitted.append((slot, req))
+            self.stats.admitted += 1
+        self.stats.peak_batch = max(self.stats.peak_batch, len(self.active))
+        return admitted
+
+    def retire(self, slot: int) -> Request:
+        """Alg.1 lines 12-16: remove a completed request immediately."""
+        req = self.active.pop(slot)
+        self.stats.retired += 1
+        return req
+
+    # ------------------------------------------------------------------ #
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    def active_slots(self) -> List[int]:
+        return sorted(self.active.keys())

@@ -1,0 +1,58 @@
+"""UTF-8-safe incremental detokenisation (paper §3.2 Streaming).
+
+Byte-level tokens can split multi-byte UTF-8 sequences across steps; the
+paper emphasises emitting only complete code points.  ``StreamDecoder`` holds
+back incomplete trailing sequences and emits them once completed."""
+from __future__ import annotations
+
+from typing import List
+
+
+def _incomplete_suffix_len(buf: bytes) -> int:
+    """Number of trailing bytes that form an incomplete UTF-8 sequence."""
+    n = len(buf)
+    for back in range(1, min(4, n) + 1):
+        b = buf[n - back]
+        if b < 0x80:                    # ascii — complete
+            return 0 if back == 1 else 0
+        if b >= 0xC0:                   # leader byte
+            need = 2 if b < 0xE0 else 3 if b < 0xF0 else 4
+            return back if back < need else 0
+        # continuation byte: keep looking backwards
+    return 0
+
+
+class StreamDecoder:
+    """Incremental bytes → str decoder that never splits a code point."""
+
+    def __init__(self) -> None:
+        self._pending = b""
+
+    def push(self, data: bytes) -> str:
+        buf = self._pending + data
+        keep = _incomplete_suffix_len(buf)
+        emit, self._pending = (buf[:-keep], buf[-keep:]) if keep else (buf, b"")
+        return emit.decode("utf-8", errors="replace")
+
+    def flush(self) -> str:
+        out = self._pending.decode("utf-8", errors="replace")
+        self._pending = b""
+        return out
+
+
+class TokenStreamDecoder:
+    """Per-request token → text streamer on top of a byte-level tokenizer."""
+
+    def __init__(self, tokenizer) -> None:
+        self._tok = tokenizer
+        self._dec = StreamDecoder()
+
+    def push_token(self, token: int) -> str:
+        data = self._tok.token_bytes(token)
+        return self._dec.push(data)
+
+    def push_tokens(self, tokens: List[int]) -> str:
+        return "".join(self.push_token(t) for t in tokens)
+
+    def flush(self) -> str:
+        return self._dec.flush()

@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    batch_sharding,
+    cache_shardings,
+    constrain,
+    current_mesh,
+    default_rules,
+    param_shardings,
+    replicated,
+    use_sharding,
+)

@@ -1,0 +1,263 @@
+"""Logical-axis sharding: model code names *logical* axes; a rules table maps
+them to mesh axes.  With no active mesh every helper is a no-op, so the same
+model code runs single-device (tests, benchmarks) and multi-pod (dry-run,
+launcher) unchanged.
+
+Baseline rules (single pod, mesh ('data','model')):
+    batch    -> data            activations' batch dim
+    tp       -> model           tensor-parallel dim (heads / ffn / vocab-out)
+    fsdp     -> data | None     weight-shard dim (ZeRO-3 style), on for >=30B
+    kv_seq   -> model           decode KV cache sequence dim (GQA kv_heads can
+                                be < TP degree, so we shard the *sequence* —
+                                DESIGN.md §4)
+    expert   -> None            expert dim of stacked expert weights (baseline
+                                replicates over it; the a2a hillclimb shards it)
+
+Multi-pod prepends 'pod' to the batch rule; long_500k (batch=1) re-points
+batch->None and kv_seq->(pod,data,model).  See launch/mesh.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+AxisRules = Dict[str, Axis]
+
+_STATE = threading.local()
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = False,
+                  batch_axes: Optional[Tuple[str, ...]] = None,
+                  kv_seq_axes: Optional[Tuple[str, ...]] = None,
+                  moe_shard: str = "fsdp",
+                  layout: str = "dp") -> AxisRules:
+    """moe_shard: 'fsdp' (baseline — expert weights ZeRO-sharded over data,
+    re-gathered at use) or '2d' (expert hidden dim sharded over data x model:
+    fully local expert compute, partial-sum all-reduce on the down-proj —
+    the §Perf a2a-style hillclimb).
+
+    layout: 'dp' (baseline — batch over data, weights FSDP+TP) or '2dtp'
+    (inference-only: 256-way tensor parallelism over (data, model), batch
+    replicated, KV cache still batch-sharded — kills decode weight
+    re-gathers)."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    if batch_axes is None:
+        batch_axes = data_axes
+    if kv_seq_axes is None:
+        kv_seq_axes = ("model",)
+    fsdp_axis = "data" if fsdp and "data" in names else None
+    rules = {
+        "batch": batch_axes or None,
+        "tp": "model",
+        "fsdp": fsdp_axis,
+        "kv_seq": kv_seq_axes,
+        "kv_batch": batch_axes or None,
+        "expert": None,
+        "e_in": fsdp_axis,
+        "e_out": "model",
+        "seq": None,
+        "vocab": "model",
+    }
+    if moe_shard == "2d":
+        rules["e_in"] = None
+        rules["e_out"] = tuple(a for a in ("data", "model") if a in names)
+    elif moe_shard == "ep":
+        # true expert parallelism: experts over the data axis (token dispatch
+        # becomes an all-to-all; expert weights and their grads stay fully
+        # local to the owning shard).  Needs num_experts % data == 0 —
+        # sanitize_spec silently degrades to replicated otherwise.
+        rules["expert"] = "data"
+        rules["e_in"] = None
+        rules["e_out"] = "model"
+    if layout == "2dtp":
+        tp2 = tuple(a for a in ("data", "model") if a in names)
+        rules.update({
+            "batch": None,
+            "tp": tp2,
+            "fsdp": None,
+            "vocab": tp2,
+            "kv_batch": ("data",) if "data" in names else None,
+            "e_in": None,
+            "e_out": tp2 if moe_shard == "2d" else "model",
+        })
+    return rules
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: AxisRules):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_STATE, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _resolve(spec: Tuple[Optional[str], ...], rules: AxisRules) -> P:
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        else:
+            out.append(rules.get(ax, None))
+    return P(*out)
+
+
+def _axis_size(mesh: Mesh, axes: Axis) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Make a spec legal for this (shape, mesh):
+    * drop mesh axes from dims they don't divide (XLA rejects uneven
+      shardings given explicitly — e.g. vocab 50280 on a 16-way axis);
+    * drop mesh axes already used by an earlier dim (a mesh axis may map to
+      at most one positional dimension) — earlier dims win, so e.g. a
+      capacity dim over 'data' beats a 2d-sharded hidden dim reusing it."""
+    out = []
+    used = set()
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is not None:
+            tup = (axes,) if isinstance(axes, str) else tuple(axes)
+            tup = tuple(a for a in tup if a not in used)
+            axes = (None if not tup
+                    else tup[0] if len(tup) == 1 else tup)
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None
+        if axes is not None:
+            used.update((axes,) if isinstance(axes, str) else axes)
+        out.append(axes)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint given logical axis names
+    (one per dim; None = unconstrained).  No-op without an active mesh.
+    Specs are sanitised against the value's shape (divisibility and
+    duplicate-axis legality)."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = sanitize_spec(_resolve(tuple(logical), rules), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------- #
+# parameter shardings (path-based)
+# --------------------------------------------------------------------------- #
+# leaf-name -> logical spec for the *trailing* dims (leading stack dims of
+# grouped layers get None prepended automatically).
+_PARAM_TABLE: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention / mlp projections [D, out] or [out, D]
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # embeddings: V over fsdp only — TP-sharding D trips a GSPMD gather
+    # partitioner bug at small per-shard batch (§Perf it.4); the table is
+    # small next to the layer stack, so D stays unsharded.
+    "embed": ("fsdp", None),
+    "lm_head": ("fsdp", "vocab"),
+    # MoE: stacked expert weights [E, D, F] / [E, F, D]
+    "we_gate": ("expert", "e_in", "e_out"),
+    "we_up": ("expert", "e_in", "e_out"),
+    "we_down": ("expert", "e_out", "e_in"),
+    "router": (None, None),
+    # SSM
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "a_log": ("tp",),
+    "d_skip": ("tp",),
+    "dt_bias": ("tp",),
+    "ssm_norm": ("tp",),
+    # VLM / audio frontends
+    "vision_proj": (None, "fsdp"),
+    "audio_proj": (None, "fsdp"),
+    "xgate_attn": (),
+    "xgate_ffn": (),
+    # decode-cache leaves (cache_shardings reuses the same table)
+    "k": ("kv_batch", "kv_seq", None, None),
+    "v": ("kv_batch", "kv_seq", None, None),
+    "xk": ("kv_batch", None, None, None),
+    "xv": ("kv_batch", None, None, None),
+    "conv": ("kv_batch", None, "tp"),
+    "state": ("kv_batch", "tp", None, None),
+}
+_REPLICATED = ("scale", "bias", "norm")  # rmsnorm weights etc.
+
+
+def _spec_for_leaf(path: Tuple[Any, ...], leaf: jax.Array,
+                   rules: AxisRules) -> P:
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if isinstance(key, str):
+            name = key
+            break
+    if name is None:
+        return P()
+    base = _PARAM_TABLE.get(name)
+    if base is None:
+        base = () if any(t in name for t in _REPLICATED) else ()
+    # prepend None for any leading stack dims (grouped layers, conv width, ...)
+    extra = leaf.ndim - len(base)
+    spec = (None,) * max(extra, 0) + base[max(-extra, 0):]
+    return _resolve(spec, rules)
+
+
+def _spec_for_leaf_safe(path, leaf, rules: AxisRules, mesh: Mesh) -> P:
+    return sanitize_spec(_spec_for_leaf(path, leaf, rules), leaf.shape, mesh)
+
+
+def param_shardings(params: Any, mesh: Mesh, rules: AxisRules) -> Any:
+    """A pytree of NamedShardings matching ``params`` (works on
+    ShapeDtypeStructs too — used by the dry-run)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [NamedSharding(mesh, _spec_for_leaf_safe(p, l, rules, mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# cache_shardings is param_shardings applied to a decode-cache pytree — the
+# table above carries the cache leaf names ('k','v','xk','xv','conv','state').
+cache_shardings = param_shardings
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(tree: Any, mesh: Mesh, rules: AxisRules) -> Any:
+    """Shard dim 0 of every leaf by the 'batch' rule, rest replicated."""
+    def f(x):
+        spec = (("batch",) + (None,) * (x.ndim - 1))
+        return NamedSharding(mesh, sanitize_spec(_resolve(spec, rules),
+                                                 x.shape, mesh))
+    return jax.tree.map(f, tree)

@@ -1,0 +1,103 @@
+"""Single-token GQA decode attention over a long KV cache — Pallas TPU kernel.
+
+The decode hot path is memory-bound: it streams the whole KV cache once per
+step.  The kernel tiles the cache sequence dimension into VMEM blocks
+(grid-innermost, sequential), keeps the per-kv-head query group resident in
+VMEM, and carries flash (m, l, acc) statistics in scratch.  A validity mask
+supports both plain length-masking (cache longer than the sequence) and ring
+buffers (sliding-window caches where slot liveness is non-contiguous).
+
+Validated against ``ref.decode_attention_ref`` with interpret=True (CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale, nk, bk, g):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)              # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bk, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)              # [bk, D]
+    live = valid_ref[0, :]                                 # [bk] bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(live[None, :], s, NEG_INF)               # [G, bk]
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(live[None, :], p, 0.0)
+    l_cur = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,                   # [B, H, D]
+    k_cache: jax.Array,             # [B, S, Hkv, D]
+    v_cache: jax.Array,             # [B, S, Hkv, D]
+    kv_valid: jax.Array,            # [B, S] bool
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    bk = min(block_k, max(s, 8))
+    s_p = -(-s // bk) * bk
+    if s_p != s:
+        pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, s_p - s)))
+    nk = s_p // bk
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / (d ** 0.5),
+                               nk=nk, bk=bk, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h_, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, kv_valid)
+    return out.reshape(b, h, d)

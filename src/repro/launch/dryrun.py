@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove that every (architecture × input-shape × mesh)
+combination lowers, compiles, and fits — without hardware.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialisation, and the production meshes need 512 placeholder host devices.
+Nothing else in the repo sets this flag (smoke tests and benchmarks see the
+real single device).
+
+Per combo this driver:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. resolves the sharding rules (FSDP for >=4B-param models; long_500k
+     re-points batch/kv_seq — see launch/specs.py),
+  3. jit-lowers the step function against ShapeDtypeStruct inputs with
+     explicit in/out shardings, compiles it,
+  4. extracts ``memory_analysis()`` / ``cost_analysis()`` and sums the
+     operand bytes of every collective in the compiled HLO,
+  5. derives the three roofline terms (compute / memory / collective — see
+     EXPERIMENTS.md §Roofline) against TPU v5e constants, and
+  6. writes one JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind over the compiled module."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shapes)
+    return out
+
+
+def run_combo(arch: str, shape: str, *, multi_pod: bool = False,
+              attn_schedule: str = "full", fsdp=None, unroll: bool = False,
+              moe_shard: str = "fsdp", layout: str = "dp",
+              microbatches: int = 1, microbatch_unroll: bool = False,
+              save_dir: str = "experiments/dryrun", tag: str = "") -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.distributed import use_sharding
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_step_spec, shape_rules, default_fsdp
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = shape_rules(cfg, shape, mesh, fsdp=fsdp,
+                        moe_shard=moe_shard, layout=layout)
+    spec = build_step_spec(cfg, shape, attn_schedule=attn_schedule,
+                           unroll_scan=unroll, microbatches=microbatches,
+                           microbatch_unroll=microbatch_unroll)
+
+    with use_sharding(mesh, rules):
+        jitted = jax.jit(spec.fn,
+                         in_shardings=spec.in_shardings(mesh, rules),
+                         out_shardings=(spec.out_shardings(mesh, rules)
+                                        if spec.out_shardings else None),
+                         donate_argnums=spec.donate_argnums)
+        lowered = jitted.lower(*spec.args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    coll_bytes = sum(coll.values())
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    # cost_analysis is per-device (post-SPMD module); the roofline terms are
+    # therefore per-device too — multiply by 1 (already /chips).
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+
+    model_flops = 6 * cfg.active_param_count()
+    if shape in ("train_4k",):
+        tokens = 4096 * 256
+        model_flops *= tokens * 3          # fwd + bwd(2x)
+    elif shape == "prefill_32k":
+        tokens = 32768 * 32
+        model_flops *= tokens
+    else:
+        tokens = {"decode_32k": 128, "long_500k": 1}[shape]
+        model_flops *= tokens
+    useful_frac = model_flops / max(flops * chips, 1.0)
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(chips),
+        "step": spec.name,
+        "attn_schedule": attn_schedule,
+        "unrolled": unroll,
+        "moe_shard": moe_shard,
+        "layout": layout,
+        "microbatches": microbatches,
+        "fsdp": bool(rules.get("fsdp")),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "useful_flop_frac": useful_frac,
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "notes": spec.notes,
+        "compile_seconds": time.time() - t0,
+        "ok": True,
+    }
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        suffix = ("_mp" if multi_pod else "") + (f"_{tag}" if tag else "")
+        path = os.path.join(save_dir, f"{arch}_{shape}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+ALL_ARCHS = [
+    "codeqwen1.5-7b", "deepseek-moe-16b", "yi-34b", "grok-1-314b",
+    "llama-3.2-vision-90b", "seamless-m4t-medium", "mamba2-780m",
+    "qwen2-0.5b", "glm4-9b", "jamba-1.5-large-398b",
+]
+ALL_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=ALL_SHAPES)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-schedule", default="full",
+                    choices=["full", "causal"])
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--unroll", action="store_true",
+                    help="python-loop the layer stack: exact cost_analysis "
+                         "(XLA counts while-loop bodies once)")
+    ap.add_argument("--moe-shard", default="fsdp", choices=["fsdp", "2d", "ep"])
+    ap.add_argument("--layout", default="dp", choices=["dp", "2dtp"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--microbatch-unroll", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--save-dir", default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    combos = ([(a, s) for a in ALL_ARCHS for s in ALL_SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    fsdp = None if args.fsdp is None else args.fsdp == "on"
+
+    failures = 0
+    for arch, shape in combos:
+        suffix = ("_mp" if args.multi_pod else "") \
+            + (f"_{args.tag}" if args.tag else "")
+        path = os.path.join(args.save_dir, f"{arch}_{shape}{suffix}.json")
+        if args.skip_done and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    print(f"[skip] {arch} x {shape}")
+                    continue
+        try:
+            rec = run_combo(arch, shape, multi_pod=args.multi_pod,
+                            attn_schedule=args.attn_schedule, fsdp=fsdp,
+                            unroll=args.unroll, moe_shard=args.moe_shard,
+                            layout=args.layout, microbatches=args.microbatch,
+                            microbatch_unroll=args.microbatch_unroll,
+                            save_dir=args.save_dir, tag=args.tag)
+            print(f"[ok]   {arch:24s} {shape:12s} mesh={rec['mesh']} "
+                  f"dom={rec['dominant']:10s} "
+                  f"t=(c {rec['t_compute_s']:.2e}, m {rec['t_memory_s']:.2e}, "
+                  f"x {rec['t_collective_s']:.2e})s "
+                  f"compile={rec['compile_seconds']:.0f}s", flush=True)
+        except Exception as e:                                  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {arch} x {shape}: {e}", flush=True)
+            traceback.print_exc()
+            if args.save_dir:
+                os.makedirs(args.save_dir, exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "ok": False,
+                               "error": str(e)}, f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

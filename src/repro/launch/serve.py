@@ -1,0 +1,49 @@
+"""Serving launcher: start the OpenAI-compatible server over the continuous
+batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b-toy \\
+      --port 8177 --max-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.serving.api import OpenAIServer
+from repro.serving.server import ApiServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b-toy")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=512)
+    ap.add_argument("--port", type=int, default=8177)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--no-content-cache", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    print(f"loading {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
+    engine = InferenceEngine(
+        cfg, max_batch=args.max_batch, cache_len=args.cache_len,
+        seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
+        enable_content_cache=not args.no_content_cache)
+    server = ApiServer(OpenAIServer(engine, cfg.name), port=args.port)
+    server.start()
+    print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        server.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Training launcher: real steps on local devices, or ``--dry-run`` for the
+production mesh (delegates to launch/dryrun.py).
+
+Example (CPU, toy config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \\
+      --steps 20 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import BigramDataPipeline
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced (CPU-sized) config variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    data = BigramDataPipeline(cfg.vocab_size, args.seq, args.batch,
+                              seed=args.seed)
+    state = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False),
+                      donate_argnums=(0,))
+
+    def with_media(b):
+        out = {k: jax.numpy.asarray(v) for k, v in b.items()}
+        if cfg.vision is not None:
+            out["image_embeds"] = jax.numpy.zeros(
+                (args.batch, cfg.vision.num_image_tokens,
+                 cfg.vision.embed_dim), "float32")
+        if cfg.audio is not None:
+            out["audio_frames"] = jax.numpy.zeros(
+                (args.batch, cfg.audio.num_frames, cfg.audio.embed_dim),
+                "float32")
+        return out
+
+    t0 = time.time()
+    first_loss = last_loss = None
+    for step, batch in zip(range(args.steps), data):
+        state, metrics = step_fn(state, with_media(batch))
+        loss = float(metrics["loss"])
+        first_loss = loss if first_loss is None else first_loss
+        last_loss = loss
+        if step % args.log_every == 0 or step == args.steps - 1:
+            tput = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lm {float(metrics['lm_loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"{tput:,.0f} tok/s", flush=True)
+
+    print(f"loss: {first_loss:.4f} -> {last_loss:.4f} "
+          f"({'improved' if last_loss < first_loss else 'NOT improved'})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

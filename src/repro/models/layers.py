@@ -1,0 +1,485 @@
+"""Layer library: every block the 10 assigned architectures need.
+
+Pure functions over pytree params (no framework dependency): each block has an
+``init_*`` returning a param dict and an ``apply_*`` running one of three
+modes:
+
+  * ``train``   — full sequence, no cache IO
+  * ``prefill`` — full sequence, writes a decode cache
+  * ``decode``  — one token per slot, per-slot positions (continuous batching:
+                  every slot sits at a different depth), ring-buffer writes
+                  when the cache is a sliding window.
+
+Sharding is expressed through :func:`repro.distributed.constrain` logical
+axes; with no mesh active it's a no-op.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.distributed import constrain
+from repro.kernels import ops
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# primitives
+# --------------------------------------------------------------------------- #
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_gated(x: jax.Array, z: jax.Array, w: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Mamba-2 gated norm: RMSNorm(x * silu(z))."""
+    return rmsnorm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), w, eps)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (per-token absolute positions)."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs                  # [B,S,half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]     # [B,S,1,half]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (SwiGLU)
+# --------------------------------------------------------------------------- #
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, "batch", *((None,) * (h.ndim - 2)), "tp")
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------- #
+# self-attention (GQA, RoPE, optional sliding window)
+# --------------------------------------------------------------------------- #
+def init_attn(key, cfg: ModelConfig, *, cross: bool = False,
+              kv_dim: Optional[int] = None) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kdim = kv_dim if kv_dim is not None else d
+    keys = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "ln": jnp.ones((d,), dt),
+        "wq": _dense_init(keys[0], (d, h * hd), dt),
+        "wk": _dense_init(keys[1], (kdim, hkv * hd), dt),
+        "wv": _dense_init(keys[2], (kdim, hkv * hd), dt),
+        "wo": _dense_init(keys[3], (h * hd, d), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, ctx: jax.Array, cfg: ModelConfig):
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = ctx @ p["wk"] + (p.get("bk", 0.0))
+    v = ctx @ p["wv"] + (p.get("bv", 0.0))
+    q = constrain(q, "batch", None, "tp").reshape(b, -1, h, hd)
+    k = constrain(k, "batch", None, "tp").reshape(b, -1, hkv, hd)
+    v = constrain(v, "batch", None, "tp").reshape(b, -1, hkv, hd)
+    return q, k, v
+
+
+def apply_self_attn(
+    p: Params,
+    x: jax.Array,                    # [B, S, D]
+    *,
+    cfg: ModelConfig,
+    mode: str,
+    positions: jax.Array,            # [B, S] (decode: S=1)
+    cache: Optional[Params] = None,  # {'k','v'}: [B, Sc, Hkv, hd]
+    window: int = 0,
+    attn_schedule: str = "full",
+    resume: bool = False,            # prefill continues from cached tokens
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, _ = x.shape
+    h = rmsnorm(x, p["ln"], cfg.rms_eps)
+    q, k, v = _qkv(p, h, h, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "prefill" and resume:
+        # continuation after a prefix-cache hit: append new KV to the cache,
+        # then attend over the whole cache with absolute query positions —
+        # new tokens see the cached prefix (no ring wrap in engine caches).
+        sc = cache["k"].shape[1]
+        slots = (positions[0] % sc).astype(jnp.int32)                   # [S]
+        kc = cache["k"].at[:, slots].set(k)
+        vc = cache["v"].at[:, slots].set(v)
+        out = ops.flash_attention(q, kc, vc, causal=True, window=window,
+                                  q_positions=positions)
+        out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+        out = constrain(out, "batch", None, "tp")
+        return x + out @ p["wo"], {"k": kc, "v": vc}
+
+    if mode == "decode":
+        kc, vc = cache["k"], cache["v"]
+        sc = kc.shape[1]
+        slot = (positions[:, 0] % sc).astype(jnp.int32)                 # [B]
+        bidx = jnp.arange(b)
+        kc = kc.at[bidx, slot].set(k[:, 0])
+        vc = vc.at[bidx, slot].set(v[:, 0])
+        kc = constrain(kc, "kv_batch", "kv_seq", None, None)
+        vc = constrain(vc, "kv_batch", "kv_seq", None, None)
+        pos = positions[:, 0]
+        idx = jnp.arange(sc)[None, :]
+        valid = (idx <= pos[:, None]) | (pos[:, None] >= sc)            # ring
+        out = ops.decode_attention(q[:, 0], kc, vc, valid)[:, None]     # [B,1,H,hd]
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  schedule=attn_schedule)
+        new_cache = None
+        if mode == "prefill":
+            sc = cache["k"].shape[1]
+            take = min(s, sc)
+            src_k = k[:, s - take:]
+            src_v = v[:, s - take:]
+            slots = ((s - take + jnp.arange(take)) % sc).astype(jnp.int32)
+            kc = cache["k"].at[:, slots].set(src_k)
+            vc = cache["v"].at[:, slots].set(src_v)
+            kc = constrain(kc, "kv_batch", "kv_seq", None, None)
+            vc = constrain(vc, "kv_batch", "kv_seq", None, None)
+            new_cache = {"k": kc, "v": vc}
+
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = constrain(out, "batch", None, "tp")
+    return x + out @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------------- #
+# cross-attention (VLM image layers; audio enc-dec decoder)
+# --------------------------------------------------------------------------- #
+def init_xattn(key, cfg: ModelConfig, *, gated: bool) -> Params:
+    p = init_attn(key, cfg, cross=True)
+    if gated:
+        p["xgate_attn"] = jnp.zeros((), jnp.dtype(cfg.dtype))
+    return p
+
+
+def apply_cross_attn(
+    p: Params,
+    x: jax.Array,                    # [B, S, D]
+    *,
+    cfg: ModelConfig,
+    mode: str,
+    context: Optional[jax.Array],    # [B, T, D] (prefill/train); None in decode
+    cache: Optional[Params] = None,  # {'xk','xv'}: [B, T, Hkv, hd]
+    gated: bool = False,
+    cross_cached: bool = False,      # content-cache hit: reuse cached xk/xv
+    ctx_valid: Optional[jax.Array] = None,     # [B, T] context liveness
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, _ = x.shape
+    h = rmsnorm(x, p["ln"], cfg.rms_eps)
+    if mode == "prefill" and cross_cached:
+        # Alg.3 cache hit: the per-layer cross KV was restored from the
+        # content cache — skip the projection of the vision/audio context.
+        xk, xv = cache["xk"], cache["xv"]
+        q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+        out = ops.flash_attention(q, xk, xv, causal=False, kv_valid=ctx_valid)
+        new_cache = {"xk": xk, "xv": xv}
+    elif mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+        q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+        valid = (jnp.ones((b, xk.shape[1]), bool) if ctx_valid is None
+                 else ctx_valid)
+        out = ops.decode_attention(q[:, 0], xk, xv, valid)[:, None]
+        new_cache = cache
+    else:
+        q, xk, xv = _qkv(p, h, context, cfg)
+        out = ops.flash_attention(q, xk, xv, causal=False, kv_valid=ctx_valid)
+        new_cache = {"xk": xk, "xv": xv} if mode == "prefill" else None
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = constrain(out, "batch", None, "tp")
+    out = out @ p["wo"]
+    if gated:
+        out = jnp.tanh(p["xgate_attn"].astype(jnp.float32)).astype(out.dtype) * out
+    return x + out, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Mixture of Experts (GShard-style capacity routing)
+# --------------------------------------------------------------------------- #
+def init_moe(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.expert_d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 5)
+    p = {
+        "ln": jnp.ones((d,), dt),
+        "router": _dense_init(keys[0], (d, m.num_experts), jnp.float32),
+        "we_gate": _dense_init(keys[1], (m.num_experts, d, f), dt, fan_in=d),
+        "we_up": _dense_init(keys[2], (m.num_experts, d, f), dt, fan_in=d),
+        "we_down": _dense_init(keys[3], (m.num_experts, f, d), dt, fan_in=f),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(keys[4], d, f * m.num_shared_experts, dt)
+    return p
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_load_balance_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.experts_per_token
+    if m.capacity_factor <= 0:          # no-drop mode (tests / exactness)
+        cap = t * k
+    else:
+        cap = max(8, int(math.ceil(t * k / e * m.capacity_factor)))
+
+    h = rmsnorm(x, p["ln"], cfg.rms_eps)
+    flat = h.reshape(t, d)
+    logits = flat.astype(jnp.float32) @ p["router"]                     # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                                # [T,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(frac * probs.mean(0)) * m.load_balance_coef
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32).reshape(t * k, e)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    my_pos = jnp.sum(pos * onehot, axis=-1)                             # [T*k]
+    expert = idx.reshape(t * k)
+    keep = my_pos < cap
+    slot = jnp.where(keep, expert * cap + my_pos, e * cap)              # drop → trash
+
+    xr = jnp.broadcast_to(flat[:, None], (t, k, d)).reshape(t * k, d)
+    buf = jnp.zeros((e * cap + 1, d), flat.dtype).at[slot].set(xr)
+    hbuf = buf[:-1].reshape(e, cap, d)
+    hbuf = constrain(hbuf, "expert", "batch", None)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hbuf, p["we_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", hbuf, p["we_up"])
+    h2 = constrain(g * u, "expert", "batch", "e_out")
+    o = jnp.einsum("ecf,efd->ecd", h2, p["we_down"])
+    o = constrain(o, "expert", "batch", None)
+    obuf = jnp.concatenate([o.reshape(e * cap, d),
+                            jnp.zeros((1, d), o.dtype)], axis=0)
+    y = obuf[slot] * gates.reshape(t * k, 1).astype(o.dtype)
+    y = y.reshape(t, k, d).sum(axis=1)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], flat)
+    return x + y.reshape(b, s, d), aux
+
+
+# --------------------------------------------------------------------------- #
+# Mamba-2 block (SSD)
+# --------------------------------------------------------------------------- #
+def _ssm_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    nheads = d_in // ssm.head_dim
+    d_conv = d_in + 2 * ssm.ngroups * ssm.state_dim
+    return d_in, nheads, d_conv
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, d_conv = _ssm_dims(cfg)
+    keys = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "in_proj": _dense_init(keys[0], (d, 2 * d_in + 2 * ssm.ngroups
+                                         * ssm.state_dim + nheads), dt),
+        "conv_w": _dense_init(keys[1], (ssm.conv_width, d_conv), dt,
+                              fan_in=ssm.conv_width),
+        "conv_b": jnp.zeros((d_conv,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "ssm_norm": jnp.ones((d_in,), dt),
+        "out_proj": _dense_init(keys[3], (d_in, d), dt),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xbc [B,S,C]; w [W,C]; returns (out, new_state
+    [B, W-1, C] = trailing inputs)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                            # [B,S+W-1,C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def apply_ssm(
+    p: Params,
+    x: jax.Array,                    # [B, S, D]
+    *,
+    cfg: ModelConfig,
+    mode: str,
+    cache: Optional[Params] = None,  # {'conv': [B,W-1,Dc], 'state': [B,H,P,N]}
+    resume: bool = False,            # prefill continues from cached state
+) -> Tuple[jax.Array, Optional[Params]]:
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    d_in, nheads, d_conv = _ssm_dims(cfg)
+    g, n, pdim = ssm.ngroups, ssm.state_dim, ssm.head_dim
+
+    h = rmsnorm(x, p["ln"], cfg.rms_eps)
+    zxbcdt = h @ p["in_proj"]
+    zxbcdt = constrain(zxbcdt, "batch", None, "tp")
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_conv]
+    dt_raw = zxbcdt[..., d_in + d_conv:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    use_state = mode == "decode" or (mode == "prefill" and resume)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 conv_state if use_state else None)
+    x_ssm = xbc[..., :d_in].reshape(b, s, nheads, pdim)
+    b_mat = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    c_mat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+
+    if mode == "decode":
+        init = cache["state"]
+        y, new_state = ops.ssd_decode_step(
+            x_ssm[:, 0], dt[:, 0], a, b_mat[:, 0], c_mat[:, 0], init)
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        chunk = min(ssm.chunk_size, s)
+        init = cache["state"] if (cache is not None and use_state) else None
+        y, final_state = ops.ssd(x_ssm, dt, a, b_mat, c_mat, chunk=chunk,
+                                 init_state=init)
+        new_cache = ({"conv": new_conv, "state": final_state}
+                     if mode == "prefill" else None)
+
+    y = y + (p["d_skip"][None, None, :, None]
+             * x_ssm.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm_gated(y, z, p["ssm_norm"], cfg.rms_eps)
+    y = constrain(y, "batch", None, "tp")
+    return x + y @ p["out_proj"], new_cache
+
+
+# --------------------------------------------------------------------------- #
+# composed layers (one per ModelConfig.layer_kinds entry)
+# --------------------------------------------------------------------------- #
+def init_layer(key, kind: str, cfg: ModelConfig, *, d_ff: Optional[int] = None,
+               has_cross: bool = False) -> Params:
+    keys = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {}
+    if kind in ("attn", "moe"):
+        p["attn"] = init_attn(keys[0], cfg)
+        if has_cross:                          # audio decoder: +cross to encoder
+            p["cross"] = init_xattn(keys[3], cfg, gated=False)
+    if kind == "xattn":
+        p["cross"] = init_xattn(keys[0], cfg, gated=True)
+        p["xgate_ffn"] = jnp.zeros((), dt)
+    if kind.startswith("ssm"):
+        p["ssm"] = init_ssm(keys[0], cfg)
+    if kind.endswith("moe"):
+        p["moe"] = init_moe(keys[1], cfg)
+    elif cfg.d_ff > 0:
+        p["ffn_ln"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = init_mlp(keys[2], cfg.d_model, d_ff or cfg.d_ff, dt)
+    return p
+
+
+def apply_layer(
+    p: Params,
+    kind: str,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    mode: str,
+    positions: jax.Array,
+    cache: Optional[Params],
+    window: int = 0,
+    context: Optional[jax.Array] = None,    # image tokens / encoder output
+    attn_schedule: str = "full",
+    resume: bool = False,
+    cross_cached: bool = False,
+    ctx_valid: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+    if "attn" in p:
+        sub = {k: cache[k] for k in ("k", "v")} if cache else None
+        x, c = apply_self_attn(p["attn"], x, cfg=cfg, mode=mode,
+                               positions=positions, cache=sub, window=window,
+                               attn_schedule=attn_schedule, resume=resume)
+        if c:
+            new_cache.update(c)
+    if "cross" in p and kind != "xattn":    # audio decoder cross-attn
+        sub = {k: cache[k] for k in ("xk", "xv")} if cache else None
+        x, c = apply_cross_attn(p["cross"], x, cfg=cfg, mode=mode,
+                                context=context, cache=sub, gated=False,
+                                cross_cached=cross_cached, ctx_valid=ctx_valid)
+        if c:
+            new_cache.update(c)
+    if kind == "xattn":
+        sub = {k: cache[k] for k in ("xk", "xv")} if cache else None
+        x, c = apply_cross_attn(p["cross"], x, cfg=cfg, mode=mode,
+                                context=context, cache=sub, gated=True,
+                                cross_cached=cross_cached, ctx_valid=ctx_valid)
+        if c:
+            new_cache.update(c)
+    if "ssm" in p:
+        sub = {k: cache[k] for k in ("conv", "state")} if cache else None
+        x, c = apply_ssm(p["ssm"], x, cfg=cfg, mode=mode, cache=sub,
+                         resume=resume)
+        if c:
+            new_cache.update(c)
+    if "moe" in p:
+        x, aux = apply_moe(p["moe"], x, cfg)
+    elif "ffn" in p:
+        h = rmsnorm(x, p["ffn_ln"], cfg.rms_eps)
+        out = apply_mlp(p["ffn"], h)
+        if kind == "xattn":
+            out = jnp.tanh(p["xgate_ffn"].astype(jnp.float32)).astype(out.dtype) * out
+        x = x + out
+    return x, (new_cache or None), aux

@@ -1,0 +1,139 @@
+"""OpenAI-compatible API surface (paper §3.2: drop-in replacement).
+
+In-process implementation of the ``/v1/chat/completions`` contract: the same
+request/response JSON schema (including multimodal ``image_url`` content
+parts and streaming chunks), backed by the continuous-batching engine.  A
+thin stdlib HTTP wrapper (serving/server.py) exposes it on a socket; the
+benchmark/test suite drives this layer directly."""
+from __future__ import annotations
+
+import json
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.serving.engine_loop import EngineLoop
+
+
+def _parse_content(content: Any) -> Dict[str, Any]:
+    """OpenAI content: plain string or a list of typed parts."""
+    text_parts: List[str] = []
+    images: List[Any] = []
+    if isinstance(content, str):
+        text_parts.append(content)
+    else:
+        for part in content:
+            if part.get("type") == "text":
+                text_parts.append(part["text"])
+            elif part.get("type") == "image_url":
+                url = part["image_url"]["url"]
+                if url.startswith("data:"):            # data:...;base64,XXX
+                    images.append({"base64": url.split(",", 1)[1]})
+                else:
+                    images.append({"url": url})
+    return {"text": "".join(text_parts), "images": images}
+
+
+class OpenAIServer:
+    """Engine adapter implementing the chat-completions contract."""
+
+    def __init__(self, engine: InferenceEngine, model_name: str = "repro",
+                 *, threaded: bool = False):
+        self.engine = engine
+        self.model_name = model_name
+        # threaded: a background loop drives Alg.1 so concurrent HTTP
+        # handlers batch together instead of serialising (Fig.2 scenario).
+        self.loop = EngineLoop(engine) if threaded else None
+
+    # ------------------------------------------------------------------ #
+    def _build_request(self, body: Dict[str, Any]) -> Request:
+        tok = self.engine.tokenizer
+        prompt_parts: List[str] = []
+        images: List[Any] = []
+        for msg in body.get("messages", []):
+            parsed = _parse_content(msg.get("content", ""))
+            prompt_parts.append(f"<|{msg['role']}|>{parsed['text']}")
+            images.extend(parsed["images"])
+        prompt = "".join(prompt_parts) + "<|assistant|>"
+        sampling = SamplingParams(
+            temperature=float(body.get("temperature", 0.0)),
+            max_tokens=int(body.get("max_tokens", 64)),
+        )
+        return Request(prompt_tokens=tok.encode(prompt), images=images,
+                       sampling=sampling)
+
+    def _response(self, req: Request) -> Dict[str, Any]:
+        text = self.engine.tokenizer.decode(req.output_tokens)
+        return {
+            "id": f"chatcmpl-{uuid.uuid4().hex[:12]}",
+            "object": "chat.completion",
+            "created": int(time.time()),
+            "model": self.model_name,
+            "choices": [{
+                "index": 0,
+                "message": {"role": "assistant", "content": text},
+                "finish_reason": req.finish_reason.value,
+            }],
+            "usage": {
+                "prompt_tokens": len(req.prompt_tokens),
+                "completion_tokens": req.num_generated,
+                "total_tokens": len(req.prompt_tokens) + req.num_generated,
+            },
+        }
+
+    # ------------------------------------------------------------------ #
+    def chat_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        req = self._build_request(body)
+        if self.loop is not None:
+            self.loop.generate(req)
+        else:
+            self.engine.generate([req])
+        return self._response(req)
+
+    def chat_completion_stream(self, body: Dict[str, Any]
+                               ) -> Iterator[Dict[str, Any]]:
+        """SSE-style chunk dicts (one per emitted token)."""
+        req = self._build_request(body)
+        cid = f"chatcmpl-{uuid.uuid4().hex[:12]}"
+
+        def chunk(ev):
+            return {
+                "id": cid,
+                "object": "chat.completion.chunk",
+                "model": self.model_name,
+                "choices": [{
+                    "index": 0,
+                    "delta": ({"content": ev.text} if ev.text else {}),
+                    "finish_reason": (ev.finish_reason.value
+                                      if ev.finished else None),
+                }],
+            }
+
+        if self.loop is not None:
+            q = self.loop.submit(req)
+            while True:
+                ev = q.get()
+                yield chunk(ev)
+                if ev.finished:
+                    return
+        else:
+            self.engine.add_request(req)
+            while not req.is_finished:
+                for ev in self.engine.step():
+                    if ev.request_id == req.request_id:
+                        yield chunk(ev)
+
+    def batch(self, bodies: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+        """Serve many requests concurrently through continuous batching."""
+        reqs = [self._build_request(b) for b in bodies]
+        if self.loop is not None:
+            qs = [self.loop.submit(r) for r in reqs]
+            for r, q in zip(reqs, qs):
+                while not r.is_finished:
+                    q.get()
+        else:
+            self.engine.generate(reqs)
+        return [self._response(r) for r in reqs]

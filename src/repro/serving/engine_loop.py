@@ -1,0 +1,64 @@
+"""Background engine loop: thread-safe submission in front of the
+single-threaded continuous-batching engine.
+
+HTTP handlers (one thread per connection) submit requests and wait; one
+dedicated loop thread drives ``engine.step()`` — exactly the paper's
+Algorithm 1 outer loop, with admission happening at token boundaries as
+concurrent clients arrive mid-generation."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Optional
+
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, StreamEvent
+
+
+class EngineLoop:
+    def __init__(self, engine: InferenceEngine):
+        self.engine = engine
+        self._cv = threading.Condition()
+        self._queues: Dict[int, "queue.Queue[Optional[StreamEvent]]"] = {}
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> "queue.Queue[Optional[StreamEvent]]":
+        q: "queue.Queue[Optional[StreamEvent]]" = queue.Queue()
+        with self._cv:
+            self._queues[req.request_id] = q
+            self.engine.add_request(req)
+            self._cv.notify()
+        return q
+
+    def generate(self, req: Request) -> Request:
+        q = self.submit(req)
+        while True:
+            ev = q.get()
+            if ev is None or ev.finished:
+                return req
+
+    # ------------------------------------------------------------------ #
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self.engine.scheduler.has_work and not self._stop:
+                    self._cv.wait(timeout=0.5)
+                if self._stop:
+                    return
+            events = self.engine.step()
+            with self._cv:
+                for ev in events:
+                    q = self._queues.get(ev.request_id)
+                    if q is not None:
+                        q.put(ev)
+                        if ev.finished:
+                            del self._queues[ev.request_id]
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5)

@@ -1,0 +1,72 @@
+"""Minimal stdlib HTTP server exposing the OpenAI-compatible API.
+
+``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE) and
+``GET /v1/models``.  Single-threaded handler in front of the continuous
+batching engine; intended for local use and the serving example."""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.serving.api import OpenAIServer
+
+
+def make_handler(api: OpenAIServer):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):                      # quiet
+            pass
+
+        def _send_json(self, obj, code=200):
+            body = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path == "/v1/models":
+                self._send_json({"object": "list", "data": [
+                    {"id": api.model_name, "object": "model"}]})
+            else:
+                self._send_json({"error": "not found"}, 404)
+
+        def do_POST(self):
+            if self.path != "/v1/chat/completions":
+                self._send_json({"error": "not found"}, 404)
+                return
+            length = int(self.headers.get("Content-Length", "0"))
+            body = json.loads(self.rfile.read(length) or b"{}")
+            if body.get("stream"):
+                self.send_response(200)
+                self.send_header("Content-Type", "text/event-stream")
+                self.end_headers()
+                for chunk in api.chat_completion_stream(body):
+                    self.wfile.write(b"data: " + json.dumps(chunk).encode()
+                                     + b"\n\n")
+                self.wfile.write(b"data: [DONE]\n\n")
+            else:
+                self._send_json(api.chat_completion(body))
+
+    return Handler
+
+
+class ApiServer:
+    def __init__(self, api: OpenAIServer, host: str = "127.0.0.1",
+                 port: int = 8177):
+        self._httpd = ThreadingHTTPServer((host, port), make_handler(api))
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._httpd.shutdown()

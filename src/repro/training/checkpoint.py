@@ -1,0 +1,55 @@
+"""Pytree checkpointing: flatten-with-paths -> one .npz + restores exactly.
+
+No external checkpoint libs; path-keyed entries make checkpoints robust to
+pytree-definition reordering and give readable keys for surgery."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    for p, leaf in flat:
+        arrays[_path_str(p)] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, __step__=np.int64(step), **arrays)
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            treedef, [jax.numpy.asarray(a) for a in leaves])
+
+
+def checkpoint_step(path: str) -> int:
+    with np.load(path) as data:
+        return int(data["__step__"])

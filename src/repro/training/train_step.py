@@ -1,0 +1,102 @@
+"""The training step: masked LM cross-entropy (+ MoE aux loss) and an AdamW
+update over donated state.  This is what ``train_4k`` lowers in the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    model = build_model(cfg)
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def loss_fn(params: Any, batch: Dict[str, jax.Array], *, cfg: ModelConfig,
+            attn_schedule: str = "full", remat: bool = True,
+            unroll_scan: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    model = build_model(cfg)
+    kw = {}
+    if cfg.vision is not None:
+        kw["image_embeds"] = batch["image_embeds"]
+    if cfg.audio is not None:
+        kw["audio_frames"] = batch["audio_frames"]
+    out = model.apply(params, batch["tokens"], mode="train", remat=remat,
+                      attn_schedule=attn_schedule, unroll_scan=unroll_scan,
+                      **kw)
+    logits = out.logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    mask = batch["mask"].astype(jnp.float32)
+    lm_loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = lm_loss + out.aux_loss
+    return loss, {"lm_loss": lm_loss, "aux_loss": out.aux_loss}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    *, attn_schedule: str = "full", remat: bool = True,
+                    unroll_scan: bool = False, microbatches: int = 1,
+                    microbatch_unroll: bool = False):
+    """``microbatches`` > 1 enables gradient accumulation: the global batch
+    is split on the batch dim and scanned, bounding live activations to one
+    microbatch (the §Perf memory-term lever for the 300B+ models — see
+    EXPERIMENTS.md).  Gradients accumulate in f32."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def _grad(params, mb):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb, cfg=cfg, attn_schedule=attn_schedule, remat=remat,
+            unroll_scan=unroll_scan)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+        params = state["params"]
+        if microbatches == 1:
+            (loss, parts), grads = _grad(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, parts), g = _grad(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + parts["aux_loss"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            carry = (g0, jnp.zeros((), jnp.float32),
+                     jnp.zeros((), jnp.float32))
+            if unroll_scan or microbatch_unroll:
+                # python loop: exact cost_analysis AND sidesteps a GSPMD
+                # dynamic-slice edge case seen on the hybrid arch
+                for i in range(microbatches):
+                    carry, _ = body(carry,
+                                    jax.tree.map(lambda a: a[i], mbs))
+                (g_acc, l_sum, a_sum) = carry
+            else:
+                (g_acc, l_sum, a_sum), _ = jax.lax.scan(body, carry, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, g_acc)
+            loss = l_sum / microbatches
+            parts = {"lm_loss": loss - a_sum / microbatches,
+                     "aux_loss": a_sum / microbatches}
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"])
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

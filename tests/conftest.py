@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — only launch/dryrun.py requests 512
+# placeholder devices; tests and benchmarks must see the real device count.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,142 @@
+"""Property tests (hypothesis) for the paper's caching invariants:
+LRU byte budget, prefix-cache longest-match semantics vs a naive oracle,
+content-cache format independence."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.content_cache import (ContentCache, EmbeddingEntry,
+                                      content_hash, media_set_digest)
+from repro.core.lru import LRUCache
+from repro.core.prefix_cache import TextPrefixCache
+from repro.serving.media import decode_media, encode_b64, register_url
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# --------------------------------------------------------------------------- #
+# LRU
+# --------------------------------------------------------------------------- #
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(1, 400)),
+                min_size=1, max_size=60),
+       st.integers(200, 1200))
+def test_lru_byte_budget_invariant(ops, budget):
+    lru = LRUCache(max_bytes=budget)
+    model = {}
+    for key_i, nbytes in ops:
+        key = f"k{key_i}"
+        lru.put(key, key_i, nbytes)
+        if nbytes <= budget:
+            model[key] = nbytes
+        assert lru.nbytes <= budget                     # never over budget
+    # stored bytes are consistent
+    total = sum(nb for k in list(lru.keys()) for nb in [model[k]])
+    assert total == lru.nbytes
+
+
+def test_lru_eviction_order():
+    lru = LRUCache(max_bytes=30)
+    lru.put("a", 1, 10)
+    lru.put("b", 2, 10)
+    lru.put("c", 3, 10)
+    assert lru.get("a") == 1                            # a is now MRU
+    lru.put("d", 4, 10)                                 # evicts b (LRU)
+    assert "b" not in lru and "a" in lru and "c" in lru and "d" in lru
+    assert lru.stats.evictions == 1
+
+
+# --------------------------------------------------------------------------- #
+# prefix cache vs oracle
+# --------------------------------------------------------------------------- #
+@settings(**SETTINGS)
+@given(st.lists(st.lists(st.integers(0, 7), min_size=1, max_size=40),
+                min_size=1, max_size=12),
+       st.lists(st.integers(0, 7), min_size=1, max_size=40),
+       st.sampled_from([1, 2, 4, 8]))
+def test_prefix_cache_longest_match(inserted, query, block):
+    """Lookup must return exactly the longest inserted block-aligned prefix
+    of the query (paper Alg.2 semantics at block granularity)."""
+    cache = TextPrefixCache(block_size=block, max_bytes=1 << 30)
+    oracle = {}
+    for i, toks in enumerate(inserted):
+        stored_len = cache.insert(toks, f"v{i}", nbytes=1)
+        aligned = len(toks) - len(toks) % block
+        assert stored_len == aligned
+        if aligned:
+            oracle[tuple(toks[:aligned])] = f"v{i}"
+
+    value, matched = cache.lookup(query)
+    want_len = 0
+    want_val = None
+    for plen in range(len(query) - len(query) % block, 0, -block):
+        if tuple(query[:plen]) in oracle:
+            want_len, want_val = plen, oracle[tuple(query[:plen])]
+            break
+    assert matched == want_len
+    if want_len:
+        assert value == want_val
+    else:
+        assert value is None
+
+
+def test_prefix_cache_paper_faithful_mode():
+    """block_size=1 == the paper's per-token Algorithm 2."""
+    cache = TextPrefixCache(block_size=1)
+    cache.insert([1, 2, 3, 4, 5], "full", nbytes=1)
+    cache.insert([1, 2, 3], "short", nbytes=1)
+    v, n = cache.lookup([1, 2, 3, 4, 5, 6, 7])
+    assert (v, n) == ("full", 5)                        # longest wins
+    v, n = cache.lookup([1, 2, 3, 9])
+    assert (v, n) == ("short", 3)                       # partial hit
+    v, n = cache.lookup([9, 9])
+    assert (v, n) == (None, 0)                          # miss
+    # max_len cap: full hit must leave one token uncovered
+    v, n = cache.lookup([1, 2, 3, 4, 5], max_len=4)
+    assert n <= 4
+
+
+def test_prefix_cache_salt_isolation():
+    """Same tokens + different media digest must not collide (multimodal)."""
+    cache = TextPrefixCache(block_size=2)
+    cache.insert([1, 2, 3, 4], "imgA", salt=b"A", nbytes=1)
+    v, n = cache.lookup([1, 2, 3, 4], salt=b"B")
+    assert v is None and n == 0
+    v, n = cache.lookup([1, 2, 3, 4], salt=b"A")
+    assert v == "imgA" and n == 4
+
+
+# --------------------------------------------------------------------------- #
+# content cache
+# --------------------------------------------------------------------------- #
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([(8, 8, 3), (16, 4, 3)]))
+def test_content_hash_format_independence(seed, shape):
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 255, shape, dtype=np.uint8)
+    h_raw = content_hash(decode_media(img))
+    h_b64 = content_hash(decode_media(encode_b64(img)))
+    register_url(f"fake://{seed}", img)
+    h_url = content_hash(decode_media({"url": f"fake://{seed}"}))
+    assert h_raw == h_b64 == h_url
+    # and different pixels hash differently
+    img2 = img.copy()
+    img2[0, 0, 0] ^= 0xFF
+    assert content_hash(img2) != h_raw
+
+
+def test_content_hash_float_vs_uint8_canonicalisation():
+    img = np.random.default_rng(1).integers(0, 255, (4, 4, 3),
+                                            dtype=np.uint8)
+    as_float = img.astype(np.float32) / 255.0
+    assert content_hash(img) == content_hash(as_float)
+
+
+def test_media_set_digest_order_sensitivity():
+    h1, h2 = content_hash(np.zeros((2, 2))), content_hash(np.ones((2, 2)))
+    assert media_set_digest([h1, h2]) != media_set_digest([h2, h1])
+
+
+def test_content_cache_ablation_flags():
+    cc = ContentCache(cache_embeddings=False, cache_kv=True)
+    cc.put_embedding("h", EmbeddingEntry(np.zeros(4), 32))
+    assert cc.get_embedding("h") is None                # embeddings disabled

@@ -1,0 +1,70 @@
+"""Scheduler semantics (paper Algorithm 1) + property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.request import Request, SamplingParams
+from repro.core.scheduler import ContinuousBatchingScheduler
+
+
+def _req(i=0):
+    return Request(prompt_tokens=[1, 2, i], sampling=SamplingParams())
+
+
+def test_admit_fills_free_slots_in_fifo_order():
+    s = ContinuousBatchingScheduler(max_batch=2)
+    r1, r2, r3 = _req(1), _req(2), _req(3)
+    for r in (r1, r2, r3):
+        s.add(r)
+    admitted = s.admit([0, 1])
+    assert [r.request_id for _, r in admitted] == [r1.request_id,
+                                                   r2.request_id]
+    assert s.num_active == 2 and len(s.pending) == 1
+
+
+def test_retire_frees_slot_for_next_request():
+    s = ContinuousBatchingScheduler(max_batch=1)
+    r1, r2 = _req(1), _req(2)
+    s.add(r1)
+    s.add(r2)
+    s.admit([0])
+    got = s.retire(0)
+    assert got is r1
+    admitted = s.admit([0])
+    assert admitted[0][1] is r2
+
+
+def test_admit_respects_max_batch():
+    s = ContinuousBatchingScheduler(max_batch=2)
+    for i in range(5):
+        s.add(_req(i))
+    admitted = s.admit([0, 1, 2, 3])        # more slots offered than allowed
+    assert len(admitted) == 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(["add", "admit", "retire"]),
+                min_size=1, max_size=60),
+       st.integers(1, 4))
+def test_scheduler_invariants(ops, max_batch):
+    """active <= max_batch always; every request ends in exactly one place."""
+    s = ContinuousBatchingScheduler(max_batch=max_batch)
+    next_slot = list(range(max_batch))
+    occupied = {}
+    n_added = n_retired = 0
+    for op in ops:
+        if op == "add":
+            s.add(_req(n_added))
+            n_added += 1
+        elif op == "admit" and next_slot:
+            admitted = s.admit(list(next_slot))
+            for slot, r in admitted:
+                next_slot.remove(slot)
+                occupied[slot] = r
+        elif op == "retire" and occupied:
+            slot = next(iter(occupied))
+            s.retire(slot)
+            del occupied[slot]
+            next_slot.append(slot)
+            n_retired += 1
+        assert s.num_active <= max_batch
+        assert s.num_active == len(occupied)
+    assert s.num_active + len(s.pending) + n_retired == n_added

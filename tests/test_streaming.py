@@ -1,0 +1,47 @@
+"""UTF-8-safe streaming (paper §3.2): never split a code point, lose no
+bytes, for arbitrary text and arbitrary chunking."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streaming import StreamDecoder, TokenStreamDecoder
+from repro.serving.tokenizer import ByteTokenizer
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.text(min_size=0, max_size=120),
+       st.lists(st.integers(1, 7), min_size=1, max_size=40))
+def test_stream_decoder_reassembles_exactly(text, cuts):
+    data = text.encode("utf-8")
+    dec = StreamDecoder()
+    out, pos, i = [], 0, 0
+    while pos < len(data):
+        step = cuts[i % len(cuts)]
+        out.append(dec.push(data[pos:pos + step]))
+        pos += step
+        i += 1
+    out.append(dec.flush())
+    assert "".join(out) == text
+
+
+def test_multibyte_split_is_held_back():
+    dec = StreamDecoder()
+    euro = "€".encode("utf-8")          # 3 bytes
+    assert dec.push(euro[:1]) == ""
+    assert dec.push(euro[1:2]) == ""
+    assert dec.push(euro[2:]) == "€"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.text(min_size=1, max_size=60))
+def test_token_stream_decoder_roundtrip(text):
+    tok = ByteTokenizer()
+    dec = TokenStreamDecoder(tok)
+    tokens = tok.encode(text, add_bos=False)
+    got = dec.push_tokens(tokens) + dec.flush()
+    assert got == text
+
+
+def test_specials_emit_nothing():
+    tok = ByteTokenizer()
+    dec = TokenStreamDecoder(tok)
+    assert dec.push_token(tok.EOS) == ""
+    assert dec.push_token(tok.BOS) == ""
