@@ -1,0 +1,113 @@
+"""Decode hot-loop benchmark: tokens/s and host syncs per token vs
+``max_decode_block`` (K) at several batch sizes.
+
+The paper attributes its single-stream and aggregate throughput to keeping
+the accelerator saturated during decode; this suite tracks how far the
+device-resident block loop (one host sync per K tokens) moves us from the
+per-token engine (one sync per token).
+
+The workload is a deliberately tiny reduced model: on CPU a full-size toy's
+decode step is compute-bound (milliseconds), which hides the per-token
+host-orchestration cost this benchmark exists to measure.  The micro model's
+step is sub-millisecond — the same compute:dispatch regime as a real
+accelerator serving the paper's models — so tokens/s here isolates the
+host-loop overhead (dispatch, host↔device sync, per-token bookkeeping).
+Each cell is best-of-``REPEATS`` to damp shared-machine noise.
+
+Emits ``BENCH_decode_loop.json`` in the working directory so future PRs can
+track the trajectory.
+
+  PYTHONPATH=src python -m benchmarks.decode_loop
+  PYTHONPATH=src python -m benchmarks.run --only decode_loop
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import emit, text_requests
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.models import build_model
+
+BLOCKS = [1, 4, 8, 16]
+BATCHES = [1, 8, 16]
+MAX_TOKENS = 96
+PROMPT_LEN = 16
+CACHE_LEN = 64
+REPEATS = 3
+OUT = Path("BENCH_decode_loop.json")
+
+_micro_cfg = None
+_micro_params = None
+
+
+def micro_model():
+    """Reduced single-layer stand-in whose decode step costs ~accelerator
+    time on CPU (see module docstring)."""
+    global _micro_cfg, _micro_params
+    if _micro_cfg is None:
+        _micro_cfg = get_config("qwen3-0.6b-toy").reduced(
+            num_layers=1, d_model=64, num_heads=1, num_kv_heads=1,
+            head_dim=64, d_ff=128)
+        _micro_params = build_model(_micro_cfg).init(jax.random.PRNGKey(0))
+    return _micro_cfg, _micro_params
+
+
+def _measure(batch: int, block: int) -> dict:
+    cfg, params = micro_model()
+    eng = InferenceEngine(cfg, params=params, max_batch=batch,
+                          cache_len=CACHE_LEN, max_decode_block=block,
+                          enable_prefix_cache=False,
+                          enable_content_cache=False)
+    # warm every compiled variant with the exact timed shape (prefill
+    # buckets + all adaptive block sizes), then time fresh request sets
+    eng.generate(text_requests(batch, prompt_len=PROMPT_LEN,
+                               max_tokens=MAX_TOKENS))
+    best = None
+    for _ in range(REPEATS):
+        reqs = text_requests(batch, prompt_len=PROMPT_LEN,
+                             max_tokens=MAX_TOKENS)
+        s0 = eng.scheduler.stats.steps
+        t0 = time.monotonic()
+        eng.generate(reqs)
+        dt = time.monotonic() - t0
+        toks = sum(r.num_generated for r in reqs)
+        syncs = eng.scheduler.stats.steps - s0
+        row = {"batch": batch, "max_decode_block": block, "tokens": toks,
+               "wall_s": dt, "tok_s": toks / dt, "host_syncs": syncs,
+               "syncs_per_token": syncs / toks}
+        if best is None or row["tok_s"] > best["tok_s"]:
+            best = row
+    return best
+
+
+def run() -> None:
+    rows = []
+    base = {}
+    for batch in BATCHES:
+        for block in BLOCKS:
+            row = _measure(batch, block)
+            rows.append(row)
+            if block == 1:
+                base[batch] = row["tok_s"]
+            speedup = row["tok_s"] / base[batch]
+            row["speedup_vs_block1"] = speedup
+            emit(f"decode_loop/micro/b{batch}/K{block}",
+                 1e6 / row["tok_s"],
+                 f"tok_s={row['tok_s']:.1f} "
+                 f"syncs_per_tok={row['syncs_per_token']:.3f} "
+                 f"speedup_vs_K1={speedup:.2f}x")
+    cfg, _ = micro_model()
+    OUT.write_text(json.dumps(
+        {"arch": cfg.name, "max_tokens": MAX_TOKENS,
+         "prompt_len": PROMPT_LEN, "cache_len": CACHE_LEN,
+         "repeats": REPEATS, "rows": rows}, indent=2))
+    print(f"# wrote {OUT}")
+
+
+if __name__ == "__main__":
+    run()

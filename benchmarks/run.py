@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (fig2_concurrency, table1_throughput,
+from benchmarks import (decode_loop, fig2_concurrency, table1_throughput,
                         table2_mllm_cache, table3_video, table4_ablation,
                         table5_resolution, table6_video_frames,
                         table7_text_prefix)
@@ -18,6 +18,7 @@ from benchmarks.common import ROWS
 
 SUITES = [
     ("table1", table1_throughput.run),
+    ("decode_loop", decode_loop.run),
     ("fig2", fig2_concurrency.run),
     ("table2", table2_mllm_cache.run),
     ("table3", table3_video.run),

@@ -1,19 +1,37 @@
 """The inference engine: continuous batching + two-level caching (the paper's
-system, TPU-shaped).
+system, TPU-shaped), with a device-resident block-decode hot loop.
 
-Flow per ``step()`` (paper Alg.1):
-  1. **Admit** pending requests into free decode slots.  Admission runs the
+Flow per ``step()`` (paper Alg.1, loop body advancing K tokens per host
+iteration):
+  1. **Admit** pending requests into free decode slots.  Admission runs each
      request's prefill: media pipeline (content-cache hits skip the encoder —
      Alg.3), text/multimodal prefix-cache lookup (skips the forward pass for
-     cached tokens — Alg.2), then a bucketed, jit-compiled prefill for the
-     remaining tokens that writes the slot's KV/state cache and samples the
-     first token.
-  2. **Decode** one token for every active slot with a single compiled
-     decode step over the static-shape batch (inactive slots compute masked
-     garbage — the TPU continuous-batching trade: a fixed batch shape in
-     exchange for never re-tracing).
-  3. **Retire** finished requests immediately; their prompt KV state is
-     published to the prefix cache (byte-budget LRU) and the slot freed.
+     cached tokens — Alg.2), then a bucketed, jit-compiled prefill that
+     produces the slot's KV/state cache and samples the first token.  The
+     whole admission *wave* then lands in the batch cache with one compiled
+     multi-slot scatter (``SlotKVPool.insert_many``) and one scatter into the
+     device-resident :class:`~repro.core.kv_cache.DecodeState`, instead of k
+     separate cache updates.
+  2. **Decode a block**: a single compiled ``decode_block`` runs K
+     decode+sample iterations inside ``jax.lax.scan`` — sampling, RNG
+     splitting, stop-token detection and budget accounting all happen
+     on-device.  A slot that samples a stop token or exhausts its budget is
+     frozen by an on-device finished-mask (masked cache writes, no position
+     advance) for the rest of the block.  The host syncs **once per K
+     tokens** (the ``np.asarray`` on the returned ``[K, B]`` token block)
+     instead of once per token; per-slot state never round-trips through
+     host numpy between tokens.  K is adaptive
+     (``scheduler.plan_decode_block``): bounded by the ``max_decode_block``
+     knob and the smallest remaining budget among active slots, and
+     collapsing to 1 while pending requests wait on free slots so admission
+     latency stays one token.
+  3. **Retire** finished requests at the block boundary; their prompt KV
+     state is published to the prefix cache (byte-budget LRU) and the slot
+     freed.  Frozen-slot cache writes are masked on-device, so the published
+     state is bit-identical to what the single-step engine would publish.
+
+``max_decode_block=1`` reproduces the per-token engine exactly (same RNG
+split chain, same event order).  Greedy outputs are invariant to K.
 
 Cost-structure fidelity to the paper's ablation (Table 4): the media
 pipeline always runs unless the *content* cache hits (so "KV-only" caching
@@ -24,6 +42,7 @@ from __future__ import annotations
 
 import functools
 import time
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -34,10 +53,13 @@ from repro.configs import ModelConfig
 from repro.core.content_cache import (ContentCache, CrossKVEntry,
                                       EmbeddingEntry, content_hash,
                                       media_set_digest)
-from repro.core.kv_cache import SlotKVPool, tree_bytes
+from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
+                                 init_decode_state, select_cache_slots,
+                                 tree_bytes)
 from repro.core.prefix_cache import TextPrefixCache
-from repro.core.request import FinishReason, Request, StreamEvent
-from repro.core.sampling import sample_tokens
+from repro.core.request import (FinishReason, PromptTooLongError, Request,
+                                StreamEvent)
+from repro.core.sampling import sample_tokens, sample_tokens_inner
 from repro.core.scheduler import ContinuousBatchingScheduler
 from repro.core.streaming import TokenStreamDecoder
 from repro.models import build_model
@@ -50,6 +72,16 @@ def _next_bucket(n: int, floor: int = 16) -> int:
     while b < n:
         b *= 2
     return b
+
+
+@dataclass
+class _Admission:
+    """One prefilled request, staged for the batched wave commit."""
+    slot: int
+    req: Request
+    single_cache: Any
+    first_token: int
+    ctx_valid: Optional[np.ndarray]      # [T] bool or None
 
 
 class InferenceEngine:
@@ -73,6 +105,9 @@ class InferenceEngine:
         frame_tokens: Optional[int] = None,
         max_media_items: int = 4,
         vision_work_iters: int = 8,
+        max_decode_block: int = 8,
+        max_stop_tokens: int = 8,
+        truncate_long_prompts: bool = False,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -80,6 +115,9 @@ class InferenceEngine:
         self.params = params if params is not None else self.model.init(key)
         self.tokenizer = tokenizer or ByteTokenizer()
         self.top_k, self.top_p = top_k, top_p
+        self.max_decode_block = max(1, max_decode_block)
+        self.max_stop_tokens = max_stop_tokens
+        self.truncate_long_prompts = truncate_long_prompts
 
         # media geometry
         self.media_kind = ("vision" if cfg.vision is not None
@@ -112,35 +150,59 @@ class InferenceEngine:
                                            cache_kv=cache_vision_kv)
                               if enable_content_cache else None)
 
-        # per-slot host state
-        self._positions = np.zeros((max_batch,), np.int32)
-        self._last_token = np.zeros((max_batch,), np.int32)
-        self._temps = np.zeros((max_batch,), np.float32)
-        self._ctx_valid = np.zeros((max_batch, max(self.ctx_len, 1)), bool)
+        # per-slot decode state lives on device (one pytree); the host keeps
+        # only the streaming decoders
+        self.state = init_decode_state(max_batch, self.ctx_len,
+                                       max_stop_tokens,
+                                       jax.random.PRNGKey(seed + 1))
         self._streamers: Dict[int, TokenStreamDecoder] = {}
 
-        self._rng = jax.random.PRNGKey(seed + 1)
         self._step_count = 0
         self._prefill_fns: Dict[Tuple, Any] = {}
-        self._decode_fn = self._build_decode_fn()
+        self._decode_block_fn = self._build_decode_block_fn()
 
     # ------------------------------------------------------------------ #
     # compiled steps
     # ------------------------------------------------------------------ #
-    def _build_decode_fn(self):
+    def _build_decode_block_fn(self):
+        """K decode+sample iterations under one jit (one trace per distinct
+        K; the scheduler restricts K to powers of two ≤ max_decode_block)."""
         model, top_k, top_p = self.model, self.top_k, self.top_p
         use_ctx = self.media_kind != "none"
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def decode_step(params, cache, tokens, positions, ctx_valid, temps, key):
-            out = model.apply(params, tokens[:, None], mode="decode",
-                              positions=positions[:, None], cache=cache,
-                              ctx_valid=ctx_valid if use_ctx else None)
-            nxt = sample_tokens(out.logits[:, 0], key, temps,
-                                top_k=top_k, top_p=top_p)
-            return out.cache, nxt
+        @functools.partial(jax.jit, static_argnames=("num_steps",),
+                           donate_argnums=(1, 2))
+        def decode_block(params, cache, state: DecodeState, *, num_steps: int):
+            def body(carry, _):
+                cache, st = carry
+                out = model.apply(
+                    params, st.last_token[:, None], mode="decode",
+                    positions=st.positions[:, None], cache=cache,
+                    ctx_valid=st.ctx_valid if use_ctx else None)
+                # frozen slots keep their previous cache bit-for-bit
+                cache = select_cache_slots(st.active, st.positions,
+                                           out.cache, cache)
+                key, sub = jax.random.split(st.rng)
+                nxt = sample_tokens_inner(out.logits[:, 0], sub, st.temps,
+                                          top_k=top_k, top_p=top_p)
+                nxt = jnp.where(st.active, nxt, st.last_token)
+                emit = jnp.where(st.active, nxt, -1)          # -1 = frozen
+                alive = st.active.astype(jnp.int32)
+                budget = st.budget - alive
+                hit_stop = jnp.any(nxt[:, None] == st.stop_tokens, axis=-1)
+                finished = st.active & (hit_stop | (budget <= 0))
+                st = st._replace(last_token=nxt,
+                                 positions=st.positions + alive,
+                                 budget=budget,
+                                 active=st.active & ~finished,
+                                 rng=key)
+                return (cache, st), emit
 
-        return decode_step
+            (cache, state), toks = jax.lax.scan(body, (cache, state), None,
+                                                length=num_steps)
+            return cache, state, toks                         # toks: [K, B]
+
+        return decode_block
 
     def _prefill_fn(self, bucket: int, cross_cached: bool):
         key = (bucket, cross_cached)
@@ -243,14 +305,20 @@ class InferenceEngine:
         return cache
 
     # ------------------------------------------------------------------ #
-    # admission: prefill one request into a slot
+    # admission: prefill one request (staged; committed per wave)
     # ------------------------------------------------------------------ #
-    def _admit(self, slot: int, req: Request) -> List[StreamEvent]:
+    def _split_rng(self) -> jax.Array:
+        key, sub = jax.random.split(self.state.rng)
+        self.state = self.state._replace(rng=key)
+        return sub
+
+    def _prefill_request(self, slot: int, req: Request) -> _Admission:
         t0 = time.monotonic()
         tokens = list(req.prompt_tokens)
         assert tokens, "empty prompt"
 
         embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
+        req.media_set_digest = set_digest
 
         # Alg.2: longest cached prefix (cap: leave >=1 token for logits)
         matched, single = 0, None
@@ -275,6 +343,11 @@ class InferenceEngine:
 
         remaining = tokens[matched:]
         bucket = _next_bucket(len(remaining))
+        if not self.cfg.sliding_window and \
+                matched + bucket > self.pool.cache_len:
+            # clamp: padding past the prompt must not ring-wrap over real KV
+            # (add_request guarantees the prompt itself fits)
+            bucket = self.pool.cache_len - matched
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :len(remaining)] = remaining
         positions = (matched + np.arange(bucket, dtype=np.int32))[None]
@@ -293,10 +366,8 @@ class InferenceEngine:
             self.content_cache.put_cross_kv(
                 set_digest, CrossKVEntry(xkv, self.ctx_len, tree_bytes(xkv)))
 
-        self.pool.insert(slot, new_single)
-
         # sample the first token
-        self._rng, sub = jax.random.split(self._rng)
+        sub = self._split_rng()
         first = int(sample_tokens(logits[None], sub,
                                   jnp.asarray([req.sampling.temperature]),
                                   top_k=self.top_k, top_p=self.top_p)[0])
@@ -305,16 +376,41 @@ class InferenceEngine:
         req.first_token_time = now
         req.output_tokens.append(first)
 
-        self._positions[slot] = len(tokens)
-        self._last_token[slot] = first
-        self._temps[slot] = req.sampling.temperature
-        if ctx_valid is not None:
-            self._ctx_valid[slot] = ctx_valid[0]
-        self._streamers[req.request_id] = TokenStreamDecoder(self.tokenizer)
-        text = self._streamers[req.request_id].push_token(first)
+        return _Admission(slot, req, new_single, first,
+                          None if ctx_valid is None else ctx_valid[0])
 
-        events = [StreamEvent(req.request_id, first, text)]
-        events.extend(self._maybe_finish(slot, req, first))
+    def _commit_admissions(self, wave: List[_Admission]) -> List[StreamEvent]:
+        """Land an admission wave: one compiled cache scatter, one decode-state
+        scatter, then per-request stream/finish bookkeeping."""
+        self.pool.insert_many([a.slot for a in wave],
+                              [a.single_cache for a in wave])
+        events: List[StreamEvent] = []
+        for a in wave:
+            self._streamers[a.req.request_id] = TokenStreamDecoder(self.tokenizer)
+            text = self._streamers[a.req.request_id].push_token(a.first_token)
+            events.append(StreamEvent(a.req.request_id, a.first_token, text))
+            events.extend(self._maybe_finish(a.slot, a.req, a.first_token))
+
+        k = len(wave)
+        stops = np.full((k, self.max_stop_tokens), -1, np.int32)
+        ctx = np.zeros((k, max(self.ctx_len, 1)), bool)
+        for i, a in enumerate(wave):
+            ids = (self.tokenizer.EOS,) + tuple(a.req.sampling.stop_token_ids)
+            stops[i, :len(ids)] = ids
+            if a.ctx_valid is not None:
+                ctx[i] = a.ctx_valid
+        self.state = admit_decode_state(
+            self.state,
+            jnp.asarray([a.slot for a in wave], jnp.int32),
+            jnp.asarray([a.first_token for a in wave], jnp.int32),
+            jnp.asarray([len(a.req.prompt_tokens) for a in wave], jnp.int32),
+            jnp.asarray([a.req.sampling.temperature for a in wave],
+                        jnp.float32),
+            jnp.asarray(ctx),
+            jnp.asarray([a.req.sampling.max_tokens - a.req.num_generated
+                         for a in wave], jnp.int32),
+            jnp.asarray(stops),
+            jnp.asarray([not a.req.is_finished for a in wave], bool))
         return events
 
     # ------------------------------------------------------------------ #
@@ -336,11 +432,17 @@ class InferenceEngine:
                             finished=True, finish_reason=reason)]
 
     def _retire(self, slot: int, req: Request) -> None:
-        # publish the prompt's KV/state to the prefix cache (Alg.2 insert)
-        if self.prefix_cache is not None and len(req.prompt_tokens) >= \
-                self.prefix_cache.block_size:
-            _, _, salt, _ = (None, None, b"", None) if self.media_kind == "none" \
-                else self._media_pipeline_salt(req)
+        # publish the prompt's KV/state to the prefix cache (Alg.2 insert).
+        # Skip if generation ring-wrapped the cache: wrapped slots have
+        # prompt KV cells overwritten by generated-token KV, so the entry
+        # would be silently wrong for a future resume.
+        wrapped = (len(req.prompt_tokens) + req.num_generated - 1
+                   > self.pool.cache_len)
+        if self.prefix_cache is not None and not wrapped and \
+                len(req.prompt_tokens) >= self.prefix_cache.block_size:
+            # salt from the digest stashed at admission — no media re-decode
+            salt = (bytes.fromhex(req.media_set_digest)
+                    if req.media_set_digest else b"")
             single = self.pool.read(slot)
             value = {"cache": single, "len": len(req.prompt_tokens)}
             self.prefix_cache.insert(req.prompt_tokens, value,
@@ -348,30 +450,31 @@ class InferenceEngine:
         self.scheduler.retire(slot)
         self.pool.free(slot)
 
-    def _media_pipeline_salt(self, req: Request):
-        """Digest-only media pass (hashes are cheap; no encoding)."""
-        hashes = []
-        for img in req.images:
-            hashes.append(content_hash(decode_media(img)))
-        for frame in req.video_frames:
-            hashes.append(content_hash(decode_media(frame)))
-        if req.audio is not None:
-            hashes.append(content_hash(decode_media(req.audio)))
-        digest = media_set_digest(hashes) if hashes else None
-        salt = bytes.fromhex(digest) if digest else b""
-        return None, None, salt, digest
-
     # ------------------------------------------------------------------ #
     # public API
     # ------------------------------------------------------------------ #
     def add_request(self, req: Request) -> None:
+        n = len(req.prompt_tokens)
+        if not self.cfg.sliding_window and n > self.pool.cache_len:
+            if not self.truncate_long_prompts:
+                raise PromptTooLongError(
+                    f"prompt has {n} tokens but the KV cache holds "
+                    f"{self.pool.cache_len}; raise cache_len or pass "
+                    f"truncate_long_prompts=True")
+            req.metadata["truncated_prompt_from"] = n
+            req.prompt_tokens = list(req.prompt_tokens[-self.pool.cache_len:])
+        if len(req.sampling.stop_token_ids) + 1 > self.max_stop_tokens:
+            raise ValueError(
+                f"{len(req.sampling.stop_token_ids)} stop tokens exceed "
+                f"max_stop_tokens={self.max_stop_tokens}")
         self.scheduler.add(req)
 
     def step(self) -> List[StreamEvent]:
-        """One scheduler iteration (paper Alg.1 loop body)."""
+        """One scheduler iteration (paper Alg.1 loop body, K tokens)."""
         events: List[StreamEvent] = []
 
-        # 1. admit at the token boundary
+        # 1. admit at the token boundary — one batched wave
+        wave: List[_Admission] = []
         while (self.pool.num_free and self.scheduler.pending
                and self.scheduler.num_active < self.scheduler.max_batch):
             slot = self.pool.allocate()
@@ -380,32 +483,42 @@ class InferenceEngine:
                 self.pool.free(slot)
                 break
             _, req = admitted[0]
-            events.extend(self._admit(slot, req))
+            wave.append(self._prefill_request(slot, req))
+        if wave:
+            events.extend(self._commit_admissions(wave))
 
         if not self.scheduler.active:
             return events
 
-        # 2. one decode step for the whole batch
-        self._rng, sub = jax.random.split(self._rng)
-        cache, nxt = self._decode_fn(
-            self.params, self.pool.cache, jnp.asarray(self._last_token),
-            jnp.asarray(self._positions), jnp.asarray(self._ctx_valid),
-            jnp.asarray(self._temps), sub)
+        # 2. one compiled block of K decode steps for the whole batch
+        num_steps = self.scheduler.plan_decode_block(self.max_decode_block)
+        cache, state, toks = self._decode_block_fn(
+            self.params, self.pool.cache, self.state, num_steps=num_steps)
         self.pool.cache = cache
-        nxt = np.asarray(nxt)
+        self.state = state
+        block = np.asarray(toks)                  # [K, B]: the block's one sync
         self._step_count += 1
         self.scheduler.stats.steps += 1
+        self.scheduler.stats.device_steps += num_steps
 
-        # 3. emit + retire
-        for slot, req in list(self.scheduler.active.items()):
-            tok = int(nxt[slot])
-            req.output_tokens.append(tok)
-            self.scheduler.stats.tokens_generated += 1
-            self._positions[slot] += 1
-            self._last_token[slot] = tok
-            text = self._streamers[req.request_id].push_token(tok)
-            events.append(StreamEvent(req.request_id, tok, text))
-            events.extend(self._maybe_finish(slot, req, tok))
+        # 3. emit + retire, consuming the token block step-major
+        live = dict(self.scheduler.active)
+        for k in range(num_steps):
+            for slot in sorted(live):
+                req = live[slot]
+                if req.is_finished:
+                    continue
+                tok = int(block[k, slot])
+                if tok < 0:
+                    # frozen-slot sentinel: the device finish-mask fired but
+                    # the host hasn't (belt and braces — the two conditions
+                    # are equivalent by construction)
+                    continue
+                req.output_tokens.append(tok)
+                self.scheduler.stats.tokens_generated += 1
+                text = self._streamers[req.request_id].push_token(tok)
+                events.append(StreamEvent(req.request_id, tok, text))
+                events.extend(self._maybe_finish(slot, req, tok))
         return events
 
     def run(self) -> List[StreamEvent]:

@@ -1,4 +1,4 @@
-"""Slot-based decode cache pool.
+"""Slot-based decode cache pool + device-resident decode state.
 
 TPU adaptation of continuous batching (DESIGN.md §2): the decode batch has a
 *static* shape of ``max_batch`` slots over a pre-allocated cache; requests
@@ -6,11 +6,20 @@ occupy slots, admission fills free slots at step boundaries, retirement frees
 them.  The pool also provides jit'd slot read/insert (used to move prefilled
 KV state / prefix-cache entries in and out of the batch cache with no
 re-materialisation — the unified-memory "zero-copy" analogue: only block
-indices change, plus one device-side dynamic-update per admission)."""
+indices change, plus one device-side scatter per admission *wave*: an
+admission of k prefills lands in the batch cache with a single compiled
+multi-slot insert instead of k full-cache updates).
+
+:class:`DecodeState` holds everything the decode loop needs per slot —
+last sampled token, absolute position, temperature, media-context liveness,
+remaining token budget, stop-token table, the live/frozen mask, and the
+sampling RNG key — as one device pytree, so the engine's ``decode_block``
+can run K decode+sample iterations under ``lax.scan`` without the host
+re-uploading state between tokens."""
 from __future__ import annotations
 
 import functools
-from typing import Any, List, Optional, Set
+from typing import Any, List, NamedTuple, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -23,23 +32,130 @@ def tree_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
-@functools.partial(jax.jit, static_argnames=("slot",), donate_argnums=(0,))
-def _insert_slot(batch_cache, single_cache, *, slot: int):
-    def ins_prefix(full, one):
-        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
-                                                   slot, axis=0)
+# --------------------------------------------------------------------------- #
+# device-resident per-slot decode state
+# --------------------------------------------------------------------------- #
+class DecodeState(NamedTuple):
+    """Per-slot decode state, device-resident (one pytree, donated through
+    the compiled decode block).  ``stop_tokens`` is a fixed-width table
+    padded with -1 (never a valid token id); ``active`` is the on-device
+    finished-mask — a slot freezes when it samples a stop token or exhausts
+    its budget, and stays frozen (masked cache writes, no position advance)
+    until the host re-admits into the slot."""
+    last_token: jax.Array        # [B] int32 — input to the next decode step
+    positions: jax.Array         # [B] int32 — absolute position of last_token
+    temps: jax.Array             # [B] float32 — 0 = greedy
+    ctx_valid: jax.Array         # [B, T] bool — media context liveness
+    budget: jax.Array            # [B] int32 — tokens left before LENGTH stop
+    stop_tokens: jax.Array       # [B, S] int32 — per-slot stop ids, -1 pad
+    active: jax.Array            # [B] bool — False: slot frozen/empty
+    rng: jax.Array               # PRNG key, split once per decode step
 
-    def ins_block(full, one):
-        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
-                                                   slot, axis=1)
+
+def init_decode_state(max_batch: int, ctx_len: int, max_stop: int,
+                      rng: jax.Array) -> DecodeState:
+    return DecodeState(
+        last_token=jnp.zeros((max_batch,), jnp.int32),
+        positions=jnp.zeros((max_batch,), jnp.int32),
+        temps=jnp.zeros((max_batch,), jnp.float32),
+        ctx_valid=jnp.zeros((max_batch, max(ctx_len, 1)), bool),
+        budget=jnp.zeros((max_batch,), jnp.int32),
+        stop_tokens=jnp.full((max_batch, max_stop), -1, jnp.int32),
+        active=jnp.zeros((max_batch,), bool),
+        rng=rng,
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_decode_state(state: DecodeState, slots: jax.Array,
+                       last_token: jax.Array, positions: jax.Array,
+                       temps: jax.Array, ctx_valid: jax.Array,
+                       budget: jax.Array, stop_tokens: jax.Array,
+                       active: jax.Array) -> DecodeState:
+    """Scatter one admission wave (k slots) into the decode state."""
+    return state._replace(
+        last_token=state.last_token.at[slots].set(last_token),
+        positions=state.positions.at[slots].set(positions),
+        temps=state.temps.at[slots].set(temps),
+        ctx_valid=state.ctx_valid.at[slots].set(ctx_valid),
+        budget=state.budget.at[slots].set(budget),
+        stop_tokens=state.stop_tokens.at[slots].set(stop_tokens),
+        active=state.active.at[slots].set(active),
+    )
+
+
+def select_cache_slots(active: jax.Array, positions: jax.Array,
+                       new_cache, old_cache):
+    """Per-slot select between an updated and the previous decode cache.
+
+    Frozen slots (``active == False``) keep their old cache bit-for-bit, so
+    a finished request's KV/SSM state is exactly what the single-step engine
+    would have published to the prefix cache — decode steps that ran while
+    the slot was frozen leave no trace.
+
+    Cost note: a decode step mutates exactly one ring cell per slot in the
+    ``k``/``v`` leaves (at ``positions % cache_len`` — the frozen slot's
+    position does not advance), so those are repaired with an O(B·H·D)
+    gather/scatter rather than an O(B·S·H·D) full-cache select; only the
+    small recurrent SSM leaves (``conv``/``state``, rewritten wholesale each
+    step) pay a full per-slot select.  Pass-through leaves (``xk``/``xv``)
+    are detected by identity and skipped."""
+    b = active.shape[0]
+    bidx = jnp.arange(b)
+
+    def sel(name: str, n, o, stacked: bool):
+        if n is o:                       # decode pass-through (e.g. xk/xv)
+            return n
+        if name in ("k", "v"):           # single ring cell written per slot
+            sc = n.shape[2] if stacked else n.shape[1]
+            idx = positions % sc
+            if stacked:                  # [L, B, S, ...]
+                mask = active.reshape((1, -1) + (1,) * (n.ndim - 3))
+                cell = jnp.where(mask, n[:, bidx, idx], o[:, bidx, idx])
+                return n.at[:, bidx, idx].set(cell)
+            mask = active.reshape((-1,) + (1,) * (n.ndim - 2))
+            cell = jnp.where(mask, n[bidx, idx], o[bidx, idx])
+            return n.at[bidx, idx].set(cell)
+        if stacked:                      # recurrent state: full slot select
+            return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)),
+                             n, o)
+        return jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    out = {"prefix": [{name: sel(name, nc[name], oc[name], False)
+                       for name in nc}
+                      for nc, oc in zip(new_cache["prefix"],
+                                        old_cache["prefix"])]}
+    out["block"] = ({pos: {name: sel(name, sub[name],
+                                     old_cache["block"][pos][name], True)
+                           for name in sub}
+                     for pos, sub in new_cache["block"].items()}
+                    if old_cache.get("block") is not None else None)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert_slots(batch_cache, single_caches, slots: jax.Array):
+    """Scatter k batch=1 caches into the batch cache in one compiled call.
+
+    ``single_caches`` is a tuple of k cache pytrees; their leaves are
+    concatenated on the batch axis and written with a single gather/scatter
+    per leaf — an admission wave of k prefills costs one cache update, not k.
+    """
+    def ins_prefix(full, *ones):                  # batch axis 0
+        many = jnp.concatenate([o.astype(full.dtype) for o in ones], axis=0)
+        return full.at[slots].set(many)
+
+    def ins_block(full, *ones):                   # [L, B, ...]: batch axis 1
+        many = jnp.concatenate([o.astype(full.dtype) for o in ones], axis=1)
+        return full.at[:, slots].set(many)
 
     out = dict(batch_cache)
-    out["prefix"] = [jax.tree.map(ins_prefix, bp, sp)
-                     for bp, sp in zip(batch_cache["prefix"],
-                                       single_cache["prefix"])]
+    out["prefix"] = [jax.tree.map(ins_prefix, bp, *[s["prefix"][i]
+                                                    for s in single_caches])
+                     for i, bp in enumerate(batch_cache["prefix"])]
     if batch_cache.get("block") is not None:
         out["block"] = jax.tree.map(ins_block, batch_cache["block"],
-                                    single_cache["block"])
+                                    *[s["block"] for s in single_caches])
     return out
 
 
@@ -92,7 +208,15 @@ class SlotKVPool:
     # ------------------------------------------------------------------ #
     def insert(self, slot: int, single_cache) -> None:
         """Install a batch=1 cache (from prefill or a cache hit) into a slot."""
-        self.cache = _insert_slot(self.cache, single_cache, slot=slot)
+        self.insert_many([slot], [single_cache])
+
+    def insert_many(self, slots: Sequence[int], single_caches) -> None:
+        """Install an admission wave of batch=1 caches with one compiled
+        scatter (retraces per distinct wave size only)."""
+        if not slots:
+            return
+        self.cache = _insert_slots(self.cache, tuple(single_caches),
+                                   jnp.asarray(list(slots), jnp.int32))
 
     def read(self, slot: int):
         """Extract a slot's cache as a batch=1 pytree (for prefix caching)."""

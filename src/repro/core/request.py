@@ -16,6 +16,11 @@ class FinishReason(str, Enum):
     ABORT = "abort"
 
 
+class PromptTooLongError(ValueError):
+    """Prompt does not fit the engine's KV cache (and the model has no
+    sliding window to make ring-wrap semantically valid)."""
+
+
 @dataclass
 class SamplingParams:
     temperature: float = 0.0          # 0 = greedy
@@ -47,6 +52,9 @@ class Request:
     cached_prefix_len: int = 0        # tokens served from the prefix cache
     vision_cache_hits: int = 0
     vision_cache_misses: int = 0
+    # media-set digest computed once during admission; reused at retire for
+    # the prefix-cache salt (avoids re-decoding + re-hashing every frame)
+    media_set_digest: Optional[str] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     @property

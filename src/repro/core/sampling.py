@@ -2,17 +2,17 @@
 
 Each slot has its own temperature (continuous batching serves heterogeneous
 requests); top-k / top-p are engine-level settings so the sampler stays one
-compiled function."""
+compiled function.  :func:`sample_tokens_inner` is the unjitted body — the
+engine's ``decode_block`` folds it straight into the ``lax.scan`` decode
+loop so sampling (and the per-step RNG split) happens on-device, with no
+host round-trip between generated tokens."""
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("top_k", "top_p"))
-def sample_tokens(
+def sample_tokens_inner(
     logits: jax.Array,          # [B, V] f32
     key: jax.Array,
     temperatures: jax.Array,    # [B] (0 = greedy)
@@ -21,22 +21,32 @@ def sample_tokens(
     top_p: float = 1.0,
 ) -> jax.Array:
     logits = logits.astype(jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    temps = jnp.maximum(temperatures, 1e-6)[:, None]
-    scaled = logits / temps
+    def stochastic(_):
+        temps = jnp.maximum(temperatures, 1e-6)[:, None]
+        scaled = logits / temps
 
-    if top_k and top_k < logits.shape[-1]:
-        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
-        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-    if top_p < 1.0:
-        sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative prob >= top_p
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
-        scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+        if top_k and top_k < logits.shape[-1]:
+            kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        if top_p < 1.0:
+            sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+            probs = jax.nn.softmax(sorted_logits, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            # smallest set with cumulative prob >= top_p
+            cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+            cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                         axis=-1)
+            scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
 
-    sampled = jax.random.categorical(key, scaled, axis=-1)
-    return jnp.where(temperatures > 0, sampled, greedy).astype(jnp.int32)
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        return jnp.where(temperatures > 0, sampled, greedy).astype(jnp.int32)
+
+    # all-greedy batches (the common case, and every temp-0 slot mix) skip
+    # the softmax/categorical entirely — a real win inside the decode scan
+    return jax.lax.cond(jnp.any(temperatures > 0), stochastic,
+                        lambda _: greedy, operand=None)
+
+
+sample_tokens = jax.jit(sample_tokens_inner, static_argnames=("top_k", "top_p"))

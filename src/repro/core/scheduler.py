@@ -19,9 +19,16 @@ from repro.core.request import Request
 class SchedulerStats:
     admitted: int = 0
     retired: int = 0
-    steps: int = 0
+    steps: int = 0               # host-loop iterations (one per decode block)
+    device_steps: int = 0        # decode iterations run on-device (sum of K)
     tokens_generated: int = 0
     peak_batch: int = 0
+
+    @property
+    def host_syncs_per_token(self) -> float:
+        """Host↔device round-trips per generated token (1.0 in the
+        single-step engine; ~1/K with block decode)."""
+        return self.steps / max(self.tokens_generated, 1)
 
 
 class ContinuousBatchingScheduler:
@@ -54,6 +61,23 @@ class ContinuousBatchingScheduler:
         req = self.active.pop(slot)
         self.stats.retired += 1
         return req
+
+    def plan_decode_block(self, max_block: int) -> int:
+        """Adaptive decode-block size K (tokens generated per host sync).
+
+        K collapses to 1 while requests are waiting on free slots, so a
+        retire is noticed (and the slot re-admitted) at the next token
+        boundary — admission latency never grows with blocking.  Otherwise
+        K is bounded by the smallest remaining token budget across active
+        slots (finished slots would just burn masked decode steps) and by
+        ``max_block``, rounded down to a power of two so the engine compiles
+        at most log2(max_block)+1 block variants."""
+        if max_block <= 1 or self.pending or not self.active:
+            return 1
+        rem = min(r.sampling.max_tokens - r.num_generated
+                  for r in self.active.values())
+        k = max(1, min(max_block, rem))
+        return 1 << (k.bit_length() - 1)
 
     # ------------------------------------------------------------------ #
     @property

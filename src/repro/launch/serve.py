@@ -25,6 +25,8 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--no-content-cache", action="store_true")
+    ap.add_argument("--max-decode-block", type=int, default=8,
+                    help="decode tokens per host sync (1 = per-token loop)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -34,7 +36,8 @@ def main() -> None:
     engine = InferenceEngine(
         cfg, max_batch=args.max_batch, cache_len=args.cache_len,
         seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
-        enable_content_cache=not args.no_content_cache)
+        enable_content_cache=not args.no_content_cache,
+        max_decode_block=args.max_decode_block)
     server = ApiServer(OpenAIServer(engine, cfg.name), port=args.port)
     server.start()
     print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions")

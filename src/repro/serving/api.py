@@ -14,7 +14,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
 
 from repro.core.engine import InferenceEngine
-from repro.core.request import Request, SamplingParams
+from repro.core.request import FinishReason, Request, SamplingParams
 from repro.serving.engine_loop import EngineLoop
 
 
@@ -133,7 +133,11 @@ class OpenAIServer:
             qs = [self.loop.submit(r) for r in reqs]
             for r, q in zip(reqs, qs):
                 while not r.is_finished:
-                    q.get()
+                    ev = q.get()
+                    if ev is None or ev.finished:
+                        break
+                if not r.is_finished:        # loop stopped mid-generation
+                    r.finish_reason = FinishReason.ABORT
         else:
             self.engine.generate(reqs)
         return [self._response(r) for r in reqs]

@@ -2,9 +2,15 @@
 single-threaded continuous-batching engine.
 
 HTTP handlers (one thread per connection) submit requests and wait; one
-dedicated loop thread drives ``engine.step()`` — exactly the paper's
-Algorithm 1 outer loop, with admission happening at token boundaries as
-concurrent clients arrive mid-generation."""
+dedicated loop thread drives ``engine.step()`` — the paper's Algorithm 1
+outer loop.  With block decode, each ``step()`` advances up to
+``max_decode_block`` tokens and returns the whole token block's events,
+which are fanned out to the per-request queues in one critical section.
+Admission still happens at token boundaries: the engine collapses the block
+size to 1 whenever requests are pending, so a newly submitted request waits
+at most one token (not one block) for a free slot.  A request submitted
+while a block is in flight is admitted at the next block boundary — the
+bounded-staleness trade block decode makes for ~1/K host syncs."""
 from __future__ import annotations
 
 import queue
@@ -12,7 +18,7 @@ import threading
 from typing import Dict, Optional
 
 from repro.core.engine import InferenceEngine
-from repro.core.request import Request, StreamEvent
+from repro.core.request import FinishReason, Request, StreamEvent
 
 
 class EngineLoop:
@@ -29,7 +35,11 @@ class EngineLoop:
         q: "queue.Queue[Optional[StreamEvent]]" = queue.Queue()
         with self._cv:
             self._queues[req.request_id] = q
-            self.engine.add_request(req)
+            try:
+                self.engine.add_request(req)     # may reject (PromptTooLong…)
+            except BaseException:
+                del self._queues[req.request_id]
+                raise
             self._cv.notify()
         return q
 
@@ -38,6 +48,8 @@ class EngineLoop:
         while True:
             ev = q.get()
             if ev is None or ev.finished:
+                if not req.is_finished:      # loop stopped mid-generation
+                    req.finish_reason = FinishReason.ABORT
                 return req
 
     # ------------------------------------------------------------------ #
@@ -47,8 +59,9 @@ class EngineLoop:
                 while not self.engine.scheduler.has_work and not self._stop:
                     self._cv.wait(timeout=0.5)
                 if self._stop:
+                    self._drain_locked()
                     return
-            events = self.engine.step()
+            events = self.engine.step()     # one decode block (≤ K tokens)
             with self._cv:
                 for ev in events:
                     q = self._queues.get(ev.request_id)
@@ -56,6 +69,16 @@ class EngineLoop:
                         q.put(ev)
                         if ev.finished:
                             del self._queues[ev.request_id]
+
+    def _drain_locked(self) -> None:
+        """Wake any waiters blocked on in-flight requests (caller holds no
+        guarantee their request ever finishes once the loop stops).  A
+        synthesized finished/ABORT event terminates every consumer that
+        follows the stream-event contract."""
+        for rid, q in self._queues.items():
+            q.put(StreamEvent(rid, None, "", finished=True,
+                              finish_reason=FinishReason.ABORT))
+        self._queues.clear()
 
     def stop(self) -> None:
         with self._cv:

@@ -43,12 +43,26 @@ def make_handler(api: OpenAIServer):
                 self.send_response(200)
                 self.send_header("Content-Type", "text/event-stream")
                 self.end_headers()
-                for chunk in api.chat_completion_stream(body):
-                    self.wfile.write(b"data: " + json.dumps(chunk).encode()
-                                     + b"\n\n")
+                try:
+                    for chunk in api.chat_completion_stream(body):
+                        self.wfile.write(b"data: " + json.dumps(chunk).encode()
+                                         + b"\n\n")
+                except ValueError as e:
+                    # headers are gone: surface the error as an SSE event
+                    self.wfile.write(b"data: " + json.dumps(
+                        {"error": {"message": str(e),
+                                   "type": type(e).__name__}}).encode()
+                        + b"\n\n")
                 self.wfile.write(b"data: [DONE]\n\n")
             else:
-                self._send_json(api.chat_completion(body))
+                try:
+                    self._send_json(api.chat_completion(body))
+                except ValueError as e:
+                    # invalid request (e.g. PromptTooLongError, too many
+                    # stop tokens): a 400, not a dropped connection
+                    self._send_json({"error": {"message": str(e),
+                                               "type": type(e).__name__}},
+                                    400)
 
     return Handler
 

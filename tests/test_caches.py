@@ -2,6 +2,10 @@
 LRU byte budget, prefix-cache longest-match semantics vs a naive oracle,
 content-cache format independence."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(optional dev dep — see tests/README.md)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.content_cache import (ContentCache, EmbeddingEntry,

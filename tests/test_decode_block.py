@@ -1,0 +1,166 @@
+"""Device-resident block decode: equivalence with the per-token loop,
+host-sync accounting, on-device stop handling, and prompt-length guards."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import (FinishReason, PromptTooLongError, Request,
+                                SamplingParams)
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def _staggered(seed=0):
+    """Requests with different prompt lengths AND different budgets, so slots
+    freeze and retire at different sub-steps of a block."""
+    specs = [("a", 3), ("bb word", 9), ("much longer prompt here", 17),
+             ("mid size", 6), ("x" * 40, 12)]
+    return [Request(prompt_tokens=TOK.encode(p),
+                    sampling=SamplingParams(max_tokens=m))
+            for p, m in specs]
+
+
+def test_greedy_block_equals_per_request_single_step(cfg):
+    """Token-for-token: multi-step blocked engine vs per-request (batch=1)
+    single-step generation, staggered lengths/budgets."""
+    single = InferenceEngine(cfg, max_batch=1, cache_len=128,
+                             max_decode_block=1, enable_prefix_cache=False)
+    ref = single.generate(_staggered())
+    blocked = InferenceEngine(cfg, max_batch=4, cache_len=128,
+                              max_decode_block=8, enable_prefix_cache=False)
+    got = blocked.generate(_staggered())
+    for ra, rb in zip(ref, got):
+        assert ra.output_tokens == rb.output_tokens
+        assert ra.finish_reason == rb.finish_reason
+
+
+def test_block1_reproduces_single_step_engine_exactly(cfg):
+    """max_decode_block=1 must be the per-token engine: one host iteration
+    per generated token, and the same RNG split chain (so even sampled
+    outputs are deterministic for a fixed seed)."""
+    mk = lambda: InferenceEngine(cfg, max_batch=1, cache_len=128, seed=3,
+                                 max_decode_block=1,
+                                 enable_prefix_cache=False)
+    r1 = mk().generate([Request(prompt_tokens=TOK.encode("sample this"),
+                                sampling=SamplingParams(max_tokens=10,
+                                                        temperature=0.9))])
+    r2 = mk().generate([Request(prompt_tokens=TOK.encode("sample this"),
+                                sampling=SamplingParams(max_tokens=10,
+                                                        temperature=0.9))])
+    assert r1[0].output_tokens == r2[0].output_tokens
+
+    eng = mk()
+    reqs = eng.generate(_staggered())
+    toks = sum(r.num_generated for r in reqs)
+    # every decode token cost exactly one host-loop iteration
+    assert eng.scheduler.stats.steps == toks - len(reqs)
+    assert eng.scheduler.stats.device_steps == eng.scheduler.stats.steps
+
+
+def test_blocking_drops_host_iterations_by_about_k(cfg):
+    """scheduler.stats.steps (host syncs) must drop ~K with blocking on."""
+    K = 8
+    n_tok = 33
+    one = InferenceEngine(cfg, max_batch=1, cache_len=128, max_decode_block=1)
+    one.generate([Request(prompt_tokens=TOK.encode("count"),
+                          sampling=SamplingParams(max_tokens=n_tok))])
+    blk = InferenceEngine(cfg, max_batch=1, cache_len=128, max_decode_block=K)
+    blk.generate([Request(prompt_tokens=TOK.encode("count"),
+                          sampling=SamplingParams(max_tokens=n_tok))])
+    assert one.scheduler.stats.steps == n_tok - 1
+    # 32 decode tokens at K<=8: 8+8+8+4+2+1+1 >= ceil(32/8) blocks; allow the
+    # power-of-two tail but require ~K fewer host iterations overall
+    assert blk.scheduler.stats.steps <= (n_tok - 1) // K + 4
+    assert blk.scheduler.stats.tokens_generated == \
+        one.scheduler.stats.tokens_generated
+    assert blk.scheduler.stats.host_syncs_per_token <= 1.5 / K + 1e-9
+
+
+def test_on_device_stop_token_freezes_slot(cfg):
+    """A stop token sampled mid-block ends the request exactly there, with
+    no trailing tokens emitted (frozen-slot semantics)."""
+    base = Request(prompt_tokens=TOK.encode("find the stop"),
+                   sampling=SamplingParams(max_tokens=30))
+    ref = InferenceEngine(cfg, max_batch=1, cache_len=128, max_decode_block=1,
+                          enable_prefix_cache=False)
+    ref.generate([base])
+    assert len(base.output_tokens) >= 3
+    stop_tok = base.output_tokens[2]      # force a stop mid-stream
+
+    def with_stop():
+        return Request(prompt_tokens=TOK.encode("find the stop"),
+                       sampling=SamplingParams(max_tokens=30,
+                                               stop_token_ids=(stop_tok,)))
+    a = InferenceEngine(cfg, max_batch=1, cache_len=128, max_decode_block=1,
+                        enable_prefix_cache=False).generate([with_stop()])[0]
+    b = InferenceEngine(cfg, max_batch=1, cache_len=128, max_decode_block=16,
+                        enable_prefix_cache=False).generate([with_stop()])[0]
+    assert a.finish_reason == FinishReason.STOP
+    assert a.output_tokens == b.output_tokens == base.output_tokens[:3]
+
+
+def test_prefix_cache_published_state_matches_across_block_sizes(cfg):
+    """Masked frozen-slot cache writes: the KV state a blocked engine
+    publishes to the prefix cache must behave like the single-step one."""
+    prompt = TOK.encode("shared system prompt " * 5)
+    outs = []
+    for K in (1, 8):
+        eng = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                              prefix_block_size=8, max_decode_block=K)
+        a = Request(prompt_tokens=prompt,
+                    sampling=SamplingParams(max_tokens=7))
+        eng.generate([a])
+        b = Request(prompt_tokens=prompt,
+                    sampling=SamplingParams(max_tokens=7))
+        eng.generate([b])
+        assert b.cached_prefix_len > 0
+        outs.append((a.output_tokens, b.output_tokens))
+    assert outs[0] == outs[1]
+
+
+def test_prompt_too_long_raises_and_truncates(cfg):
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=64)
+    long_prompt = TOK.encode("y" * 200)
+    with pytest.raises(PromptTooLongError):
+        eng.add_request(Request(prompt_tokens=long_prompt,
+                                sampling=SamplingParams(max_tokens=4)))
+    tr = InferenceEngine(cfg, max_batch=1, cache_len=64,
+                         truncate_long_prompts=True)
+    r = Request(prompt_tokens=list(long_prompt),
+                sampling=SamplingParams(max_tokens=4))
+    tr.generate([r])
+    assert r.is_finished
+    assert len(r.prompt_tokens) == 64
+    assert r.metadata["truncated_prompt_from"] == len(long_prompt)
+
+
+def test_media_digest_stashed_and_reused_at_retire(monkeypatch):
+    """decode_media must run once per media item (admission), not again at
+    retire for the prefix-cache salt."""
+    import repro.core.engine as engine_mod
+    vcfg = get_config("qwen3-vl-toy")
+    calls = {"n": 0}
+    real = engine_mod.decode_media
+
+    def counting(payload):
+        calls["n"] += 1
+        return real(payload)
+
+    monkeypatch.setattr(engine_mod, "decode_media", counting)
+    eng = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                          vision_work_iters=1, prefix_block_size=4)
+    img = np.random.default_rng(0).integers(0, 255, (16, 16, 3),
+                                            dtype=np.uint8)
+    r = Request(prompt_tokens=TOK.encode("look at this"), images=[img],
+                sampling=SamplingParams(max_tokens=3))
+    eng.generate([r])
+    assert r.is_finished
+    assert r.media_set_digest is not None
+    assert calls["n"] == 1                 # admission only — retire reuses

@@ -1,4 +1,8 @@
 """Scheduler semantics (paper Algorithm 1) + property tests."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(optional dev dep — see tests/README.md)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.request import Request, SamplingParams

@@ -1,5 +1,9 @@
 """UTF-8-safe streaming (paper §3.2): never split a code point, lose no
 bytes, for arbitrary text and arbitrary chunking."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(optional dev dep — see tests/README.md)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.streaming import StreamDecoder, TokenStreamDecoder
