@@ -1,37 +1,52 @@
 """The inference engine: continuous batching + two-level caching (the paper's
-system, TPU-shaped), with a device-resident block-decode hot loop.
+system, TPU-shaped), with a device-resident block-decode hot loop and a
+chunked, batched, decode-overlapped admission pipeline.
 
 Flow per ``step()`` (paper Alg.1, loop body advancing K tokens per host
 iteration):
-  1. **Admit** pending requests into free decode slots.  Admission runs each
-     request's prefill: media pipeline (content-cache hits skip the encoder —
-     Alg.3), text/multimodal prefix-cache lookup (skips the forward pass for
-     cached tokens — Alg.2), then a bucketed, jit-compiled prefill that
-     produces the slot's KV/state cache and samples the first token.  The
-     whole admission *wave* then lands in the batch cache with one compiled
-     multi-slot scatter (``SlotKVPool.insert_many``) and one scatter into the
-     device-resident :class:`~repro.core.kv_cache.DecodeState`, instead of k
-     separate cache updates.
-  2. **Decode a block**: a single compiled ``decode_block`` runs K
-     decode+sample iterations inside ``jax.lax.scan`` — sampling, RNG
-     splitting, stop-token detection and budget accounting all happen
-     on-device.  A slot that samples a stop token or exhausts its budget is
-     frozen by an on-device finished-mask (masked cache writes, no position
-     advance) for the rest of the block.  The host syncs **once per K
-     tokens** (the ``np.asarray`` on the returned ``[K, B]`` token block)
-     instead of once per token; per-slot state never round-trips through
-     host numpy between tokens.  K is adaptive
-     (``scheduler.plan_decode_block``): bounded by the ``max_decode_block``
-     knob and the smallest remaining budget among active slots, and
-     collapsing to 1 while pending requests wait on free slots so admission
-     latency stays one token.
-  3. **Retire** finished requests at the block boundary; their prompt KV
-     state is published to the prefix cache (byte-budget LRU) and the slot
-     freed.  Frozen-slot cache writes are masked on-device, so the published
-     state is bit-identical to what the single-step engine would publish.
+  1. **Plan admissions**: pending requests bind to free decode slots.  Each
+     opens a *prefill job*: media pipeline (content-cache hits skip the
+     encoder — Alg.3), text/multimodal prefix-cache lookup (skips the
+     forward pass for cached tokens — Alg.2).  Jobs park in the scheduler's
+     chunk queue.
+  2. **Dispatch a decode block** (if any slot is live): a single compiled
+     ``decode_block`` runs K decode+sample iterations inside
+     ``jax.lax.scan`` — sampling, RNG splitting, stop-token detection and
+     budget accounting all happen on-device.  A slot that samples a stop
+     token or exhausts its budget is frozen by an on-device finished-mask
+     (masked cache writes, no position advance) for the rest of the block.
+     K is adaptive (``scheduler.plan_decode_block``): bounded by the
+     ``max_decode_block`` knob and the smallest remaining budget among
+     active slots, and collapsing to 1 while requests or prefill chunks are
+     waiting, so admission/TTFT latency stays one token.
+  3. **Dispatch a prefill wave** *before* blocking on the decode block's
+     token sync, so prefill compute hides behind the block's host-sync
+     window.  The wave packs every queued job's next chunk into right-padded
+     ``[k, bucket]`` batched forward passes (per-row length masks via
+     ``seq_valid``, per-row prefix-cache resume offsets via per-row
+     positions) — one compiled call per (bucket, rows, cross-cached) group
+     instead of k sequential batch=1 prefills.  Long prompts advance
+     ``prefill_chunk`` tokens per step (carrying KV/SSM state across
+     chunks), so an 8k-token prompt no longer monopolises the engine between
+     decode blocks; intermediate chunk boundaries publish to the prefix
+     cache so an identical prompt right behind reuses finished chunks.
+     Right-padding is fully masked (masked KV writes, identity SSM updates,
+     no MoE capacity use), so the final cache is **bit-identical** to a
+     monolithic unchunked prefill.
+  4. **Sync + emit**: the host syncs once per block (the ``np.asarray`` on
+     the returned ``[K, B]`` token block), emits/retires, then commits
+     completed prefills — one multi-slot cache scatter
+     (``SlotKVPool.insert_many``), one scatter into the device-resident
+     :class:`~repro.core.kv_cache.DecodeState`, and one batched first-token
+     sample for the whole wave.  Retired requests publish their prompt KV
+     state to the prefix cache (byte-budget LRU) and free the slot; frozen
+     -slot cache writes are masked on-device, so the published state is
+     bit-identical to what the single-step engine would publish.
 
-``max_decode_block=1`` reproduces the per-token engine exactly (same RNG
-split chain, same event order).  Greedy outputs are invariant to K.
+``max_decode_block=1`` reproduces the per-token engine exactly (same event
+order).  Greedy outputs are invariant to K, to ``prefill_chunk``, and to
+wave packing.  ``legacy_admission=True`` restores the pre-pipeline path
+(sequential blocking batch=1 prefills) as a benchmark baseline.
 
 Cost-structure fidelity to the paper's ablation (Table 4): the media
 pipeline always runs unless the *content* cache hits (so "KV-only" caching
@@ -41,6 +56,7 @@ skips prompt processing only (embeddings-only still pays it: 7.8x vs 19x).
 from __future__ import annotations
 
 import functools
+import logging
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -54,7 +70,8 @@ from repro.core.content_cache import (ContentCache, CrossKVEntry,
                                       EmbeddingEntry, content_hash,
                                       media_set_digest)
 from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
-                                 init_decode_state, select_cache_slots,
+                                 concat_cache_rows, init_decode_state,
+                                 select_cache_slots, slice_cache_row,
                                  tree_bytes)
 from repro.core.prefix_cache import TextPrefixCache
 from repro.core.request import (FinishReason, PromptTooLongError, Request,
@@ -67,7 +84,12 @@ from repro.serving.media import AudioEncoderStub, VisionEncoderStub, decode_medi
 from repro.serving.tokenizer import ByteTokenizer
 
 
+log = logging.getLogger("repro.engine")
+
+
 def _next_bucket(n: int, floor: int = 16) -> int:
+    """Smallest power-of-two bucket ≥ n (≥ floor) — prefill shapes come from
+    a small fixed set so compiled-variant churn stays bounded."""
     b = floor
     while b < n:
         b *= 2
@@ -82,6 +104,23 @@ class _Admission:
     single_cache: Any
     first_token: int
     ctx_valid: Optional[np.ndarray]      # [T] bool or None
+
+
+@dataclass
+class _PrefillJob:
+    """One request's prefill in flight: the slot is held, the partial cache
+    is carried across chunks outside the batch pool, and the job re-enters
+    the scheduler's chunk queue until the whole prompt is materialised."""
+    slot: int
+    req: Request
+    cache: Any                           # batch=1 cache pytree (partial)
+    consumed: int                        # prompt tokens materialised so far
+    embeds: Optional[np.ndarray]         # [1, T, De] media embeddings | None
+    ctx_valid: Optional[np.ndarray]      # [1, T] bool | None
+    cross_cached: bool                   # cross-KV restored from content cache
+    publish_xkv: bool                    # publish cross-KV after first chunk
+    t0: float                            # admission start (prefill_time)
+    partial_key: Optional[str] = None    # rolling chunk-boundary prefix entry
 
 
 class InferenceEngine:
@@ -108,6 +147,9 @@ class InferenceEngine:
         max_decode_block: int = 8,
         max_stop_tokens: int = 8,
         truncate_long_prompts: bool = False,
+        prefill_chunk: int = 512,
+        max_prefill_buckets: int = 6,
+        legacy_admission: bool = False,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -118,6 +160,11 @@ class InferenceEngine:
         self.max_decode_block = max(1, max_decode_block)
         self.max_stop_tokens = max_stop_tokens
         self.truncate_long_prompts = truncate_long_prompts
+        # admission pipeline knobs: chunk size for piecewise prefill (0 =
+        # monolithic), cap on distinct compiled prefill buckets, and the
+        # pre-pipeline sequential path as a benchmark baseline
+        self.prefill_chunk = max(0, prefill_chunk)
+        self.legacy_admission = legacy_admission
 
         # media geometry
         self.media_kind = ("vision" if cfg.vision is not None
@@ -156,6 +203,25 @@ class InferenceEngine:
                                        max_stop_tokens,
                                        jax.random.PRNGKey(seed + 1))
         self._streamers: Dict[int, TokenStreamDecoder] = {}
+        self._live_slots: set = set()        # slots committed to DecodeState
+
+        # power-of-two prefill buckets: cap the distinct compiled shapes by
+        # raising the smallest bucket (pad more, compile less).  Floor 32,
+        # not 16: XLA's CPU GEMM switches kernels below ~32 rows and the
+        # rounding differs, which would break the bit-identity of a short
+        # final chunk vs the same tokens inside a monolithic prefill.
+        self._bucket_cap = max(1, max_prefill_buckets)
+        b_max = _next_bucket(min(cache_len, self.prefill_chunk or cache_len),
+                             floor=32)
+        floor = 32
+        while floor < b_max and \
+                b_max.bit_length() - floor.bit_length() + 1 > self._bucket_cap:
+            floor *= 2
+        self._bucket_floor = min(floor, b_max)
+        # frozenset replaced wholesale on update: /stats handler threads may
+        # read it while the engine loop compiles a new bucket
+        self._seen_buckets: frozenset = frozenset()
+        self._dummy_single = None            # zero cache row for wave padding
 
         self._step_count = 0
         self._prefill_fns: Dict[Tuple, Any] = {}
@@ -204,17 +270,33 @@ class InferenceEngine:
 
         return decode_block
 
-    def _prefill_fn(self, bucket: int, cross_cached: bool):
-        key = (bucket, cross_cached)
+    def _plan_bucket(self, n: int) -> int:
+        return _next_bucket(n, floor=self._bucket_floor)
+
+    def _prefill_fn(self, bucket: int, rows: int, cross_cached: bool):
+        """Batched prefill for one wave group: k right-padded rows at one
+        bucket, each resuming at its own prefix offset (per-row positions)
+        with its own length mask (``seq_valid``)."""
+        key = (bucket, rows, cross_cached)
         if key in self._prefill_fns:
             return self._prefill_fns[key]
+        if bucket not in self._seen_buckets:
+            self._seen_buckets = self._seen_buckets | {bucket}
+            log.warning(
+                "compiling new prefill bucket=%d (%d/%d power-of-two "
+                "buckets; floor=%d) — chunked waves should settle into a "
+                "small fixed set of shapes",
+                bucket, len(self._seen_buckets), self._bucket_cap,
+                self._bucket_floor)
         model, media_kind = self.model, self.media_kind
 
-        # NOTE: no donation here — ``single_cache`` may alias an LRU-cached
-        # pytree (prefix/content cache hit); donating would corrupt the cache.
+        # NOTE: no donation here — cache rows may alias LRU-cached pytrees
+        # (prefix/content cache hit) or a chunk job's published partial
+        # state; donating would corrupt the cache.
         @jax.jit
-        def prefill(params, tokens, positions, single_cache, media, ctx_valid,
-                    last_idx):
+        def prefill(params, tokens, positions, single_caches, media,
+                    ctx_valid, seq_valid, last_idx):
+            cache = concat_cache_rows(single_caches)
             kw = {}
             if media_kind == "vision":
                 kw["image_embeds"] = media
@@ -223,11 +305,13 @@ class InferenceEngine:
                 kw["audio_frames"] = media
                 kw["ctx_valid"] = ctx_valid
             out = model.apply(params, tokens, mode="prefill",
-                              positions=positions, cache=single_cache,
-                              resume=True, cross_cached=cross_cached, **kw)
-            logits = jax.lax.dynamic_index_in_dim(out.logits[0], last_idx,
-                                                  axis=0, keepdims=False)
-            return logits, out.cache
+                              positions=positions, cache=cache,
+                              resume=True, cross_cached=cross_cached,
+                              seq_valid=seq_valid, **kw)
+            # per-row logits at each row's last real token
+            logits = jnp.take_along_axis(out.logits,
+                                         last_idx[:, None, None], axis=1)
+            return logits[:, 0], out.cache
 
         self._prefill_fns[key] = prefill
         return prefill
@@ -305,14 +389,28 @@ class InferenceEngine:
         return cache
 
     # ------------------------------------------------------------------ #
-    # admission: prefill one request (staged; committed per wave)
+    # admission pipeline: wave packing → chunk interleave → async overlap
     # ------------------------------------------------------------------ #
     def _split_rng(self) -> jax.Array:
         key, sub = jax.random.split(self.state.rng)
         self.state = self.state._replace(rng=key)
         return sub
 
-    def _prefill_request(self, slot: int, req: Request) -> _Admission:
+    def _plan_admissions(self) -> None:
+        """Alg.1 lines 3-6: bind pending requests to free slots and open a
+        prefill job per request (media pipeline + prefix-cache lookup run
+        here; all forward-pass work happens in the batched waves)."""
+        while (self.pool.num_free and self.scheduler.pending
+               and self.scheduler.num_active < self.scheduler.max_batch):
+            slot = self.pool.allocate()
+            admitted = self.scheduler.admit([slot])
+            if not admitted:
+                self.pool.free(slot)
+                break
+            _, req = admitted[0]
+            self.scheduler.enqueue_prefill(self._open_prefill(slot, req))
+
+    def _open_prefill(self, slot: int, req: Request) -> _PrefillJob:
         t0 = time.monotonic()
         tokens = list(req.prompt_tokens)
         assert tokens, "empty prompt"
@@ -341,49 +439,173 @@ class InferenceEngine:
                 single = self._inject_xkv(single, xkv_entry.xkv)
                 cross_cached = True
 
-        remaining = tokens[matched:]
-        bucket = _next_bucket(len(remaining))
-        if not self.cfg.sliding_window and \
-                matched + bucket > self.pool.cache_len:
-            # clamp: padding past the prompt must not ring-wrap over real KV
-            # (add_request guarantees the prompt itself fits)
-            bucket = self.pool.cache_len - matched
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :len(remaining)] = remaining
-        positions = (matched + np.arange(bucket, dtype=np.int32))[None]
+        return _PrefillJob(
+            slot=slot, req=req, cache=single, consumed=matched,
+            embeds=embeds, ctx_valid=ctx_valid, cross_cached=cross_cached,
+            publish_xkv=(set_digest is not None
+                         and self.content_cache is not None
+                         and not cross_cached),
+            t0=t0)
 
-        fn = self._prefill_fn(bucket, cross_cached)
-        logits, new_single = fn(
-            self.params, jnp.asarray(toks), jnp.asarray(positions), single,
-            jnp.asarray(embeds) if embeds is not None else None,
-            jnp.asarray(ctx_valid) if ctx_valid is not None else None,
-            len(remaining) - 1)
+    def _dummy_row(self):
+        """Zero cache row padding a wave to a power-of-two row count (never
+        donated, never inserted — safe to share across waves)."""
+        if self._dummy_single is None:
+            self._dummy_single = self.pool.single_cache_zeros()
+        return self._dummy_single
 
-        # publish cross-KV for future identical media sets
-        if (set_digest is not None and self.content_cache is not None
-                and not cross_cached):
-            xkv = self._extract_xkv(new_single)
-            self.content_cache.put_cross_kv(
-                set_digest, CrossKVEntry(xkv, self.ctx_len, tree_bytes(xkv)))
+    def _dispatch_prefill_wave(self) -> List[Tuple[_PrefillJob, jax.Array]]:
+        """Advance every queued prefill job by one chunk.
 
-        # sample the first token
+        Jobs are grouped by (bucket, cross_cached) and each group runs one
+        right-padded ``[k, bucket]`` compiled forward pass; row counts pad to
+        a power of two so waves reuse a bounded set of compiled shapes.
+        Returns (job, logits_row) for jobs whose prompt is now fully
+        materialised; unfinished jobs re-enter the chunk queue.  All device
+        work here is dispatched asynchronously — the caller decides when to
+        block (after the in-flight decode block's token sync).
+        """
+        jobs = self.scheduler.pop_prefill_wave()
+        if not jobs:
+            return []
+
+        groups: Dict[Tuple[int, bool], List[Tuple[_PrefillJob, int]]] = {}
+        for job in jobs:
+            remaining = len(job.req.prompt_tokens) - job.consumed
+            take = (remaining
+                    if self.prefill_chunk == 0 or self.legacy_admission
+                    else min(self.prefill_chunk, remaining))
+            # every chunk must fit the KV ring: cap ``take`` (oversized
+            # sliding-window prompts auto-chunk) and clamp the bucket to
+            # cache_len so one row's slot indices stay distinct mod
+            # cache_len.  Padding that merely wraps is harmless (the masked
+            # scatter restores those cells), but two writes in one call must
+            # never collide — with a non-power-of-two cache_len the pow2
+            # bucket could exceed the ring and alias real prompt cells.
+            take = min(take, self.pool.cache_len)
+            bucket = min(self._plan_bucket(take), self.pool.cache_len)
+            groups.setdefault((bucket, job.cross_cached),
+                              []).append((job, take))
+
+        completed: List[Tuple[_PrefillJob, jax.Array]] = []
+        for (bucket, cross_cached), rows in groups.items():
+            batches = ([[r] for r in rows] if self.legacy_admission
+                       else [rows])
+            for batch in batches:
+                completed.extend(
+                    self._run_wave_group(bucket, cross_cached, batch))
+        return completed
+
+    def _run_wave_group(self, bucket: int, cross_cached: bool,
+                        rows: List[Tuple[_PrefillJob, int]]
+                        ) -> List[Tuple[_PrefillJob, jax.Array]]:
+        k = len(rows)
+        kp = 1 << (k - 1).bit_length()               # pad rows to power of two
+        toks = np.zeros((kp, bucket), np.int32)
+        # dummy rows keep distinct positions so their (masked, no-op) cache
+        # scatter never writes duplicate indices
+        poss = np.broadcast_to(np.arange(bucket, dtype=np.int32),
+                               (kp, bucket)).copy()
+        valid = np.zeros((kp, bucket), bool)
+        last_idx = np.zeros((kp,), np.int32)
+        singles = []
+        for i, (job, take) in enumerate(rows):
+            seg = job.req.prompt_tokens[job.consumed:job.consumed + take]
+            toks[i, :take] = seg
+            poss[i] = job.consumed + np.arange(bucket, dtype=np.int32)
+            valid[i, :take] = True
+            last_idx[i] = take - 1
+            singles.append(job.cache)
+        singles.extend(self._dummy_row() for _ in range(kp - k))
+
+        media = ctxv = None
+        if self.media_kind != "none":
+            zero_e = np.zeros((1, self.ctx_len, self.embed_dim), np.float32)
+            zero_v = np.zeros((1, self.ctx_len), bool)
+            media = np.concatenate([job.embeds for job, _ in rows]
+                                   + [zero_e] * (kp - k), axis=0)
+            ctxv = np.concatenate([job.ctx_valid for job, _ in rows]
+                                  + [zero_v] * (kp - k), axis=0)
+
+        fn = self._prefill_fn(bucket, kp, cross_cached)
+        logits, out_cache = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(poss),
+            tuple(singles),
+            jnp.asarray(media) if media is not None else None,
+            jnp.asarray(ctxv) if ctxv is not None else None,
+            jnp.asarray(valid), jnp.asarray(last_idx))
+        stats = self.scheduler.stats
+        stats.prefill_waves += 1
+        stats.prefill_chunks += k
+
+        done: List[Tuple[_PrefillJob, jax.Array]] = []
+        for i, (job, take) in enumerate(rows):
+            job.cache = slice_cache_row(out_cache, i)
+            job.consumed += take
+
+            # publish cross-KV for future identical media sets (the first
+            # chunk fully materialises every layer's xk/xv)
+            if job.publish_xkv:
+                xkv = self._extract_xkv(job.cache)
+                self.content_cache.put_cross_kv(
+                    job.req.media_set_digest,
+                    CrossKVEntry(xkv, self.ctx_len, tree_bytes(xkv)))
+                job.publish_xkv = False
+
+            if job.consumed >= len(job.req.prompt_tokens):
+                done.append((job, logits[i]))
+                continue
+            # Alg.2, per chunk: publish the partial prefix so an identical
+            # long prompt arriving behind us resumes from finished chunks
+            # instead of re-prefilling them.  Rolling: each boundary
+            # replaces the job's previous entry, so one in-flight prompt
+            # holds at most one partial cache in the byte budget.
+            if (self.prefix_cache is not None
+                    and job.consumed >= self.prefix_cache.block_size):
+                salt = (bytes.fromhex(job.req.media_set_digest)
+                        if job.req.media_set_digest else b"")
+                prefix = job.req.prompt_tokens[:job.consumed]
+                new_key = self.prefix_cache.key_for(prefix, salt=salt)
+                self.prefix_cache.insert(
+                    prefix, {"cache": job.cache, "len": job.consumed},
+                    tree_bytes(job.cache), salt=salt)
+                if job.partial_key and job.partial_key != new_key:
+                    self.prefix_cache.discard(job.partial_key)
+                job.partial_key = new_key
+            self.scheduler.enqueue_prefill(job)
+        return done
+
+    def _commit_jobs(self, completed: List[Tuple[_PrefillJob, jax.Array]]
+                     ) -> List[StreamEvent]:
+        """Sample first tokens for the finished wave (one batched call, one
+        host sync) and land the admissions in pool + decode state."""
+        if not completed:
+            return []
+        jobs = [j for j, _ in completed]
+        logits = jnp.stack([lg for _, lg in completed])          # [k, V]
         sub = self._split_rng()
-        first = int(sample_tokens(logits[None], sub,
-                                  jnp.asarray([req.sampling.temperature]),
-                                  top_k=self.top_k, top_p=self.top_p)[0])
+        temps = jnp.asarray([j.req.sampling.temperature for j in jobs],
+                            jnp.float32)
+        firsts = np.asarray(sample_tokens(logits, sub, temps,
+                                          top_k=self.top_k, top_p=self.top_p))
         now = time.monotonic()
-        req.prefill_time = now - t0
-        req.first_token_time = now
-        req.output_tokens.append(first)
-
-        return _Admission(slot, req, new_single, first,
-                          None if ctx_valid is None else ctx_valid[0])
+        wave = []
+        for job, first in zip(jobs, firsts):
+            req = job.req
+            req.prefill_time = now - job.t0
+            req.first_token_time = now
+            req.output_tokens.append(int(first))
+            wave.append(_Admission(
+                job.slot, req, job.cache, int(first),
+                None if job.ctx_valid is None else job.ctx_valid[0]))
+        return self._commit_admissions(wave)
 
     def _commit_admissions(self, wave: List[_Admission]) -> List[StreamEvent]:
         """Land an admission wave: one compiled cache scatter, one decode-state
         scatter, then per-request stream/finish bookkeeping."""
         self.pool.insert_many([a.slot for a in wave],
                               [a.single_cache for a in wave])
+        self._live_slots.update(a.slot for a in wave)
         events: List[StreamEvent] = []
         for a in wave:
             self._streamers[a.req.request_id] = TokenStreamDecoder(self.tokenizer)
@@ -449,6 +671,7 @@ class InferenceEngine:
                                      tree_bytes(single), salt=salt)
         self.scheduler.retire(slot)
         self.pool.free(slot)
+        self._live_slots.discard(slot)
 
     # ------------------------------------------------------------------ #
     # public API
@@ -470,55 +693,68 @@ class InferenceEngine:
         self.scheduler.add(req)
 
     def step(self) -> List[StreamEvent]:
-        """One scheduler iteration (paper Alg.1 loop body, K tokens)."""
+        """One scheduler iteration (paper Alg.1 loop body, K tokens).
+
+        Async overlap: the decode block is dispatched first, the prefill
+        wave's device work second, and only *then* does the host block on
+        the decode block's token sync — so wave compute executes behind the
+        host-sync window instead of stalling the decode loop.
+        """
         events: List[StreamEvent] = []
 
-        # 1. admit at the token boundary — one batched wave
-        wave: List[_Admission] = []
-        while (self.pool.num_free and self.scheduler.pending
-               and self.scheduler.num_active < self.scheduler.max_batch):
-            slot = self.pool.allocate()
-            admitted = self.scheduler.admit([slot])
-            if not admitted:
-                self.pool.free(slot)
-                break
-            _, req = admitted[0]
-            wave.append(self._prefill_request(slot, req))
-        if wave:
-            events.extend(self._commit_admissions(wave))
+        # 1. bind pending requests to slots; open prefill jobs
+        self._plan_admissions()
 
-        if not self.scheduler.active:
-            return events
+        if self.legacy_admission:
+            # pre-pipeline baseline: sequential batch=1 prefills, committed
+            # (blocking) before the decode block is dispatched
+            events.extend(self._commit_jobs(self._dispatch_prefill_wave()))
 
-        # 2. one compiled block of K decode steps for the whole batch
-        num_steps = self.scheduler.plan_decode_block(self.max_decode_block)
-        cache, state, toks = self._decode_block_fn(
-            self.params, self.pool.cache, self.state, num_steps=num_steps)
-        self.pool.cache = cache
-        self.state = state
-        block = np.asarray(toks)                  # [K, B]: the block's one sync
-        self._step_count += 1
-        self.scheduler.stats.steps += 1
-        self.scheduler.stats.device_steps += num_steps
+        # 2. dispatch one compiled block of K decode steps (no host block
+        # yet); K collapses to 1 while requests or chunks wait
+        block_plan = None
+        if self._live_slots:
+            num_steps = self.scheduler.plan_decode_block(self.max_decode_block)
+            cache, state, toks = self._decode_block_fn(
+                self.params, self.pool.cache, self.state,
+                num_steps=num_steps)
+            self.pool.cache = cache
+            self.state = state
+            block_plan = (num_steps, toks)
 
-        # 3. emit + retire, consuming the token block step-major
-        live = dict(self.scheduler.active)
-        for k in range(num_steps):
-            for slot in sorted(live):
-                req = live[slot]
-                if req.is_finished:
-                    continue
-                tok = int(block[k, slot])
-                if tok < 0:
-                    # frozen-slot sentinel: the device finish-mask fired but
-                    # the host hasn't (belt and braces — the two conditions
-                    # are equivalent by construction)
-                    continue
-                req.output_tokens.append(tok)
-                self.scheduler.stats.tokens_generated += 1
-                text = self._streamers[req.request_id].push_token(tok)
-                events.append(StreamEvent(req.request_id, tok, text))
-                events.extend(self._maybe_finish(slot, req, tok))
+        # 3. dispatch the prefill wave behind the in-flight decode block
+        completed: List[Tuple[_PrefillJob, jax.Array]] = []
+        if not self.legacy_admission:
+            completed = self._dispatch_prefill_wave()
+
+        # 4. sync the token block; emit + retire step-major
+        if block_plan is not None:
+            num_steps, toks = block_plan
+            block = np.asarray(toks)              # [K, B]: the block's one sync
+            self._step_count += 1
+            self.scheduler.stats.steps += 1
+            self.scheduler.stats.device_steps += num_steps
+            live = {s: r for s, r in self.scheduler.active.items()
+                    if s in self._live_slots}
+            for k in range(num_steps):
+                for slot in sorted(live):
+                    req = live[slot]
+                    if req.is_finished:
+                        continue
+                    tok = int(block[k, slot])
+                    if tok < 0:
+                        # frozen-slot sentinel: the device finish-mask fired
+                        # but the host hasn't (belt and braces — the two
+                        # conditions are equivalent by construction)
+                        continue
+                    req.output_tokens.append(tok)
+                    self.scheduler.stats.tokens_generated += 1
+                    text = self._streamers[req.request_id].push_token(tok)
+                    events.append(StreamEvent(req.request_id, tok, text))
+                    events.extend(self._maybe_finish(slot, req, tok))
+
+        # 5. land finished prefills (next block picks the new slots up)
+        events.extend(self._commit_jobs(completed))
         return events
 
     def run(self) -> List[StreamEvent]:

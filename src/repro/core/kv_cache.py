@@ -159,6 +159,36 @@ def _insert_slots(batch_cache, single_caches, slots: jax.Array):
     return out
 
 
+def concat_cache_rows(singles: Sequence[Any]):
+    """Concatenate k batch=1 cache pytrees into one [k, ...] cache.
+
+    Used *inside* the engine's jitted batched-prefill entry point so a wave
+    of k admissions runs one [k, bucket] forward pass instead of k batch=1
+    passes; the structure mirrors :func:`_insert_slots` (prefix leaves batch
+    on axis 0, stacked block leaves on axis 1)."""
+    first = singles[0]
+    out = {"prefix": [
+        jax.tree.map(lambda *ones: jnp.concatenate(ones, axis=0),
+                     *[s["prefix"][i] for s in singles])
+        for i in range(len(first["prefix"]))
+    ]}
+    out["block"] = (jax.tree.map(lambda *ones: jnp.concatenate(ones, axis=1),
+                                 *[s["block"] for s in singles])
+                    if first.get("block") is not None else None)
+    return out
+
+
+def slice_cache_row(cache, row: int):
+    """Extract one row of a [k, ...] prefill-output cache as a batch=1
+    pytree.  Dispatched eagerly (lazy device slices, no host sync) — the
+    engine uses it to hand each prefill-wave row back to its chunk job."""
+    out = {"prefix": [jax.tree.map(lambda a: a[row:row + 1], bp)
+                      for bp in cache["prefix"]]}
+    out["block"] = (jax.tree.map(lambda a: a[:, row:row + 1], cache["block"])
+                    if cache.get("block") is not None else None)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("slot",))
 def _read_slot(batch_cache, *, slot: int):
     def rd_prefix(full):

@@ -76,6 +76,12 @@ class LRUCache:
             if self._on_evict:
                 self._on_evict(key, value)
 
+    def discard(self, key: str) -> None:
+        """Drop an entry if present (no eviction callback, no stats)."""
+        entry = self._store.pop(key, None)
+        if entry is not None:
+            self._bytes -= entry[1]
+
     def keys(self) -> Iterator[str]:
         return iter(self._store.keys())
 

@@ -77,3 +77,19 @@ class TextPrefixCache:
             return 0
         self._lru.put(chain[-1].hex(), value, nbytes)
         return len(chain) * self.block_size
+
+    # ------------------------------------------------------------------ #
+    # rolling partial publication (chunked prefill)
+    # ------------------------------------------------------------------ #
+    def key_for(self, tokens: Sequence[int], *, salt: bytes = b""
+                ) -> Optional[str]:
+        """The LRU key :meth:`insert` would store ``tokens`` under (None if
+        shorter than one block).  The chunked-prefill engine uses this to
+        *replace* a job's previous chunk-boundary entry instead of letting
+        every boundary pile a full-size cache into the byte budget."""
+        chain = self._chain(tokens, salt)
+        return chain[-1].hex() if chain else None
+
+    def discard(self, key: str) -> None:
+        """Drop a previously inserted entry (superseded partial prefix)."""
+        self._lru.discard(key)

@@ -5,12 +5,20 @@ generate one token for every active request; retire completed requests
 immediately.  On TPU the batch is a fixed set of ``max_batch`` slots (static
 shapes — DESIGN.md §2); admission binds a request to a free slot, retirement
 frees it.  The scheduler owns request bookkeeping only — the engine owns the
-compiled step functions and cache pool."""
+compiled step functions and cache pool.
+
+Beyond Alg.1, the scheduler owns the *prefill chunk queue*: a request whose
+prompt is split into fixed-size prefill chunks parks a chunk job here between
+engine steps, and :meth:`plan_decode_block` collapses the decode block to one
+token while any chunk (or pending request) is waiting — the interleave policy
+that keeps TTFT flat while long prompts prefill piecewise behind in-flight
+decode blocks."""
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 from repro.core.request import Request
 
@@ -23,6 +31,8 @@ class SchedulerStats:
     device_steps: int = 0        # decode iterations run on-device (sum of K)
     tokens_generated: int = 0
     peak_batch: int = 0
+    prefill_waves: int = 0       # batched prefill dispatches (≥1 row each)
+    prefill_chunks: int = 0      # chunk forward passes (= rows) in the waves
 
     @property
     def host_syncs_per_token(self) -> float:
@@ -30,12 +40,20 @@ class SchedulerStats:
         single-step engine; ~1/K with block decode)."""
         return self.steps / max(self.tokens_generated, 1)
 
+    @property
+    def rows_per_wave(self) -> float:
+        """Mean admission-wave width (1.0 = the sequential pre-wave path)."""
+        return self.prefill_chunks / max(self.prefill_waves, 1)
+
 
 class ContinuousBatchingScheduler:
     def __init__(self, max_batch: int):
         self.max_batch = max_batch
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}       # slot -> request
+        # prefill chunk jobs (opaque engine payloads) waiting for their next
+        # chunk forward pass; FIFO, one chunk per job per engine step
+        self.chunk_queue: Deque[Any] = deque()
         self.stats = SchedulerStats()
 
     # ------------------------------------------------------------------ #
@@ -62,17 +80,39 @@ class ContinuousBatchingScheduler:
         self.stats.retired += 1
         return req
 
+    # ------------------------------------------------------------------ #
+    # prefill chunk queue (batched/chunked admission pipeline)
+    # ------------------------------------------------------------------ #
+    def enqueue_prefill(self, job: Any) -> None:
+        """Park a prefill chunk job until the engine's next wave dispatch."""
+        self.chunk_queue.append(job)
+
+    def pop_prefill_wave(self) -> List[Any]:
+        """Drain the chunk queue for one wave (every in-flight job advances
+        one chunk per engine step; FIFO order is preserved across waves
+        because unfinished jobs re-enqueue in pop order)."""
+        wave = list(self.chunk_queue)
+        self.chunk_queue.clear()
+        return wave
+
+    @property
+    def has_prefill_work(self) -> bool:
+        return bool(self.chunk_queue)
+
     def plan_decode_block(self, max_block: int) -> int:
         """Adaptive decode-block size K (tokens generated per host sync).
 
-        K collapses to 1 while requests are waiting on free slots, so a
-        retire is noticed (and the slot re-admitted) at the next token
-        boundary — admission latency never grows with blocking.  Otherwise
-        K is bounded by the smallest remaining token budget across active
-        slots (finished slots would just burn masked decode steps) and by
-        ``max_block``, rounded down to a power of two so the engine compiles
-        at most log2(max_block)+1 block variants."""
-        if max_block <= 1 or self.pending or not self.active:
+        K collapses to 1 while requests are waiting on free slots — or while
+        prefill chunks are queued — so a retire is noticed (and the slot
+        re-admitted) at the next token boundary, and a chunked prompt gets a
+        prefill chunk between every pair of decode tokens: admission / TTFT
+        latency never grows with blocking.  Otherwise K is bounded by the
+        smallest remaining token budget across active slots (finished slots
+        would just burn masked decode steps) and by ``max_block``, rounded
+        down to a power of two so the engine compiles at most
+        log2(max_block)+1 block variants."""
+        if max_block <= 1 or self.pending or self.chunk_queue \
+                or not self.active:
             return 1
         rem = min(r.sampling.max_tokens - r.num_generated
                   for r in self.active.values())
@@ -80,9 +120,48 @@ class ContinuousBatchingScheduler:
         return 1 << (k.bit_length() - 1)
 
     # ------------------------------------------------------------------ #
+    # observability
+    # ------------------------------------------------------------------ #
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (FIFO starvation surface)."""
+        return len(self.pending)
+
+    @property
+    def oldest_wait_s(self) -> float:
+        """Age of the oldest pending request (0.0 with an empty queue).
+        Read from HTTP handler threads while the engine loop pops the
+        queue, so the head access must tolerate a concurrent drain."""
+        try:
+            head = self.pending[0]
+        except IndexError:
+            return 0.0
+        return max(0.0, time.monotonic() - head.arrival_time)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Point-in-time stats dict for the server's ``/stats`` endpoint."""
+        s = self.stats
+        return {
+            "queue_depth": self.queue_depth,
+            "oldest_wait_s": self.oldest_wait_s,
+            "active": len(self.active),
+            "prefill_chunks_queued": len(self.chunk_queue),
+            "admitted": s.admitted,
+            "retired": s.retired,
+            "steps": s.steps,
+            "device_steps": s.device_steps,
+            "tokens_generated": s.tokens_generated,
+            "peak_batch": s.peak_batch,
+            "prefill_waves": s.prefill_waves,
+            "prefill_chunks": s.prefill_chunks,
+            "rows_per_wave": s.rows_per_wave,
+            "host_syncs_per_token": s.host_syncs_per_token,
+        }
+
+    # ------------------------------------------------------------------ #
     @property
     def has_work(self) -> bool:
-        return bool(self.pending or self.active)
+        return bool(self.pending or self.active or self.chunk_queue)
 
     @property
     def num_active(self) -> int:

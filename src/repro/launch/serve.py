@@ -27,6 +27,13 @@ def main() -> None:
     ap.add_argument("--no-content-cache", action="store_true")
     ap.add_argument("--max-decode-block", type=int, default=8,
                     help="decode tokens per host sync (1 = per-token loop)")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="prompt tokens prefilled per engine step "
+                         "(0 = monolithic prefill; smaller = flatter TTFT "
+                         "under long-prompt load)")
+    ap.add_argument("--max-prefill-buckets", type=int, default=6,
+                    help="cap on distinct compiled prefill bucket shapes "
+                         "(smaller = more padding, less compile churn)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,10 +44,14 @@ def main() -> None:
         cfg, max_batch=args.max_batch, cache_len=args.cache_len,
         seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
         enable_content_cache=not args.no_content_cache,
-        max_decode_block=args.max_decode_block)
-    server = ApiServer(OpenAIServer(engine, cfg.name), port=args.port)
+        max_decode_block=args.max_decode_block,
+        prefill_chunk=args.prefill_chunk,
+        max_prefill_buckets=args.max_prefill_buckets)
+    server = ApiServer(OpenAIServer(engine, cfg.name, threaded=True),
+                       port=args.port)
     server.start()
-    print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions")
+    print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions "
+          f"(stats: /stats)")
     try:
         while True:
             time.sleep(3600)

@@ -125,6 +125,7 @@ def apply_self_attn(
     window: int = 0,
     attn_schedule: str = "full",
     resume: bool = False,            # prefill continues from cached tokens
+    seq_valid: Optional[jax.Array] = None,   # [B, S] prefix mask (padding off)
 ) -> Tuple[jax.Array, Optional[Params]]:
     b, s, _ = x.shape
     h = rmsnorm(x, p["ln"], cfg.rms_eps)
@@ -133,13 +134,23 @@ def apply_self_attn(
     k = apply_rope(k, positions, cfg.rope_theta)
 
     if mode == "prefill" and resume:
-        # continuation after a prefix-cache hit: append new KV to the cache,
-        # then attend over the whole cache with absolute query positions —
-        # new tokens see the cached prefix (no ring wrap in engine caches).
+        # continuation after a prefix-cache hit or an earlier prefill chunk:
+        # append new KV to the cache, then attend over the whole cache with
+        # absolute query positions — new tokens see the cached prefix (no
+        # ring wrap in engine caches).  Per-row slot indices support batched
+        # prefill waves where every row sits at a different resume offset;
+        # ``seq_valid`` rows write their cells back unchanged, so
+        # right-padding leaves no trace in the cache (the final cache is
+        # bit-identical however the prompt was bucketed or chunked).
         sc = cache["k"].shape[1]
-        slots = (positions[0] % sc).astype(jnp.int32)                   # [S]
-        kc = cache["k"].at[:, slots].set(k)
-        vc = cache["v"].at[:, slots].set(v)
+        bidx = jnp.arange(b)[:, None]
+        slots = (positions % sc).astype(jnp.int32)                      # [B,S]
+        if seq_valid is not None:
+            keep = seq_valid[..., None, None]
+            k = jnp.where(keep, k, cache["k"][bidx, slots])
+            v = jnp.where(keep, v, cache["v"][bidx, slots])
+        kc = cache["k"].at[bidx, slots].set(k)
+        vc = cache["v"].at[bidx, slots].set(v)
         out = ops.flash_attention(q, kc, vc, causal=True, window=window,
                                   q_positions=positions)
         out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
@@ -252,9 +263,16 @@ def init_moe(key, cfg: ModelConfig) -> Params:
     return p
 
 
-def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig,
+              seq_valid: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, jax.Array]:
-    """x: [B, S, D] -> (y, aux_load_balance_loss)."""
+    """x: [B, S, D] -> (y, aux_load_balance_loss).
+
+    ``seq_valid`` [B, S] routes right-padding tokens to the trash slot and
+    keeps them out of the capacity cumsum, so padding never displaces a real
+    token from an expert.  (With ``capacity_factor > 0`` the *cap itself*
+    still depends on the static call shape, so capacity-dropping MoE is
+    exact only in no-drop mode — the tests/exactness configuration.)"""
     m = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -276,10 +294,15 @@ def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig
     aux = e * jnp.sum(frac * probs.mean(0)) * m.load_balance_coef
 
     onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32).reshape(t * k, e)
+    if seq_valid is not None:
+        tok_valid = jnp.repeat(seq_valid.reshape(t), k)                 # [T*k]
+        onehot = onehot * tok_valid[:, None].astype(onehot.dtype)
     pos = jnp.cumsum(onehot, axis=0) - onehot
     my_pos = jnp.sum(pos * onehot, axis=-1)                             # [T*k]
     expert = idx.reshape(t * k)
     keep = my_pos < cap
+    if seq_valid is not None:
+        keep = keep & tok_valid
     slot = jnp.where(keep, expert * cap + my_pos, e * cap)              # drop → trash
 
     xr = jnp.broadcast_to(flat[:, None], (t, k, d)).reshape(t * k, d)
@@ -334,9 +357,13 @@ def init_ssm(key, cfg: ModelConfig) -> Params:
 
 
 def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+                 state: Optional[jax.Array],
+                 lengths: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
     """Depthwise causal conv1d.  xbc [B,S,C]; w [W,C]; returns (out, new_state
-    [B, W-1, C] = trailing inputs)."""
+    [B, W-1, C] = trailing inputs).  ``lengths`` [B] gathers each row's carry
+    window ending at its last *valid* input instead of the physical tail, so
+    right-padded rows carry exactly the state an unpadded run would."""
     width = w.shape[0]
     if state is None:
         pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
@@ -345,7 +372,11 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
     xp = jnp.concatenate([pad, xbc], axis=1)                            # [B,S+W-1,C]
     out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None]
               for i in range(width))
-    new_state = xp[:, xp.shape[1] - (width - 1):]
+    if lengths is None:
+        new_state = xp[:, xp.shape[1] - (width - 1):]
+    else:
+        idx = lengths[:, None] + jnp.arange(width - 1)[None, :]         # [B,W-1]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return jax.nn.silu(out + b[None, None]), new_state
 
 
@@ -357,6 +388,7 @@ def apply_ssm(
     mode: str,
     cache: Optional[Params] = None,  # {'conv': [B,W-1,Dc], 'state': [B,H,P,N]}
     resume: bool = False,            # prefill continues from cached state
+    seq_valid: Optional[jax.Array] = None,   # [B, S] prefix mask (padding off)
 ) -> Tuple[jax.Array, Optional[Params]]:
     ssm = cfg.ssm
     b, s, d = x.shape
@@ -371,12 +403,20 @@ def apply_ssm(
     dt_raw = zxbcdt[..., d_in + d_conv:]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + p["dt_bias"][None, None, :])
+    if seq_valid is not None:
+        # padded steps become identity updates: decay exp(a*0)=1 and a zero
+        # dt-weighted input (the same trick ops.ssd plays for its own tail),
+        # so the carried SSM state never sees right-padding
+        dt = jnp.where(seq_valid[..., None], dt, 0.0)
     a = -jnp.exp(p["a_log"])
 
     conv_state = cache["conv"] if cache is not None else None
     use_state = mode == "decode" or (mode == "prefill" and resume)
+    lengths = (seq_valid.sum(-1).astype(jnp.int32)
+               if seq_valid is not None else None)
     xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
-                                 conv_state if use_state else None)
+                                 conv_state if use_state else None,
+                                 lengths=lengths)
     x_ssm = xbc[..., :d_in].reshape(b, s, nheads, pdim)
     b_mat = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
     c_mat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
@@ -443,6 +483,7 @@ def apply_layer(
     resume: bool = False,
     cross_cached: bool = False,
     ctx_valid: Optional[jax.Array] = None,
+    seq_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -451,7 +492,8 @@ def apply_layer(
         sub = {k: cache[k] for k in ("k", "v")} if cache else None
         x, c = apply_self_attn(p["attn"], x, cfg=cfg, mode=mode,
                                positions=positions, cache=sub, window=window,
-                               attn_schedule=attn_schedule, resume=resume)
+                               attn_schedule=attn_schedule, resume=resume,
+                               seq_valid=seq_valid)
         if c:
             new_cache.update(c)
     if "cross" in p and kind != "xattn":    # audio decoder cross-attn
@@ -471,11 +513,11 @@ def apply_layer(
     if "ssm" in p:
         sub = {k: cache[k] for k in ("conv", "state")} if cache else None
         x, c = apply_ssm(p["ssm"], x, cfg=cfg, mode=mode, cache=sub,
-                         resume=resume)
+                         resume=resume, seq_valid=seq_valid)
         if c:
             new_cache.update(c)
     if "moe" in p:
-        x, aux = apply_moe(p["moe"], x, cfg)
+        x, aux = apply_moe(p["moe"], x, cfg, seq_valid=seq_valid)
     elif "ffn" in p:
         h = rmsnorm(x, p["ffn_ln"], cfg.rms_eps)
         out = apply_mlp(p["ffn"], h)

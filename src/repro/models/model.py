@@ -148,6 +148,11 @@ class Model:
         resume: bool = False,            # prefill continues past cached tokens
         cross_cached: bool = False,      # content-cache hit: xk/xv from cache
         ctx_valid: Optional[jax.Array] = None,      # [B, T_ctx] media liveness
+        seq_valid: Optional[jax.Array] = None,      # [B, S] token liveness —
+                                         # right-padding mask for batched /
+                                         # chunked prefill (masked KV writes,
+                                         # identity SSM updates, no MoE
+                                         # capacity use)
         logits_mode: str = "full",       # 'full' | 'last' (prefill: last only)
         unroll_scan: bool = False,       # python loop instead of lax.scan —
                                          # exact XLA cost_analysis (which
@@ -183,7 +188,8 @@ class Model:
                 params["prefix_layers"][i], kind, x, cfg=cfg, mode=mode,
                 positions=positions, cache=sub, window=window_eff,
                 context=context, attn_schedule=attn_schedule,
-                resume=resume, cross_cached=cross_cached, ctx_valid=ctx_valid)
+                resume=resume, cross_cached=cross_cached, ctx_valid=ctx_valid,
+                seq_valid=seq_valid)
             new_prefix_caches.append(c)
             aux_total += aux
 
@@ -198,7 +204,7 @@ class Model:
                     positions=positions, cache=sub, window=window_eff,
                     context=context, attn_schedule=attn_schedule,
                     resume=resume, cross_cached=cross_cached,
-                    ctx_valid=ctx_valid)
+                    ctx_valid=ctx_valid, seq_valid=seq_valid)
                 if c is not None:
                     c_out[f"pos{i}"] = c
                 aux_g += aux

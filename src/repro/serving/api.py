@@ -126,6 +126,31 @@ class OpenAIServer:
                     if ev.request_id == req.request_id:
                         yield chunk(ev)
 
+    def stats(self) -> Dict[str, Any]:
+        """Serving observability (``GET /stats``): scheduler queue depth and
+        wait age (FIFO starvation surface), decode-block and admission
+        -pipeline counters, and the engine's prefill knobs — the signals the
+        prefill/decode overlap work is judged by in production."""
+        eng = self.engine
+        out = self.engine.scheduler.snapshot()
+        out.update({
+            "model": self.model_name,
+            "max_batch": eng.scheduler.max_batch,
+            "free_slots": eng.pool.num_free,
+            "cache_len": eng.pool.cache_len,
+            "max_decode_block": eng.max_decode_block,
+            "prefill_chunk": eng.prefill_chunk,
+            "prefill_bucket_floor": eng._bucket_floor,
+            "prefill_buckets_compiled": sorted(eng._seen_buckets),
+        })
+        if eng.prefix_cache is not None:
+            out["prefix_cache"] = {
+                "entries": len(eng.prefix_cache),
+                "hits": eng.prefix_cache.stats.hits,
+                "misses": eng.prefix_cache.stats.misses,
+            }
+        return out
+
     def batch(self, bodies: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         """Serve many requests concurrently through continuous batching."""
         reqs = [self._build_request(b) for b in bodies]

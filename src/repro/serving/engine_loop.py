@@ -7,10 +7,13 @@ outer loop.  With block decode, each ``step()`` advances up to
 ``max_decode_block`` tokens and returns the whole token block's events,
 which are fanned out to the per-request queues in one critical section.
 Admission still happens at token boundaries: the engine collapses the block
-size to 1 whenever requests are pending, so a newly submitted request waits
-at most one token (not one block) for a free slot.  A request submitted
-while a block is in flight is admitted at the next block boundary — the
-bounded-staleness trade block decode makes for ~1/K host syncs."""
+size to 1 whenever requests or prefill chunks are pending, so a newly
+submitted request waits at most one token (not one block) for a free slot,
+and a long prompt prefills piecewise (``prefill_chunk`` tokens per step)
+*overlapped* with the in-flight decode block instead of monopolising the
+loop.  A request submitted while a block is in flight is admitted at the
+next block boundary — the bounded-staleness trade block decode makes for
+~1/K host syncs."""
 from __future__ import annotations
 
 import queue

@@ -1,8 +1,10 @@
 """Minimal stdlib HTTP server exposing the OpenAI-compatible API.
 
-``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE) and
-``GET /v1/models``.  Single-threaded handler in front of the continuous
-batching engine; intended for local use and the serving example."""
+``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE),
+``GET /v1/models`` and ``GET /stats`` (scheduler queue depth / oldest wait /
+admission-pipeline counters).  Single-threaded handler in front of the
+continuous batching engine; intended for local use and the serving
+example."""
 from __future__ import annotations
 
 import json
@@ -30,6 +32,10 @@ def make_handler(api: OpenAIServer):
             if self.path == "/v1/models":
                 self._send_json({"object": "list", "data": [
                     {"id": api.model_name, "object": "model"}]})
+            elif self.path == "/stats":
+                # queue depth / oldest wait / admission-pipeline counters —
+                # the production view of prefill/decode overlap behaviour
+                self._send_json(api.stats())
             else:
                 self._send_json({"error": "not found"}, 404)
 

@@ -1,0 +1,267 @@
+"""Chunked, batched, decode-overlapped prefill pipeline.
+
+Pins the admission-path contract: chunked + batched prefill is *bit
+-identical* to monolithic prefill (final KV cache, published prefix-cache
+blocks, greedy decode outputs), mid-chunk prefix publication is reusable,
+wave packing preserves per-request outputs, the compiled bucket set stays
+bounded, and the new observability surfaces (scheduler queue stats, /stats
+endpoint, prefill_overlap smoke benchmark) work."""
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.core.scheduler import ContinuousBatchingScheduler
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+LONG = "shared system prompt for equivalence checking " * 3   # ~139 tokens
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def _req(text, max_tokens=6):
+    return Request(prompt_tokens=TOK.encode(text),
+                   sampling=SamplingParams(max_tokens=max_tokens))
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------------- #
+# bit-exact equivalence: chunked vs monolithic
+# --------------------------------------------------------------------------- #
+def test_chunked_prefill_bit_identical_to_monolithic(cfg):
+    """Greedy outputs AND the published full-prompt prefix-cache entry must
+    be bit-identical across prefill_chunk ∈ {0 (monolithic), pow2, non-pow2}
+    — right-padding is fully masked, so chunk geometry leaves no trace."""
+    toks = TOK.encode(LONG)
+    outs, entries = [], []
+    for chunk in (0, 32, 48):
+        eng = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                              prefill_chunk=chunk, prefix_block_size=8)
+        r = Request(prompt_tokens=list(toks),
+                    sampling=SamplingParams(max_tokens=4))
+        eng.generate([r])
+        outs.append(r.output_tokens)
+        value, matched = eng.prefix_cache.lookup(list(toks),
+                                                 max_len=len(toks))
+        assert value is not None and matched > 0
+        entries.append(value["cache"])
+    assert outs[0] == outs[1] == outs[2]
+    assert _leaves_equal(entries[0], entries[1])
+    assert _leaves_equal(entries[0], entries[2])
+
+
+def test_chunked_run_publishes_partial_prefixes(cfg):
+    """Intermediate chunk boundaries publish (rolling) to the prefix cache:
+    an identical prompt arriving while the first is still mid-prefill
+    resumes from the finished chunks — and decodes identically to an engine
+    with no prefix cache at all."""
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                          prefill_chunk=32, prefix_block_size=8)
+    a = _req(LONG)
+    eng.add_request(a)
+    for _ in range(3):                     # 3 chunks = 96 prompt tokens done
+        eng.step()
+    b = _req(LONG)                         # identical prompt, mid-prefill
+    eng.add_request(b)
+    eng.run()
+    assert a.is_finished and b.is_finished
+    # b resumed from a's latest published chunk boundary, not from scratch
+    assert b.cached_prefix_len >= 64
+    assert a.output_tokens == b.output_tokens
+    # rolling publication: one partial + the retire-time full entry — NOT
+    # one full-size cache per chunk boundary
+    assert len(eng.prefix_cache) <= 3
+
+    ref_eng = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                              prefill_chunk=32, enable_prefix_cache=False)
+    c = _req(LONG)
+    ref_eng.generate([c])
+    assert b.output_tokens == c.output_tokens
+
+
+def test_prefix_hit_mid_prompt_with_chunked_resume(cfg):
+    """A cached prefix consumed *mid-chunk*: the resume offset lands inside
+    the chunk grid and the remaining tokens still chunk correctly."""
+    base = "common prefix tokens here " * 6                   # > 2 chunks
+    outs = []
+    for chunk in (0, 32):
+        eng = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                              prefill_chunk=chunk, prefix_block_size=8)
+        # short suffixes: the published entry's block-aligned key must land
+        # inside the shared prefix for the second prompt to hit it
+        eng.generate([_req(base + "AA", 4)])
+        b = _req(base + "BB", 4)
+        eng.generate([b])
+        assert b.cached_prefix_len > 0
+        outs.append(b.output_tokens)
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------------------------- #
+# batched waves
+# --------------------------------------------------------------------------- #
+def test_batched_wave_equals_sequential(cfg):
+    """One [k, bucket] wave (staggered lengths, per-row masks/offsets) must
+    reproduce per-request batch=1 prefills token for token."""
+    def reqs():
+        return [_req(p, m) for p, m in
+                [("a", 3), ("bb word", 9), (LONG, 8), ("mid size", 6),
+                 ("x" * 40, 12)]]
+
+    seq = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                          enable_prefix_cache=False, prefill_chunk=0)
+    bat = InferenceEngine(cfg, max_batch=4, cache_len=256,
+                          enable_prefix_cache=False, prefill_chunk=32)
+    for ra, rb in zip(seq.generate(reqs()), bat.generate(reqs())):
+        assert ra.output_tokens == rb.output_tokens
+        assert ra.finish_reason == rb.finish_reason
+    # the batched engine actually packed rows (admission wave of 4)
+    assert bat.scheduler.stats.rows_per_wave > 1.0
+
+
+def test_legacy_admission_matches_pipeline_greedy(cfg):
+    """The pre-pipeline baseline path (sequential blocking prefills) stays
+    output-equivalent — it differs in schedule, not semantics."""
+    mk = lambda legacy: InferenceEngine(
+        cfg, max_batch=4, cache_len=128, enable_prefix_cache=False,
+        legacy_admission=legacy)
+    reqs = lambda: [_req(f"request {i}", 6) for i in range(5)]
+    a = mk(False).generate(reqs())
+    b = mk(True).generate(reqs())
+    for ra, rb in zip(a, b):
+        assert ra.output_tokens == rb.output_tokens
+
+
+def test_vision_chunked_wave_equivalence():
+    """Multimodal rows ride the wave: media context + cross-KV publication
+    happen on the first chunk; outputs are invariant to chunking."""
+    vcfg = get_config("qwen3-vl-toy")
+    img = np.random.default_rng(0).integers(0, 255, (32, 32, 3),
+                                            dtype=np.uint8)
+    outs = []
+    for chunk in (0, 32):
+        eng = InferenceEngine(vcfg, max_batch=2, cache_len=256,
+                              vision_work_iters=2, prefill_chunk=chunk)
+        r = Request(prompt_tokens=TOK.encode(LONG), images=[img],
+                    sampling=SamplingParams(max_tokens=4))
+        eng.generate([r])
+        outs.append(r.output_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_non_pow2_cache_len_no_scatter_collision(cfg):
+    """cache_len=192 with a prompt whose pow2 bucket (256) would exceed the
+    ring: the bucket must clamp so padding never aliases real prompt cells
+    in one scatter.  Outputs must match a roomy-cache engine exactly."""
+    prompt = TOK.encode(LONG)                  # 139 tokens -> pow2 bucket 256
+    outs = []
+    for cache_len, chunk in ((192, 0), (192, 32), (512, 0)):
+        eng = InferenceEngine(cfg, max_batch=1, cache_len=cache_len,
+                              prefill_chunk=chunk,
+                              enable_prefix_cache=False)
+        r = Request(prompt_tokens=list(prompt),
+                    sampling=SamplingParams(max_tokens=6))
+        eng.generate([r])
+        outs.append(r.output_tokens)
+    assert outs[0] == outs[1] == outs[2]
+
+
+# --------------------------------------------------------------------------- #
+# bucket capping
+# --------------------------------------------------------------------------- #
+def test_bucket_cap_bounds_compiled_shapes(cfg, caplog):
+    """max_prefill_buckets raises the bucket floor so varied prompt lengths
+    reuse a small fixed set of compiled shapes (warned on first compile)."""
+    import logging
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=256,
+                          enable_prefix_cache=False, max_prefill_buckets=2)
+    with caplog.at_level(logging.WARNING, logger="repro.engine"):
+        eng.generate([_req("t" * n, 2) for n in (3, 20, 60, 130, 200)])
+    assert len(eng._seen_buckets) <= 2
+    assert all(b in (128, 256) for b in eng._seen_buckets)
+    assert any("prefill bucket" in rec.message for rec in caplog.records)
+
+
+# --------------------------------------------------------------------------- #
+# scheduler interleave + observability
+# --------------------------------------------------------------------------- #
+def test_plan_decode_block_collapses_while_chunks_pending():
+    s = ContinuousBatchingScheduler(max_batch=2)
+    r = _req("active one", 100)
+    s.add(r)
+    s.admit([0])
+    assert s.plan_decode_block(8) == 8
+    s.enqueue_prefill(object())          # opaque chunk job
+    assert s.plan_decode_block(8) == 1   # TTFT-aware interleave
+    assert s.has_work
+    s.pop_prefill_wave()
+    assert s.plan_decode_block(8) == 8
+
+
+def test_queue_depth_and_oldest_wait_exposed():
+    s = ContinuousBatchingScheduler(max_batch=1)
+    assert s.queue_depth == 0 and s.oldest_wait_s == 0.0
+    s.add(_req("waiting", 2))
+    s.add(_req("waiting more", 2))
+    assert s.queue_depth == 2
+    assert s.oldest_wait_s >= 0.0
+    snap = s.snapshot()
+    for key in ("queue_depth", "oldest_wait_s", "prefill_waves",
+                "prefill_chunks", "rows_per_wave", "host_syncs_per_token"):
+        assert key in snap
+
+
+def test_stats_endpoint_serves_scheduler_snapshot(cfg):
+    from repro.serving.api import OpenAIServer
+    from repro.serving.server import ApiServer
+
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+    api = OpenAIServer(eng, "toy")
+    st = api.stats()
+    assert st["queue_depth"] == 0
+    assert st["prefill_chunk"] == eng.prefill_chunk
+    assert "prefix_cache" in st
+
+    server = ApiServer(api, port=0)
+    server.start()
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{server.port}/stats", timeout=30) as resp:
+            body = json.loads(resp.read())
+        assert body["queue_depth"] == 0
+        assert body["max_batch"] == 2
+        assert "oldest_wait_s" in body
+    finally:
+        server.stop()
+
+
+# --------------------------------------------------------------------------- #
+# benchmark smoke (tier-1 regression gate for the admission path)
+# --------------------------------------------------------------------------- #
+def test_prefill_overlap_benchmark_smoke(tmp_path):
+    from benchmarks import prefill_overlap
+
+    out = tmp_path / "BENCH_prefill_overlap.json"
+    result = prefill_overlap.run(smoke=True, out=out)
+    assert out.exists()
+    rows = result["rows"]
+    variants = {(r["variant"], r["chunk"]) for r in rows}
+    assert ("pre_pr", 0) in variants and ("pipeline", 0) in variants
+    for r in rows:
+        assert r["tok_s"] > 0
+        assert r["ttft_p95_ms"] >= r["ttft_p50_ms"] >= 0
