@@ -1,8 +1,11 @@
-"""Shared benchmark helpers: memoised params, engine factory, timing, CSV."""
+"""Shared benchmark helpers: memoised params, engine factory, timing, CSV,
+and the shared ``BENCH_*.json`` artifact schema (see benchmarks/validate.py)."""
 from __future__ import annotations
 
+import os
+import platform
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import numpy as np
@@ -16,6 +19,40 @@ TOK = ByteTokenizer()
 _PARAMS: Dict[str, object] = {}
 
 ROWS: List[str] = []
+
+#: version of the shared BENCH_*.json artifact schema; bumped whenever the
+#: required keys change so benchmarks/validate.py can reject stale artifacts
+BENCH_SCHEMA_VERSION = 1
+
+
+def machine_info() -> Dict[str, Any]:
+    """Host/runtime identity embedded in every BENCH_*.json artifact, so a
+    number is never compared against one measured on different hardware or a
+    different jax build without noticing."""
+    dev = jax.devices()[0]
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device": getattr(dev, "device_kind", str(dev)),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def bench_result(name: str, variants: List[str], rows: List[Dict[str, Any]],
+                 **extra: Any) -> Dict[str, Any]:
+    """Assemble a BENCH_*.json payload in the shared schema: benchmark
+    ``name``, machine info, the distinct ``variants`` covered, and one
+    metrics dict per row (each row carries a ``variant`` key)."""
+    return {
+        "name": name,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "machine": machine_info(),
+        "variants": list(variants),
+        "rows": rows,
+        **extra,
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

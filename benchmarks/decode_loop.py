@@ -28,7 +28,7 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import emit, text_requests
+from benchmarks.common import bench_result, emit, text_requests
 from repro.configs import get_config
 from repro.core.engine import InferenceEngine
 from repro.models import build_model
@@ -77,7 +77,8 @@ def _measure(batch: int, block: int) -> dict:
         dt = time.monotonic() - t0
         toks = sum(r.num_generated for r in reqs)
         syncs = eng.scheduler.stats.steps - s0
-        row = {"batch": batch, "max_decode_block": block, "tokens": toks,
+        row = {"variant": f"K{block}", "batch": batch,
+               "max_decode_block": block, "tokens": toks,
                "wall_s": dt, "tok_s": toks / dt, "host_syncs": syncs,
                "syncs_per_token": syncs / toks}
         if best is None or row["tok_s"] > best["tok_s"]:
@@ -103,9 +104,10 @@ def run() -> None:
                  f"speedup_vs_K1={speedup:.2f}x")
     cfg, _ = micro_model()
     OUT.write_text(json.dumps(
-        {"arch": cfg.name, "max_tokens": MAX_TOKENS,
-         "prompt_len": PROMPT_LEN, "cache_len": CACHE_LEN,
-         "repeats": REPEATS, "rows": rows}, indent=2))
+        bench_result("decode_loop", [f"K{b}" for b in BLOCKS], rows,
+                     arch=cfg.name, max_tokens=MAX_TOKENS,
+                     prompt_len=PROMPT_LEN, cache_len=CACHE_LEN,
+                     repeats=REPEATS), indent=2))
     print(f"# wrote {OUT}")
 
 

@@ -35,7 +35,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from benchmarks.common import TOK, emit
+from benchmarks.common import TOK, bench_result, emit
 from benchmarks.decode_loop import micro_model
 from repro.core.engine import InferenceEngine
 from repro.core.request import Request, SamplingParams
@@ -120,8 +120,9 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
                  f"ttft_p50={row['ttft_p50_ms']:.1f}ms "
                  f"ttft_p95={row['ttft_p95_ms']:.1f}ms "
                  f"rows_per_wave={row['rows_per_wave']:.2f}")
-    result = {"arch": params[0].name, "smoke": smoke, "rows": rows,
-              **{k: v for k, v in knobs.items()}}
+    result = bench_result(
+        "prefill_overlap", ["pre_pr", "pipeline"], rows,
+        arch=params[0].name, smoke=smoke, **{k: v for k, v in knobs.items()})
     path = out or OUT
     path.write_text(json.dumps(result, indent=2))
     print(f"# wrote {path}")

@@ -11,8 +11,8 @@ import argparse
 import time
 
 from benchmarks import (decode_loop, fig2_concurrency, prefill_overlap,
-                        table1_throughput, table2_mllm_cache, table3_video,
-                        table4_ablation, table5_resolution,
+                        sched_policy, table1_throughput, table2_mllm_cache,
+                        table3_video, table4_ablation, table5_resolution,
                         table6_video_frames, table7_text_prefix)
 from benchmarks.common import ROWS
 
@@ -20,6 +20,7 @@ SUITES = [
     ("table1", table1_throughput.run),
     ("decode_loop", decode_loop.run),
     ("prefill_overlap", prefill_overlap.run),
+    ("sched_policy", sched_policy.run),
     ("fig2", fig2_concurrency.run),
     ("table2", table2_mllm_cache.run),
     ("table3", table3_video.run),

@@ -1,0 +1,215 @@
+"""Scheduling-policy benchmark: interactive tail latency vs batch throughput
+under a mixed workload, across scheduling policies at fixed concurrency.
+
+The paper's continuous-batching headline (4.3x aggregate at 16 concurrent)
+assumes the scheduler keeps every wave and decode block full; the serving
+comparison literature (arXiv:2511.05502, arXiv:2510.18921) shows *tail
+latency under mixed workloads* is where native runtimes differentiate.
+This suite pins both sides of that trade for the policy subsystem:
+
+  * ``fifo_nospec`` — FIFO, speculative wave filling off (the PR 2 engine)
+  * ``fifo``        — FIFO + speculative filling (rows-per-wave uplift)
+  * ``priority``    — priority ordering + speculative filling
+  * ``edf``         — earliest-deadline-first + speculative filling
+  * ``edf_preempt`` — EDF + slot preemption (urgent requests evict the
+                      least urgent live slot; evictees resume bit-identically
+                      from their snapshot)
+
+Workload per episode: ``2*conc`` batch requests (long prompts, long
+outputs, no deadline) swamp the engine first; after a few engine steps
+``conc`` interactive requests (short prompts, short outputs, tight
+deadline, high priority) arrive behind them.  Under FIFO the interactives
+strand behind the batch backlog; deadline/priority policies reorder
+admission and the chunk queue, and preemption frees slots immediately.
+
+Metrics per variant: interactive TTFT p50/p95 and e2e p95, aggregate and
+batch-class tokens/s, rows-per-wave, deadline miss count, preemption /
+speculative-fill counters.  Best-of-``REPEATS`` on aggregate tokens/s.
+
+Emits ``BENCH_sched_policy.json`` (shared schema — benchmarks/validate.py).
+
+  PYTHONPATH=src python -m benchmarks.sched_policy [--smoke]
+  PYTHONPATH=src python -m benchmarks.run --only sched_policy
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import TOK, bench_result, emit
+from benchmarks.decode_loop import micro_model
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+
+CONCURRENCY = [16]
+BATCH_PROMPT = 256
+BATCH_TOKENS = 48
+INTER_PROMPT = 32
+INTER_TOKENS = 8
+DEADLINE_MS = 200.0
+CACHE_LEN = 512
+PREFILL_CHUNK = 64
+WARM_STEPS = 4
+# shared/noisy CI-class hosts need a deep best-of to stabilise tok/s:
+# policies only reorder schedule, so true aggregate-throughput deltas are
+# small and easily swamped by a single slow episode
+REPEATS = 6
+OUT = Path("BENCH_sched_policy.json")
+
+VARIANTS = [
+    # (tag, policy, preemption, speculative_fill)
+    ("fifo_nospec", "fifo", False, False),
+    ("fifo", "fifo", False, True),
+    ("priority", "priority", False, True),
+    ("edf", "edf", False, True),
+    ("edf_preempt", "edf", True, True),
+]
+
+SMOKE = dict(concurrency=[4], batch_prompt=48, batch_tokens=12,
+             inter_prompt=16, inter_tokens=4, cache_len=128,
+             prefill_chunk=16, warm_steps=2, repeats=1)
+
+
+def _batch_requests(n: int, prompt_len: int, max_tokens: int
+                    ) -> List[Request]:
+    # staggered prompt lengths (1x / 0.75x / 0.5x): jobs drop out of the
+    # chunk queue at different waves, so wave sizes pass through non-power
+    # -of-two values and leave padding rows for speculative filling — the
+    # realistic mixed-length arrival pattern the FIFO engine wastes
+    lens = (prompt_len, max(8, prompt_len * 3 // 4), max(8, prompt_len // 2))
+    out = []
+    for i in range(n):
+        plen = lens[i % len(lens)]
+        body = f"batch {i} " + "payload " * plen
+        out.append(Request(prompt_tokens=TOK.encode(body)[:plen],
+                           sampling=SamplingParams(max_tokens=max_tokens)))
+    return out
+
+
+def _interactive_requests(n: int, prompt_len: int, max_tokens: int
+                          ) -> List[Request]:
+    out = []
+    for i in range(n):
+        body = f"chat {i} " + "hi " * prompt_len
+        out.append(Request(prompt_tokens=TOK.encode(body)[:prompt_len],
+                           sampling=SamplingParams(max_tokens=max_tokens),
+                           priority=5, deadline_ms=DEADLINE_MS))
+    return out
+
+
+def _engine(policy: str, preempt: bool, spec: bool, conc: int,
+            cache_len: int, chunk: int, params) -> InferenceEngine:
+    cfg, p = params
+    return InferenceEngine(
+        cfg, params=p, max_batch=conc, cache_len=cache_len,
+        prefill_chunk=chunk, sched_policy=policy, preemption=preempt,
+        speculative_fill=spec, enable_prefix_cache=False,
+        enable_content_cache=False)
+
+
+def _episode(eng: InferenceEngine, knobs: dict, conc: int) -> dict:
+    """One mixed-workload episode; returns raw per-class measurements."""
+    batch = _batch_requests(2 * conc, knobs["batch_prompt"],
+                            knobs["batch_tokens"])
+    t0 = time.monotonic()
+    for r in batch:
+        eng.add_request(r)
+    for _ in range(knobs["warm_steps"]):   # fill slots, build the backlog
+        eng.step()
+    inter = _interactive_requests(conc, knobs["inter_prompt"],
+                                  knobs["inter_tokens"])
+    for r in inter:
+        eng.add_request(r)
+    eng.run()
+    wall = time.monotonic() - t0
+    toks = sum(r.num_generated for r in batch + inter)
+    batch_toks = sum(r.num_generated for r in batch)
+    ttfts = np.array([r.ttft for r in inter])
+    e2es = np.array([r.finish_time - r.arrival_time for r in inter])
+    missed = sum(1 for r in inter if r.missed_deadline)
+    return {
+        "wall_s": wall, "tok_s": toks / wall, "batch_tok_s": batch_toks / wall,
+        "interactive_ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+        "interactive_ttft_p95_ms": float(np.percentile(ttfts, 95) * 1e3),
+        "interactive_e2e_p95_ms": float(np.percentile(e2es, 95) * 1e3),
+        "deadline_missed": missed,
+    }
+
+
+_STAT_DELTAS = ("prefill_waves", "prefill_chunks", "spec_chunks",
+                "preemptions", "resumed")
+
+
+def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
+    """All variants at one concurrency, episodes interleaved round-robin.
+
+    One engine per variant (jit caches are per-engine; the warmup episode
+    compiles every wave/block shape so timed episodes run hot).  Episodes
+    are interleaved across variants rather than variant-blocked: on a
+    shared host a slow epoch then taxes every variant equally instead of
+    whichever one it happened to land on, so the best-of comparison stays
+    apples-to-apples."""
+    engines = {}
+    for tag, policy, preempt, spec in VARIANTS:
+        eng = _engine(policy, preempt, spec, conc, knobs["cache_len"],
+                      knobs["prefill_chunk"], params)
+        _episode(eng, knobs, conc)                 # warmup (compiles)
+        engines[tag] = eng
+    best: dict = {}
+    for _ in range(knobs["repeats"]):
+        for tag, policy, preempt, spec in VARIANTS:
+            eng = engines[tag]
+            before = {k: getattr(eng.scheduler.stats, k)
+                      for k in _STAT_DELTAS}
+            row = _episode(eng, knobs, conc)
+            delta = {k: getattr(eng.scheduler.stats, k) - before[k]
+                     for k in _STAT_DELTAS}
+            row.update({
+                "variant": tag, "policy": policy, "preemption": preempt,
+                "speculative_fill": spec, "concurrency": conc,
+                "requests": 3 * conc,
+                "rows_per_wave": (delta["prefill_chunks"]
+                                  / max(delta["prefill_waves"], 1)),
+                **delta,
+            })
+            if tag not in best or row["tok_s"] > best[tag]["tok_s"]:
+                best[tag] = row
+    return [best[tag] for tag, *_ in VARIANTS]
+
+
+def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
+    knobs = SMOKE if smoke else dict(
+        concurrency=CONCURRENCY, batch_prompt=BATCH_PROMPT,
+        batch_tokens=BATCH_TOKENS, inter_prompt=INTER_PROMPT,
+        inter_tokens=INTER_TOKENS, cache_len=CACHE_LEN,
+        prefill_chunk=PREFILL_CHUNK, warm_steps=WARM_STEPS, repeats=REPEATS)
+    params = micro_model()
+    rows = []
+    for conc in knobs["concurrency"]:
+        for row in _measure_all(conc, knobs, params):
+            rows.append(row)
+            emit(f"sched_policy/c{conc}/{row['variant']}", 1e6 / row["tok_s"],
+                 f"tok_s={row['tok_s']:.1f} "
+                 f"int_ttft_p95={row['interactive_ttft_p95_ms']:.1f}ms "
+                 f"rows_per_wave={row['rows_per_wave']:.2f} "
+                 f"preempt={row['preemptions']} miss={row['deadline_missed']}")
+    result = bench_result(
+        "sched_policy", [v[0] for v in VARIANTS], rows,
+        arch=params[0].name, smoke=smoke, deadline_ms=DEADLINE_MS,
+        **{k: v for k, v in knobs.items()})
+    path = out or OUT
+    path.write_text(json.dumps(result, indent=2))
+    print(f"# wrote {path}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI regression gate")
+    run(smoke=ap.parse_args().smoke)

@@ -8,7 +8,7 @@ over 4 concurrent requests (the paper's serving scenario); the baseline
 serves the same requests strictly sequentially."""
 from __future__ import annotations
 
-from benchmarks.common import decode_tok_s, emit, make_engine, text_requests, warmup
+from benchmarks.common import decode_tok_s, emit, make_engine, warmup
 
 MODELS = [
     "qwen3-0.6b-toy", "qwen3-4b-toy", "qwen3-8b-toy", "qwen3-30b-a3b-toy",

@@ -1,0 +1,139 @@
+"""Validate BENCH_*.json artifacts against the shared benchmark schema.
+
+Every benchmark that emits a ``BENCH_<name>.json`` artifact must build it
+with :func:`benchmarks.common.bench_result`, which stamps the shared schema:
+``name``, ``schema_version``, ``machine`` (host/runtime identity), a
+non-empty ``variants`` list, and one metrics dict per ``rows`` entry (each
+row tagged with a ``variant`` drawn from that list plus at least one
+numeric metric).  This module checks all of that, and additionally that
+every benchmark module declaring an ``OUT`` artifact is registered in
+``benchmarks/run.py`` — so a stale, hand-edited, or orphaned artifact fails
+CI instead of silently shipping.
+
+  PYTHONPATH=src python -m benchmarks.validate [FILES...]
+
+With no arguments, validates every ``BENCH_*.json`` in the repository root
+(the working directory).  Exits non-zero on the first problem set.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+from benchmarks.common import BENCH_SCHEMA_VERSION
+
+REQUIRED_MACHINE_KEYS = ("platform", "python", "jax", "backend", "device")
+
+_OUT_RE = re.compile(r'^OUT\s*=\s*Path\("(BENCH_[A-Za-z0-9_]+\.json)"\)', re.M)
+
+
+def declared_artifacts() -> Dict[str, str]:
+    """Map benchmark module name -> artifact filename, scraped from the
+    ``OUT = Path("BENCH_*.json")`` declarations (text scan: importing every
+    suite just to read a constant would pull in the whole model zoo)."""
+    out: Dict[str, str] = {}
+    for path in sorted(Path(__file__).parent.glob("*.py")):
+        match = _OUT_RE.search(path.read_text())
+        if match:
+            out[path.stem] = match.group(1)
+    return out
+
+
+def registered_suites() -> List[str]:
+    from benchmarks.run import SUITES
+
+    return [fn.__module__.split(".")[-1] for _, fn in SUITES]
+
+
+def validate_payload(payload: Any, source: str = "<payload>") -> List[str]:
+    """Schema errors for one parsed BENCH_*.json payload (empty = valid)."""
+    errors: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"{source}: top level must be an object"]
+
+    def err(msg: str) -> None:
+        errors.append(f"{source}: {msg}")
+
+    name = payload.get("name")
+    if not isinstance(name, str) or not name:
+        err("missing benchmark 'name'")
+    if payload.get("schema_version") != BENCH_SCHEMA_VERSION:
+        err(
+            f"schema_version {payload.get('schema_version')!r} != "
+            f"{BENCH_SCHEMA_VERSION} (stale artifact? re-run the benchmark)"
+        )
+    machine = payload.get("machine")
+    if not isinstance(machine, dict):
+        err("missing 'machine' info")
+    else:
+        for key in REQUIRED_MACHINE_KEYS:
+            if key not in machine:
+                err(f"machine info missing {key!r}")
+    variants = payload.get("variants")
+    if not isinstance(variants, list) or not variants:
+        err("missing non-empty 'variants' list")
+        variants = []
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        err("missing non-empty 'rows' list")
+        rows = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            err(f"rows[{i}] is not an object")
+            continue
+        variant = row.get("variant")
+        if variants and variant not in variants:
+            err(f"rows[{i}] variant {variant!r} not in variants {variants}")
+        metrics = [
+            k
+            for k, v in row.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+        ]
+        if not metrics:
+            err(f"rows[{i}] carries no numeric metric keys")
+    return errors
+
+
+def validate_file(path: Path) -> List[str]:
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+    return validate_payload(payload, source=str(path))
+
+
+def validate_registration() -> List[str]:
+    """Every benchmark module that declares an artifact must be wired into
+    the run.py harness (otherwise its numbers quietly stop regenerating)."""
+    errors = []
+    suites = set(registered_suites())
+    for module, artifact in declared_artifacts().items():
+        if module not in suites:
+            errors.append(
+                f"benchmarks/{module}.py declares {artifact} but is not "
+                "registered in benchmarks/run.py SUITES"
+            )
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    files = [Path(a) for a in argv] or sorted(Path.cwd().glob("BENCH_*.json"))
+    errors = validate_registration()
+    if not files:
+        errors.append("no BENCH_*.json artifacts found to validate")
+    for path in files:
+        errors.extend(validate_file(path))
+    for line in errors:
+        print(f"FAIL {line}")
+    if not errors:
+        names = ", ".join(p.name for p in files)
+        print(f"ok: {len(files)} artifact(s) valid ({names})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

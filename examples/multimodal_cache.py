@@ -51,13 +51,17 @@ frames = [np.random.default_rng(i).integers(0, 255, (48, 48, 3),
                                             dtype=np.uint8) for i in range(4)]
 r1 = Request(prompt_tokens=tok.encode("summarize the following video"),
              video_frames=frames, sampling=SamplingParams(max_tokens=4))
-t0 = time.monotonic(); engine.generate([r1]); cold = time.monotonic() - t0
+t0 = time.monotonic()
+engine.generate([r1])
+cold = time.monotonic() - t0
 # a second clip reusing 3 of the 4 frames
 clip2 = frames[1:] + [np.random.default_rng(9).integers(
     0, 255, (48, 48, 3), dtype=np.uint8)]
 r2 = Request(prompt_tokens=tok.encode("summarize the following video"),
              video_frames=clip2, sampling=SamplingParams(max_tokens=4))
-t0 = time.monotonic(); engine.generate([r2]); warm = time.monotonic() - t0
+t0 = time.monotonic()
+engine.generate([r2])
+warm = time.monotonic() - t0
 print(f"\nvideo clip 1 (cold): {cold*1e3:.0f}ms "
       f"({r1.vision_cache_misses} frames encoded)")
 print(f"video clip 2 (3/4 frames shared): {warm*1e3:.0f}ms "

@@ -43,10 +43,26 @@ iteration):
      -slot cache writes are masked on-device, so the published state is
      bit-identical to what the single-step engine would publish.
 
+Scheduling is policy-driven (``sched_policy`` ∈ {fifo, priority, edf} — see
+:mod:`repro.core.scheduler`): the policy orders admission, the chunk queue,
+and — with ``preemption=True`` under a preemptive policy — lets an urgent
+pending request evict the least urgent live decode slot.  Eviction
+snapshots the slot's cache and publishes it as an exact-sequence
+prefix-cache entry (byte-budget LRU), so the evicted request resumes
+bit-identically under greedy decode; a snapshot lost to cache pressure
+falls back to re-prefilling the prompt+generated history.  **Speculative
+wave filling** (``speculative_fill``, default on) backfills the power-of
+-two padding rows of each prefill wave with first chunks of not-yet
+-admitted pending requests — partial KV is carried engine-side and
+published to the prefix cache at chunk boundaries, so the head-start is
+never wasted even if the request is admitted elsewhere or much later.
+
 ``max_decode_block=1`` reproduces the per-token engine exactly (same event
-order).  Greedy outputs are invariant to K, to ``prefill_chunk``, and to
-wave packing.  ``legacy_admission=True`` restores the pre-pipeline path
-(sequential blocking batch=1 prefills) as a benchmark baseline.
+order).  Greedy outputs are invariant to K, to ``prefill_chunk``, to
+wave packing, to speculative filling, and to preemption/resume.
+``legacy_admission=True`` restores the pre-pipeline path (sequential
+blocking batch=1 prefills) as a benchmark baseline — deprecated, removal
+tracked in ROADMAP.md.
 
 Cost-structure fidelity to the paper's ablation (Table 4): the media
 pipeline always runs unless the *content* cache hits (so "KV-only" caching
@@ -58,8 +74,9 @@ from __future__ import annotations
 import functools
 import logging
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +94,7 @@ from repro.core.prefix_cache import TextPrefixCache
 from repro.core.request import (FinishReason, PromptTooLongError, Request,
                                 StreamEvent)
 from repro.core.sampling import sample_tokens, sample_tokens_inner
-from repro.core.scheduler import ContinuousBatchingScheduler
+from repro.core.scheduler import ContinuousBatchingScheduler, SchedulingPolicy
 from repro.core.streaming import TokenStreamDecoder
 from repro.models import build_model
 from repro.serving.media import AudioEncoderStub, VisionEncoderStub, decode_media
@@ -104,23 +121,39 @@ class _Admission:
     single_cache: Any
     first_token: int
     ctx_valid: Optional[np.ndarray]      # [T] bool or None
+    seq_len: int                         # tokens materialised in the cache
 
 
 @dataclass
 class _PrefillJob:
-    """One request's prefill in flight: the slot is held, the partial cache
-    is carried across chunks outside the batch pool, and the job re-enters
-    the scheduler's chunk queue until the whole prompt is materialised."""
-    slot: int
+    """One request's prefill in flight: the partial cache is carried across
+    chunks outside the batch pool, and the job re-enters the scheduler's
+    chunk queue until the whole sequence is materialised.
+
+    ``slot is None`` marks a *speculative* job: the request is still
+    pending (no free slot), but its chunks ride the leftover power-of-two
+    padding rows of admitted waves so prefill work starts before admission.
+    A speculative job lives in the engine's ``_spec_jobs`` table, not the
+    chunk queue; when its request is admitted the job is bound to the slot
+    and continues (or commits directly, if the prompt already finished —
+    the staged ``logits`` row becomes the first-token sample).
+
+    ``tokens`` is the sequence being materialised — the prompt for a fresh
+    request, prompt+generated history for a preempted request whose
+    eviction snapshot was lost to cache pressure."""
+    slot: Optional[int]
     req: Request
+    tokens: List[int]                    # sequence to materialise
     cache: Any                           # batch=1 cache pytree (partial)
-    consumed: int                        # prompt tokens materialised so far
+    consumed: int                        # tokens materialised so far
     embeds: Optional[np.ndarray]         # [1, T, De] media embeddings | None
     ctx_valid: Optional[np.ndarray]      # [1, T] bool | None
     cross_cached: bool                   # cross-KV restored from content cache
     publish_xkv: bool                    # publish cross-KV after first chunk
     t0: float                            # admission start (prefill_time)
     partial_key: Optional[str] = None    # rolling chunk-boundary prefix entry
+    logits: Optional[Any] = None         # staged last-row logits (speculative
+                                         # job finished before a slot freed)
 
 
 class InferenceEngine:
@@ -150,6 +183,11 @@ class InferenceEngine:
         prefill_chunk: int = 512,
         max_prefill_buckets: int = 6,
         legacy_admission: bool = False,
+        sched_policy: Union[str, SchedulingPolicy] = "fifo",
+        preemption: bool = False,
+        max_preemptions: int = 2,
+        speculative_fill: bool = True,
+        max_spec_jobs: Optional[int] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -164,7 +202,22 @@ class InferenceEngine:
         # monolithic), cap on distinct compiled prefill buckets, and the
         # pre-pipeline sequential path as a benchmark baseline
         self.prefill_chunk = max(0, prefill_chunk)
+        if legacy_admission:
+            warnings.warn(
+                "legacy_admission=True is deprecated: the pre-pipeline "
+                "sequential admission path is kept only as a benchmark "
+                "baseline and will be removed once BENCH_sched_policy.json "
+                "has baselined against it (see ROADMAP.md)",
+                DeprecationWarning, stacklevel=2)
         self.legacy_admission = legacy_admission
+        # scheduling-policy subsystem: admission/chunk-queue ordering,
+        # slot preemption, and speculative wave filling (disabled on the
+        # legacy baseline, which predates waves entirely)
+        self.preemption = preemption and not legacy_admission
+        self.max_preemptions = max(0, max_preemptions)
+        self.speculative_fill = speculative_fill and not legacy_admission
+        self.max_spec_jobs = (max_batch if max_spec_jobs is None
+                              else max(0, max_spec_jobs))
 
         # media geometry
         self.media_kind = ("vision" if cfg.vision is not None
@@ -188,7 +241,8 @@ class InferenceEngine:
             self.ctx_len = 0
 
         self.pool = SlotKVPool(cfg, max_batch, cache_len, ctx_len=self.ctx_len)
-        self.scheduler = ContinuousBatchingScheduler(max_batch)
+        self.scheduler = ContinuousBatchingScheduler(max_batch,
+                                                     policy=sched_policy)
         self.prefix_cache = (TextPrefixCache(prefix_block_size,
                                              cache_max_bytes)
                              if enable_prefix_cache else None)
@@ -204,6 +258,17 @@ class InferenceEngine:
                                        jax.random.PRNGKey(seed + 1))
         self._streamers: Dict[int, TokenStreamDecoder] = {}
         self._live_slots: set = set()        # slots committed to DecodeState
+        # speculative prefill jobs for not-yet-admitted pending requests
+        # (request_id -> job); bounded by max_spec_jobs
+        self._spec_jobs: Dict[int, _PrefillJob] = {}
+        # speculative jobs that finished their whole prompt and then got a
+        # slot — committed with the next wave (staged logits, no extra pass)
+        self._ready_jobs: List[_PrefillJob] = []
+        # preemption snapshots: request_id -> resume metadata.  The cache
+        # pytree itself rides in the prefix cache (byte-budget LRU) when one
+        # is enabled, so snapshot memory competes with ordinary prefix reuse;
+        # with the prefix cache disabled the snapshot is held here directly.
+        self._evicted: Dict[int, Dict[str, Any]] = {}
 
         # power-of-two prefill buckets: cap the distinct compiled shapes by
         # raising the smallest bucket (pad more, compile less).  Floor 32,
@@ -397,9 +462,17 @@ class InferenceEngine:
         return sub
 
     def _plan_admissions(self) -> None:
-        """Alg.1 lines 3-6: bind pending requests to free slots and open a
-        prefill job per request (media pipeline + prefix-cache lookup run
-        here; all forward-pass work happens in the batched waves)."""
+        """Alg.1 lines 3-6, policy-ordered: bind pending requests to free
+        slots (opening a prefill job, resuming an eviction snapshot, or
+        adopting a speculative job per request), then — with a preemptive
+        policy — evict the least urgent live slot for each strictly more
+        urgent pending request."""
+        self._admit_into_free_slots()
+        if (self.preemption and self.scheduler.policy.preemptive
+                and self.scheduler.pending and not self.pool.num_free):
+            self._plan_preemptions()
+
+    def _admit_into_free_slots(self) -> None:
         while (self.pool.num_free and self.scheduler.pending
                and self.scheduler.num_active < self.scheduler.max_batch):
             slot = self.pool.allocate()
@@ -408,11 +481,143 @@ class InferenceEngine:
                 self.pool.free(slot)
                 break
             _, req = admitted[0]
-            self.scheduler.enqueue_prefill(self._open_prefill(slot, req))
+            self._bind_slot(slot, req)
 
-    def _open_prefill(self, slot: int, req: Request) -> _PrefillJob:
+    @staticmethod
+    def _salt(req: Request) -> bytes:
+        """Prefix-cache salt from the admission-time media digest (``b""``
+        for text-only) — the one place the digest→salt rule lives, shared
+        by eviction snapshots, resume lookups, partial-chunk publication
+        and retire publication."""
+        return (bytes.fromhex(req.media_set_digest)
+                if req.media_set_digest else b"")
+
+    def _bind_slot(self, slot: int, req: Request) -> None:
+        """Attach an admitted request to its slot: restore an eviction
+        snapshot (preempted request), adopt the request's speculative
+        prefill progress, or open a fresh prefill job."""
+        if req.preempt_count and self._try_resume(slot, req):
+            return
+        job = self._spec_jobs.pop(req.request_id, None)
+        if job is not None:
+            job.slot = slot
+            self.scheduler.stats.spec_admitted += 1
+            if job.logits is not None:   # whole prompt already materialised
+                self._ready_jobs.append(job)
+            else:
+                self.scheduler.enqueue_prefill(job)
+            return
+        tokens = None
+        if req.preempt_count:
+            # eviction snapshot lost to cache pressure: rebuild the slot by
+            # prefilling the prompt+generated history as one sequence (the
+            # commit then samples the next token from the last position)
+            tokens = req.prompt_tokens + req.output_tokens
+        self.scheduler.enqueue_prefill(
+            self._open_prefill(slot, req, tokens=tokens))
+
+    # ------------------------------------------------------------------ #
+    # slot preemption (policy-gated eviction of live decode slots)
+    # ------------------------------------------------------------------ #
+    def _plan_preemptions(self) -> None:
+        """Evict the least urgent live slot while the most urgent pending
+        request is *strictly* more urgent than it.  Keys are static per
+        request, so each eviction strictly improves the active set and the
+        loop terminates; per-request eviction counts are capped by
+        ``max_preemptions`` to bound churn under adversarial load."""
+        key = self.scheduler.policy.key
+        while self.scheduler.pending and not self.pool.num_free:
+            head = self.scheduler.peek_pending()
+            # a victim must be exactly rebuildable if its snapshot is later
+            # lost: the re-prefill fallback can only represent histories
+            # that fit the KV ring without wrapping (wrapped prefill would
+            # leak future cells through the causal mask), so slots whose
+            # prompt+generated history has reached cache_len are exempt —
+            # they also free soonest by just finishing
+            eligible = {s for s in self._live_slots
+                        if (len(self.scheduler.active[s].prompt_tokens)
+                            + self.scheduler.active[s].num_generated)
+                        <= self.pool.cache_len}
+            victim = self.scheduler.select_victim(eligible,
+                                                  self.max_preemptions)
+            if head is None or victim is None:
+                return
+            vslot, vreq = victim
+            if not key(head) < key(vreq):
+                return
+            self._evict(vslot)
+            self._admit_into_free_slots()
+
+    def _evict(self, slot: int) -> None:
+        """Evict a live decode slot for a more urgent pending request.
+
+        The slot's cache is snapshotted (a jit'd copy — safe against later
+        pool mutation) and published as an *exact-sequence* prefix-cache
+        entry keyed by prompt+generated history, so the evicted request's
+        work is never discarded: on re-admission the snapshot restores the
+        cache and decode state bit-for-bit (greedy decode continues exactly
+        as if never evicted).  If the prefix cache is disabled the snapshot
+        is held engine-side instead; if the entry is LRU-evicted under byte
+        pressure, resume falls back to re-prefilling the history."""
+        req = self.scheduler.active[slot]
+        single = self.pool.read(slot)
+        meta: Dict[str, Any] = {
+            "cache": None,
+            "ctx_valid": (np.asarray(self.state.ctx_valid[slot])
+                          if self.media_kind != "none" else None),
+        }
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert_exact(
+                req.prompt_tokens + req.output_tokens, {"cache": single},
+                tree_bytes(single), salt=self._salt(req))
+        else:
+            meta["cache"] = single
+        self._evicted[req.request_id] = meta
+        if self.prefix_cache is None:
+            # no byte-budget LRU to own the snapshots: bound engine-side
+            # cache pytrees at one pool's worth, dropping the *oldest*
+            # (dict = eviction order) to the re-prefill resume path —
+            # mirrors an LRU squeeze instead of growing with queue depth
+            holders = [rid for rid, m in self._evicted.items()
+                       if m["cache"] is not None]
+            for rid in holders[:-self.pool.max_batch]:
+                self._evicted[rid]["cache"] = None
+        self.scheduler.requeue(slot)
+        self.pool.free(slot)
+        self._live_slots.discard(slot)
+        # freeze the slot on-device so decode blocks dispatched before the
+        # next admission lands there cannot advance stale state
+        self.state = self.state._replace(
+            active=self.state.active.at[slot].set(False))
+
+    def _try_resume(self, slot: int, req: Request) -> bool:
+        """Restore a preempted request's slot from its eviction snapshot.
+        Returns False (caller re-prefills) if the snapshot was LRU-evicted
+        from the prefix cache in the meantime."""
+        meta = self._evicted.pop(req.request_id, None)
+        if meta is None:
+            return False
+        single = meta["cache"]
+        if single is None and self.prefix_cache is not None:
+            value = self.prefix_cache.take_exact(
+                req.prompt_tokens + req.output_tokens, salt=self._salt(req))
+            if value is not None:
+                single = value["cache"]
+        if single is None:
+            return False
+        self.pool.insert(slot, single)
+        self._admit_rows_to_state(
+            [(slot, req, req.output_tokens[-1],
+              len(req.prompt_tokens) + req.num_generated - 1,
+              meta["ctx_valid"], True)])
+        self._live_slots.add(slot)
+        self.scheduler.stats.resumed += 1
+        return True
+
+    def _open_prefill(self, slot: Optional[int], req: Request,
+                      tokens: Optional[List[int]] = None) -> _PrefillJob:
         t0 = time.monotonic()
-        tokens = list(req.prompt_tokens)
+        tokens = list(req.prompt_tokens if tokens is None else tokens)
         assert tokens, "empty prompt"
 
         embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
@@ -440,7 +645,7 @@ class InferenceEngine:
                 cross_cached = True
 
         return _PrefillJob(
-            slot=slot, req=req, cache=single, consumed=matched,
+            slot=slot, req=req, tokens=tokens, cache=single, consumed=matched,
             embeds=embeds, ctx_valid=ctx_valid, cross_cached=cross_cached,
             publish_xkv=(set_digest is not None
                          and self.content_cache is not None
@@ -471,7 +676,7 @@ class InferenceEngine:
 
         groups: Dict[Tuple[int, bool], List[Tuple[_PrefillJob, int]]] = {}
         for job in jobs:
-            remaining = len(job.req.prompt_tokens) - job.consumed
+            remaining = len(job.tokens) - job.consumed
             take = (remaining
                     if self.prefill_chunk == 0 or self.legacy_admission
                     else min(self.prefill_chunk, remaining))
@@ -487,6 +692,9 @@ class InferenceEngine:
             groups.setdefault((bucket, job.cross_cached),
                               []).append((job, take))
 
+        if self.speculative_fill and groups:
+            self._backfill_groups(groups)
+
         completed: List[Tuple[_PrefillJob, jax.Array]] = []
         for (bucket, cross_cached), rows in groups.items():
             batches = ([[r] for r in rows] if self.legacy_admission
@@ -495,6 +703,47 @@ class InferenceEngine:
                 completed.extend(
                     self._run_wave_group(bucket, cross_cached, batch))
         return completed
+
+    def _backfill_groups(
+            self, groups: Dict[Tuple[int, bool],
+                               List[Tuple[_PrefillJob, int]]]) -> None:
+        """Speculative wave filling: a group of k rows pads to the next
+        power of two anyway, so the kp-k padding rows are free compute —
+        fill them with the next chunk of in-flight speculative jobs and the
+        *first* chunk of the most urgent not-yet-admitted pending requests
+        (policy order).  A speculative row's chunk is capped at the group's
+        bucket — chunk geometry is masked out of the final cache, so any
+        split is bit-identical.  The wave's compiled shape never changes:
+        only dummy zero rows are replaced."""
+        key = self.scheduler.policy.key
+        waiting = sorted((j for j in self._spec_jobs.values()
+                          if j.logits is None), key=lambda j: key(j.req))
+        fresh = [r for r in self.scheduler.pending_in_order()
+                 if r.request_id not in self._spec_jobs
+                 and not r.preempt_count]
+        for (bucket, cross_cached), rows in groups.items():
+            kp = 1 << (len(rows) - 1).bit_length()
+            while len(rows) < kp:
+                job = next((j for j in waiting
+                            if j.cross_cached == cross_cached), None)
+                if job is not None:
+                    waiting.remove(job)
+                elif fresh and len(self._spec_jobs) < self.max_spec_jobs:
+                    req = fresh.pop(0)
+                    cand = self._open_prefill(None, req)
+                    self._spec_jobs[req.request_id] = cand
+                    self.scheduler.stats.spec_jobs += 1
+                    if cand.cross_cached != cross_cached:
+                        # parked for a future matching wave; stop here —
+                        # hunting for a match could materialise a cache
+                        # pytree per pending request in one step
+                        break
+                    job = cand
+                else:
+                    break
+                take = min(len(job.tokens) - job.consumed, bucket)
+                rows.append((job, take))
+                self.scheduler.stats.spec_chunks += 1
 
     def _run_wave_group(self, bucket: int, cross_cached: bool,
                         rows: List[Tuple[_PrefillJob, int]]
@@ -510,7 +759,7 @@ class InferenceEngine:
         last_idx = np.zeros((kp,), np.int32)
         singles = []
         for i, (job, take) in enumerate(rows):
-            seg = job.req.prompt_tokens[job.consumed:job.consumed + take]
+            seg = job.tokens[job.consumed:job.consumed + take]
             toks[i, :take] = seg
             poss[i] = job.consumed + np.arange(bucket, dtype=np.int32)
             valid[i, :take] = True
@@ -552,19 +801,26 @@ class InferenceEngine:
                     CrossKVEntry(xkv, self.ctx_len, tree_bytes(xkv)))
                 job.publish_xkv = False
 
-            if job.consumed >= len(job.req.prompt_tokens):
-                done.append((job, logits[i]))
+            if job.consumed >= len(job.tokens):
+                if job.slot is None:
+                    # speculative job finished before a slot freed: stage
+                    # the last-position logits; admission commits directly
+                    job.logits = logits[i]
+                else:
+                    done.append((job, logits[i]))
                 continue
             # Alg.2, per chunk: publish the partial prefix so an identical
             # long prompt arriving behind us resumes from finished chunks
             # instead of re-prefilling them.  Rolling: each boundary
             # replaces the job's previous entry, so one in-flight prompt
-            # holds at most one partial cache in the byte budget.
+            # holds at most one partial cache in the byte budget.  This is
+            # also what makes speculative prefill work durable: even if the
+            # speculated request is never admitted here, its chunks are
+            # already published for whoever prefills that prompt next.
             if (self.prefix_cache is not None
                     and job.consumed >= self.prefix_cache.block_size):
-                salt = (bytes.fromhex(job.req.media_set_digest)
-                        if job.req.media_set_digest else b"")
-                prefix = job.req.prompt_tokens[:job.consumed]
+                salt = self._salt(job.req)
+                prefix = job.tokens[:job.consumed]
                 new_key = self.prefix_cache.key_for(prefix, salt=salt)
                 self.prefix_cache.insert(
                     prefix, {"cache": job.cache, "len": job.consumed},
@@ -572,7 +828,9 @@ class InferenceEngine:
                 if job.partial_key and job.partial_key != new_key:
                     self.prefix_cache.discard(job.partial_key)
                 job.partial_key = new_key
-            self.scheduler.enqueue_prefill(job)
+            if job.slot is not None:
+                self.scheduler.enqueue_prefill(job)
+            # speculative jobs stay in _spec_jobs and ride a later wave
         return done
 
     def _commit_jobs(self, completed: List[Tuple[_PrefillJob, jax.Array]]
@@ -592,12 +850,18 @@ class InferenceEngine:
         wave = []
         for job, first in zip(jobs, firsts):
             req = job.req
-            req.prefill_time = now - job.t0
-            req.first_token_time = now
+            # guards: a preempted request resumed by re-prefill keeps its
+            # original prefill/first-token timestamps (TTFT is a property
+            # of the request, not of its latest slot binding)
+            if req.prefill_time is None:
+                req.prefill_time = now - job.t0
+            if req.first_token_time is None:
+                req.first_token_time = now
             req.output_tokens.append(int(first))
             wave.append(_Admission(
                 job.slot, req, job.cache, int(first),
-                None if job.ctx_valid is None else job.ctx_valid[0]))
+                None if job.ctx_valid is None else job.ctx_valid[0],
+                seq_len=len(job.tokens)))
         return self._commit_admissions(wave)
 
     def _commit_admissions(self, wave: List[_Admission]) -> List[StreamEvent]:
@@ -608,32 +872,49 @@ class InferenceEngine:
         self._live_slots.update(a.slot for a in wave)
         events: List[StreamEvent] = []
         for a in wave:
-            self._streamers[a.req.request_id] = TokenStreamDecoder(self.tokenizer)
+            # a resumed-by-prefill request keeps its streamer (mid-UTF-8
+            # decode state survives the eviction)
+            if a.req.request_id not in self._streamers:
+                self._streamers[a.req.request_id] = \
+                    TokenStreamDecoder(self.tokenizer)
             text = self._streamers[a.req.request_id].push_token(a.first_token)
             events.append(StreamEvent(a.req.request_id, a.first_token, text))
             events.extend(self._maybe_finish(a.slot, a.req, a.first_token))
 
-        k = len(wave)
+        self._admit_rows_to_state(
+            [(a.slot, a.req, a.first_token, a.seq_len, a.ctx_valid,
+              not a.req.is_finished) for a in wave])
+        return events
+
+    def _admit_rows_to_state(self, rows: List[Tuple[int, Request, int, int,
+                                                    Optional[np.ndarray],
+                                                    bool]]) -> None:
+        """Scatter admission rows into the device :class:`DecodeState` — the
+        one place that encodes how a slot's decode state is laid out, shared
+        by wave commits and preemption resumes (drift between the two would
+        corrupt only resumed requests, the hardest path to notice).  Each
+        row: (slot, req, last_token, position-of-last_token, ctx_valid row
+        or None, active)."""
+        k = len(rows)
         stops = np.full((k, self.max_stop_tokens), -1, np.int32)
         ctx = np.zeros((k, max(self.ctx_len, 1)), bool)
-        for i, a in enumerate(wave):
-            ids = (self.tokenizer.EOS,) + tuple(a.req.sampling.stop_token_ids)
+        for i, (_, req, _, _, ctx_valid, _) in enumerate(rows):
+            ids = (self.tokenizer.EOS,) + tuple(req.sampling.stop_token_ids)
             stops[i, :len(ids)] = ids
-            if a.ctx_valid is not None:
-                ctx[i] = a.ctx_valid
+            if ctx_valid is not None:
+                ctx[i] = ctx_valid
         self.state = admit_decode_state(
             self.state,
-            jnp.asarray([a.slot for a in wave], jnp.int32),
-            jnp.asarray([a.first_token for a in wave], jnp.int32),
-            jnp.asarray([len(a.req.prompt_tokens) for a in wave], jnp.int32),
-            jnp.asarray([a.req.sampling.temperature for a in wave],
+            jnp.asarray([slot for slot, *_ in rows], jnp.int32),
+            jnp.asarray([last for _, _, last, *_ in rows], jnp.int32),
+            jnp.asarray([pos for _, _, _, pos, *_ in rows], jnp.int32),
+            jnp.asarray([req.sampling.temperature for _, req, *_ in rows],
                         jnp.float32),
             jnp.asarray(ctx),
-            jnp.asarray([a.req.sampling.max_tokens - a.req.num_generated
-                         for a in wave], jnp.int32),
+            jnp.asarray([req.sampling.max_tokens - req.num_generated
+                         for _, req, *_ in rows], jnp.int32),
             jnp.asarray(stops),
-            jnp.asarray([not a.req.is_finished for a in wave], bool))
-        return events
+            jnp.asarray([active for *_, active in rows], bool))
 
     # ------------------------------------------------------------------ #
     def _maybe_finish(self, slot: int, req: Request, token: int
@@ -663,12 +944,10 @@ class InferenceEngine:
         if self.prefix_cache is not None and not wrapped and \
                 len(req.prompt_tokens) >= self.prefix_cache.block_size:
             # salt from the digest stashed at admission — no media re-decode
-            salt = (bytes.fromhex(req.media_set_digest)
-                    if req.media_set_digest else b"")
             single = self.pool.read(slot)
             value = {"cache": single, "len": len(req.prompt_tokens)}
             self.prefix_cache.insert(req.prompt_tokens, value,
-                                     tree_bytes(single), salt=salt)
+                                     tree_bytes(single), salt=self._salt(req))
         self.scheduler.retire(slot)
         self.pool.free(slot)
         self._live_slots.discard(slot)
@@ -683,7 +962,7 @@ class InferenceEngine:
                 raise PromptTooLongError(
                     f"prompt has {n} tokens but the KV cache holds "
                     f"{self.pool.cache_len}; raise cache_len or pass "
-                    f"truncate_long_prompts=True")
+                    "truncate_long_prompts=True")
             req.metadata["truncated_prompt_from"] = n
             req.prompt_tokens = list(req.prompt_tokens[-self.pool.cache_len:])
         if len(req.sampling.stop_token_ids) + 1 > self.max_stop_tokens:
@@ -753,8 +1032,12 @@ class InferenceEngine:
                     events.append(StreamEvent(req.request_id, tok, text))
                     events.extend(self._maybe_finish(slot, req, tok))
 
-        # 5. land finished prefills (next block picks the new slots up)
-        events.extend(self._commit_jobs(completed))
+        # 5. land finished prefills (next block picks the new slots up);
+        # speculative jobs whose slot arrived this step commit in the same
+        # batched call, their staged logits standing in for a wave row
+        ready = [(j, j.logits) for j in self._ready_jobs]
+        self._ready_jobs.clear()
+        events.extend(self._commit_jobs(ready + completed))
         return events
 
     def run(self) -> List[StreamEvent]:

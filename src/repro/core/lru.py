@@ -6,7 +6,7 @@ design (the engine is single-threaded per step, like the paper's)."""
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Optional, Tuple
 
 

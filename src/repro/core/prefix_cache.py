@@ -79,6 +79,41 @@ class TextPrefixCache:
         return len(chain) * self.block_size
 
     # ------------------------------------------------------------------ #
+    # exact-sequence entries (preemption snapshots)
+    # ------------------------------------------------------------------ #
+    def _exact_key(self, tokens: Sequence[int], salt: bytes) -> str:
+        """Key for the *exact* token sequence (tail block included), in a
+        separate namespace from the block-aligned chain so the two can never
+        collide.  Used for preemption snapshots, where a resume must match
+        the full prompt+generated history bit-for-bit or not at all."""
+        chain = self._chain(tokens, salt)
+        prev = chain[-1] if chain else hashlib.sha256(b"prefix:" + salt).digest()
+        tail = tokens[len(tokens) - len(tokens) % self.block_size:]
+        return _h(b"exact:" + prev, tail).hex()
+
+    def insert_exact(self, tokens: Sequence[int], value: Any, nbytes: int, *,
+                     salt: bytes = b"") -> str:
+        """Cache ``value`` under the exact token sequence.  The entry lives
+        in the same byte-budget LRU as prefix entries, so an eviction
+        snapshot competes with (and can be displaced by) ordinary prefix
+        reuse — callers must treat a later miss as "re-prefill"."""
+        key = self._exact_key(tokens, salt)
+        self._lru.put(key, value, nbytes)
+        return key
+
+    def take_exact(self, tokens: Sequence[int], *, salt: bytes = b""
+                   ) -> Optional[Any]:
+        """Pop the exact-sequence entry for ``tokens`` (None if it was
+        LRU-evicted).  Popping — not peeking — because a resumed request
+        immediately diverges from the stored history, making the entry
+        useless to anyone else."""
+        key = self._exact_key(tokens, salt)
+        value = self._lru.get(key)
+        if value is not None:
+            self._lru.discard(key)
+        return value
+
+    # ------------------------------------------------------------------ #
     # rolling partial publication (chunked prefill)
     # ------------------------------------------------------------------ #
     def key_for(self, tokens: Sequence[int], *, salt: bytes = b""

@@ -42,6 +42,12 @@ class Request:
     audio: Optional[Any] = None
     request_id: int = field(default_factory=lambda: next(_req_counter))
     arrival_time: float = field(default_factory=time.monotonic)
+    # scheduling class: higher priority = more urgent; deadline_ms is a
+    # latency target relative to arrival (None = best-effort batch work).
+    # Both are inputs to the scheduler's SchedulingPolicy ordering and to
+    # slot preemption — see core/scheduler.py.
+    priority: int = 0
+    deadline_ms: Optional[float] = None
 
     # -- filled in by the engine --------------------------------------- #
     output_tokens: List[int] = field(default_factory=list)
@@ -55,11 +61,38 @@ class Request:
     # media-set digest computed once during admission; reused at retire for
     # the prefix-cache salt (avoids re-decoding + re-hashing every frame)
     media_set_digest: Optional[str] = None
+    # times this request was evicted from a decode slot by a more urgent
+    # request (scheduler preemption); bounds re-eviction churn
+    preempt_count: int = 0
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def is_finished(self) -> bool:
         return self.finish_reason is not None
+
+    @property
+    def deadline_at(self) -> Optional[float]:
+        """Absolute monotonic deadline (None = no deadline)."""
+        if self.deadline_ms is None:
+            return None
+        return self.arrival_time + self.deadline_ms / 1e3
+
+    @property
+    def latency_class(self) -> str:
+        """Coarse workload class for per-class latency accounting
+        (``GET /stats``): deadline- or priority-tagged requests are
+        "interactive", everything else is best-effort "batch"."""
+        if self.deadline_ms is not None or self.priority > 0:
+            return "interactive"
+        return "batch"
+
+    @property
+    def missed_deadline(self) -> Optional[bool]:
+        """Whether the finished request blew its deadline (None while
+        running or when no deadline was set)."""
+        if self.deadline_at is None or self.finish_time is None:
+            return None
+        return self.finish_time > self.deadline_at
 
     @property
     def ttft(self) -> Optional[float]:

@@ -1,4 +1,5 @@
-"""Continuous batching scheduler — paper Algorithm 1, slot-based for TPU.
+"""Continuous batching scheduler — paper Algorithm 1, slot-based for TPU,
+with pluggable scheduling policies, speculative-fill hooks, and preemption.
 
 The paper's loop:  admit pending requests while |B| < M at token boundaries;
 generate one token for every active request; retire completed requests
@@ -12,15 +13,108 @@ prompt is split into fixed-size prefill chunks parks a chunk job here between
 engine steps, and :meth:`plan_decode_block` collapses the decode block to one
 token while any chunk (or pending request) is waiting — the interleave policy
 that keeps TTFT flat while long prompts prefill piecewise behind in-flight
-decode blocks."""
+decode blocks.
+
+Ordering is policy-driven (:class:`SchedulingPolicy`): a policy defines one
+total order over requests (smaller key = more urgent) that is applied to
+**admission** (which pending request binds to a freed slot), to the **chunk
+queue** (which prefill job's rows lead a wave, and therefore commit/TTFT
+order), and to **preemption** (an urgent pending request may evict the
+worst active slot — see ``InferenceEngine._plan_preemptions``).  FIFO is the
+default and is never preemptive; ``priority`` orders by the request's
+integer priority; ``edf`` is earliest-deadline-first (deadline-less requests
+sort behind every deadline and fall back to priority/arrival order)."""
 from __future__ import annotations
 
+import math
+import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.request import Request
+
+
+# --------------------------------------------------------------------------- #
+# scheduling policies
+# --------------------------------------------------------------------------- #
+class SchedulingPolicy:
+    """Total order over requests: ``key(a) < key(b)`` means a is more
+    urgent.  Keys must be static per request (computed from admission-time
+    fields only) so preemption decisions cannot oscillate."""
+
+    name = "base"
+    #: whether an urgent pending request may evict an active slot (the
+    #: engine additionally gates this behind its ``preemption`` knob)
+    preemptive = False
+
+    def key(self, req: Request) -> Tuple:
+        raise NotImplementedError
+
+    def more_urgent(self, a: Request, b: Request) -> bool:
+        return self.key(a) < self.key(b)
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Strict arrival order (the seed behaviour).  Never preempts: an
+    earlier arrival is by definition at least as urgent as anything that
+    could ask for its slot."""
+
+    name = "fifo"
+    preemptive = False
+
+    def key(self, req: Request) -> Tuple:
+        return (req.arrival_time, req.request_id)
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Higher ``Request.priority`` first; FIFO within a priority level."""
+
+    name = "priority"
+    preemptive = True
+
+    def key(self, req: Request) -> Tuple:
+        return (-req.priority, req.arrival_time, req.request_id)
+
+
+class EDFPolicy(SchedulingPolicy):
+    """Earliest-deadline-first.  Deadline-less requests sort behind every
+    deadline (``+inf``) and fall back to priority, then arrival order."""
+
+    name = "edf"
+    preemptive = True
+
+    def key(self, req: Request) -> Tuple:
+        d = req.deadline_at
+        return (math.inf if d is None else d, -req.priority,
+                req.arrival_time, req.request_id)
+
+
+POLICIES = {p.name: p for p in (FIFOPolicy, PriorityPolicy, EDFPolicy)}
+
+
+def make_policy(policy: Union[str, SchedulingPolicy, None]
+                ) -> SchedulingPolicy:
+    if policy is None:
+        return FIFOPolicy()
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {policy!r} "
+                         f"(have: {sorted(POLICIES)})") from None
+
+
+# --------------------------------------------------------------------------- #
+def _percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile without a numpy dependency in the core."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    idx = min(len(vs) - 1, max(0, round(q / 100.0 * (len(vs) - 1))))
+    return vs[idx]
 
 
 @dataclass
@@ -33,6 +127,11 @@ class SchedulerStats:
     peak_batch: int = 0
     prefill_waves: int = 0       # batched prefill dispatches (≥1 row each)
     prefill_chunks: int = 0      # chunk forward passes (= rows) in the waves
+    spec_jobs: int = 0           # speculative prefill jobs opened
+    spec_chunks: int = 0         # wave rows that carried speculative chunks
+    spec_admitted: int = 0       # admissions that reused speculative progress
+    preemptions: int = 0         # active slots evicted for urgent requests
+    resumed: int = 0             # evicted requests resumed from a snapshot
 
     @property
     def host_syncs_per_token(self) -> float:
@@ -46,28 +145,63 @@ class SchedulerStats:
         return self.prefill_chunks / max(self.prefill_waves, 1)
 
 
+#: per-class latency window: enough for stable p95 without unbounded memory
+_LAT_WINDOW = 512
+
+
 class ContinuousBatchingScheduler:
-    def __init__(self, max_batch: int):
+    def __init__(self, max_batch: int,
+                 policy: Union[str, SchedulingPolicy, None] = None):
         self.max_batch = max_batch
-        self.pending: Deque[Request] = deque()
+        self.policy = make_policy(policy)
+        # pending is kept in arrival order; admission selects the policy
+        # minimum (O(n) per admit — queues here are tens of requests, and a
+        # heap would pessimise the dominant FIFO case for no measurable win)
+        self.pending: List[Request] = []
         self.active: Dict[int, Request] = {}       # slot -> request
         # prefill chunk jobs (opaque engine payloads) waiting for their next
-        # chunk forward pass; FIFO, one chunk per job per engine step
+        # chunk forward pass; one chunk per job per engine step, drained in
+        # policy order each wave
         self.chunk_queue: Deque[Any] = deque()
         self.stats = SchedulerStats()
+        # per-class latency accounting (read by /stats handler threads while
+        # the engine loop appends — guarded by a lock so a snapshot is
+        # internally consistent)
+        self._lat_lock = threading.Lock()
+        self._lat: Dict[str, Deque[Tuple[float, float]]] = {}
+        self._lat_count: Dict[str, int] = {}
+        self._lat_miss: Dict[str, int] = {}
 
     # ------------------------------------------------------------------ #
     def add(self, request: Request) -> None:
         self.pending.append(request)
 
+    def _pop_next(self) -> Request:
+        req = min(self.pending, key=self.policy.key)
+        self.pending.remove(req)
+        return req
+
+    def peek_pending(self) -> Optional[Request]:
+        """Most urgent pending request under the policy (None if empty).
+        Tolerates concurrent appends from submission threads."""
+        snapshot = list(self.pending)
+        if not snapshot:
+            return None
+        return min(snapshot, key=self.policy.key)
+
+    def pending_in_order(self) -> List[Request]:
+        """Pending requests sorted most-urgent-first (a snapshot; used by
+        the engine to pick speculative-prefill candidates)."""
+        return sorted(list(self.pending), key=self.policy.key)
+
     def admit(self, free_slots: List[int]) -> List[Tuple[int, Request]]:
-        """Alg.1 lines 3-6: fill free slots from the pending queue (called at
-        a token boundary, before the next generation step)."""
+        """Alg.1 lines 3-6: fill free slots from the pending queue in policy
+        order (called at a token boundary, before the next step)."""
         admitted = []
         for slot in free_slots:
             if not self.pending or len(self.active) >= self.max_batch:
                 break
-            req = self.pending.popleft()
+            req = self._pop_next()
             self.active[slot] = req
             admitted.append((slot, req))
             self.stats.admitted += 1
@@ -78,6 +212,34 @@ class ContinuousBatchingScheduler:
         """Alg.1 lines 12-16: remove a completed request immediately."""
         req = self.active.pop(slot)
         self.stats.retired += 1
+        self.record_latency(req)
+        return req
+
+    # ------------------------------------------------------------------ #
+    # preemption (policy-gated; mechanics live in the engine)
+    # ------------------------------------------------------------------ #
+    def select_victim(self, eligible_slots, max_preemptions: int
+                      ) -> Optional[Tuple[int, Request]]:
+        """Least urgent active request among ``eligible_slots`` (the engine
+        passes its live-decode slot set: mid-prefill slots are not worth
+        evicting — their cache is partial and their slot frees soonest by
+        just finishing).  Requests already evicted ``max_preemptions`` times
+        are exempt, bounding re-eviction churn."""
+        candidates = [(slot, req) for slot, req in self.active.items()
+                      if slot in eligible_slots
+                      and req.preempt_count < max_preemptions]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda sr: self.policy.key(sr[1]))
+
+    def requeue(self, slot: int) -> Request:
+        """Evict the slot's request back to the pending queue (preemption).
+        The engine owns the cache/decode-state snapshot that makes the
+        eviction resumable; here it is pure bookkeeping."""
+        req = self.active.pop(slot)
+        req.preempt_count += 1
+        self.stats.preemptions += 1
+        self.pending.append(req)
         return req
 
     # ------------------------------------------------------------------ #
@@ -88,11 +250,20 @@ class ContinuousBatchingScheduler:
         self.chunk_queue.append(job)
 
     def pop_prefill_wave(self) -> List[Any]:
-        """Drain the chunk queue for one wave (every in-flight job advances
-        one chunk per engine step; FIFO order is preserved across waves
-        because unfinished jobs re-enqueue in pop order)."""
+        """Drain the chunk queue for one wave in policy order (every
+        in-flight job advances one chunk per engine step; the policy decides
+        which job's rows lead the wave and therefore commit first).  Jobs
+        without a ``req`` attribute (opaque payloads in tests) keep FIFO
+        order ahead of the rest."""
         wave = list(self.chunk_queue)
         self.chunk_queue.clear()
+        key = self.policy.key
+
+        def job_key(job):
+            req = getattr(job, "req", None)
+            return (0,) if req is None else (1,) + tuple(key(req))
+
+        wave.sort(key=job_key)
         return wave
 
     @property
@@ -122,26 +293,65 @@ class ContinuousBatchingScheduler:
     # ------------------------------------------------------------------ #
     # observability
     # ------------------------------------------------------------------ #
+    def record_latency(self, req: Request) -> None:
+        """Fold a finished request into the per-class latency window
+        (called at retire; preempted-then-resumed requests record once,
+        with their original arrival time)."""
+        if req.finish_time is None:
+            return
+        cls = req.latency_class
+        ttft = req.ttft if req.ttft is not None else 0.0
+        e2e = req.finish_time - req.arrival_time
+        with self._lat_lock:
+            dq = self._lat.setdefault(cls, deque(maxlen=_LAT_WINDOW))
+            dq.append((ttft, e2e))
+            self._lat_count[cls] = self._lat_count.get(cls, 0) + 1
+            if req.missed_deadline:
+                self._lat_miss[cls] = self._lat_miss.get(cls, 0) + 1
+
+    def latency_by_class(self) -> Dict[str, Dict[str, float]]:
+        """Per-class TTFT/e2e percentiles over the rolling window, plus
+        lifetime counts and deadline misses."""
+        with self._lat_lock:
+            snap = {cls: list(dq) for cls, dq in self._lat.items()}
+            counts = dict(self._lat_count)
+            misses = dict(self._lat_miss)
+        out: Dict[str, Dict[str, float]] = {}
+        for cls, rows in snap.items():
+            ttfts = [t * 1e3 for t, _ in rows]
+            e2es = [e * 1e3 for _, e in rows]
+            out[cls] = {
+                "count": counts.get(cls, 0),
+                "window": len(rows),
+                "ttft_p50_ms": _percentile(ttfts, 50),
+                "ttft_p95_ms": _percentile(ttfts, 95),
+                "e2e_p50_ms": _percentile(e2es, 50),
+                "e2e_p95_ms": _percentile(e2es, 95),
+                "deadline_missed": misses.get(cls, 0),
+            }
+        return out
+
     @property
     def queue_depth(self) -> int:
-        """Requests waiting for admission (FIFO starvation surface)."""
+        """Requests waiting for admission (starvation surface)."""
         return len(self.pending)
 
     @property
     def oldest_wait_s(self) -> float:
         """Age of the oldest pending request (0.0 with an empty queue).
-        Read from HTTP handler threads while the engine loop pops the
-        queue, so the head access must tolerate a concurrent drain."""
-        try:
-            head = self.pending[0]
-        except IndexError:
+        Read from HTTP handler threads while the engine loop mutates the
+        queue, so it works on a snapshot and tolerates a concurrent
+        drain."""
+        arrivals = [r.arrival_time for r in list(self.pending)]
+        if not arrivals:
             return 0.0
-        return max(0.0, time.monotonic() - head.arrival_time)
+        return max(0.0, time.monotonic() - min(arrivals))
 
     def snapshot(self) -> Dict[str, Any]:
         """Point-in-time stats dict for the server's ``/stats`` endpoint."""
         s = self.stats
         return {
+            "policy": self.policy.name,
             "queue_depth": self.queue_depth,
             "oldest_wait_s": self.oldest_wait_s,
             "active": len(self.active),
@@ -156,6 +366,12 @@ class ContinuousBatchingScheduler:
             "prefill_chunks": s.prefill_chunks,
             "rows_per_wave": s.rows_per_wave,
             "host_syncs_per_token": s.host_syncs_per_token,
+            "spec_jobs": s.spec_jobs,
+            "spec_chunks": s.spec_chunks,
+            "spec_admitted": s.spec_admitted,
+            "preemptions": s.preemptions,
+            "resumed": s.resumed,
+            "latency_by_class": self.latency_by_class(),
         }
 
     # ------------------------------------------------------------------ #

@@ -15,7 +15,6 @@ flash-style — O(S) memory via lax.scan over KV chunks — to keep
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -80,7 +80,7 @@ def run_combo(arch: str, shape: str, *, multi_pod: bool = False,
     from repro.configs import get_config
     from repro.distributed import use_sharding
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.specs import build_step_spec, shape_rules, default_fsdp
+    from repro.launch.specs import build_step_spec, shape_rules
 
     t0 = time.time()
     cfg = get_config(arch)

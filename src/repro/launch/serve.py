@@ -34,6 +34,25 @@ def main() -> None:
     ap.add_argument("--max-prefill-buckets", type=int, default=6,
                     help="cap on distinct compiled prefill bucket shapes "
                          "(smaller = more padding, less compile churn)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "priority", "edf"],
+                    help="request ordering for admission and the prefill "
+                         "chunk queue: fifo (arrival), priority (request "
+                         "'priority' field), edf (earliest 'deadline_ms' "
+                         "first; deadline-less requests sort last)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="let an urgent pending request (per --sched-policy; "
+                         "fifo never preempts) evict the least urgent "
+                         "active slot; the evicted request resumes "
+                         "bit-identically from its snapshot under greedy "
+                         "decode")
+    ap.add_argument("--max-preemptions", type=int, default=2,
+                    help="max times one request may be evicted (bounds "
+                         "preemption churn)")
+    ap.add_argument("--no-spec-fill", action="store_true",
+                    help="disable speculative wave filling (backfilling "
+                         "prefill-wave padding rows with chunks of "
+                         "not-yet-admitted pending requests)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,12 +65,16 @@ def main() -> None:
         enable_content_cache=not args.no_content_cache,
         max_decode_block=args.max_decode_block,
         prefill_chunk=args.prefill_chunk,
-        max_prefill_buckets=args.max_prefill_buckets)
+        max_prefill_buckets=args.max_prefill_buckets,
+        sched_policy=args.sched_policy,
+        preemption=args.preemption,
+        max_preemptions=args.max_preemptions,
+        speculative_fill=not args.no_spec_fill)
     server = ApiServer(OpenAIServer(engine, cfg.name, threaded=True),
                        port=args.port)
     server.start()
     print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions "
-          f"(stats: /stats)")
+          "(stats: /stats)")
     try:
         while True:
             time.sleep(3600)

@@ -23,7 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig
 from repro.distributed import (AxisRules, batch_sharding, cache_shardings,
-                               default_rules, param_shardings, replicated)
+                               default_rules, param_shardings)
 from repro.models import build_model
 from repro.models.model import cache_shapes
 from repro.training.train_step import init_train_state, make_train_step

@@ -11,7 +11,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.training.checkpoint import save_checkpoint

@@ -7,11 +7,9 @@ thin stdlib HTTP wrapper (serving/server.py) exposes it on a socket; the
 benchmark/test suite drives this layer directly."""
 from __future__ import annotations
 
-import json
 import time
 import uuid
-from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List
 
 from repro.core.engine import InferenceEngine
 from repro.core.request import FinishReason, Request, SamplingParams
@@ -62,8 +60,18 @@ class OpenAIServer:
             temperature=float(body.get("temperature", 0.0)),
             max_tokens=int(body.get("max_tokens", 64)),
         )
+        # scheduling-class extensions (beyond the OpenAI schema): integer
+        # priority (higher = more urgent) and a deadline in milliseconds
+        # relative to arrival — inputs to the engine's scheduling policy
+        # (admission order, chunk-queue order, preemption); see
+        # core/scheduler.py and GET /stats latency_by_class.
+        priority = body.get("priority")
+        deadline_ms = body.get("deadline_ms")
         return Request(prompt_tokens=tok.encode(prompt), images=images,
-                       sampling=sampling)
+                       sampling=sampling,
+                       priority=0 if priority is None else int(priority),
+                       deadline_ms=(None if deadline_ms is None
+                                    else float(deadline_ms)))
 
     def _response(self, req: Request) -> Dict[str, Any]:
         text = self.engine.tokenizer.decode(req.output_tokens)
@@ -128,9 +136,11 @@ class OpenAIServer:
 
     def stats(self) -> Dict[str, Any]:
         """Serving observability (``GET /stats``): scheduler queue depth and
-        wait age (FIFO starvation surface), decode-block and admission
-        -pipeline counters, and the engine's prefill knobs — the signals the
-        prefill/decode overlap work is judged by in production."""
+        wait age (starvation surface), decode-block and admission-pipeline
+        counters, scheduling-policy counters (speculative fill, preemptions,
+        per-class TTFT/e2e latency percentiles and deadline misses), and the
+        engine's knobs — the signals the prefill/decode overlap and
+        deadline-scheduling work are judged by in production."""
         eng = self.engine
         out = self.engine.scheduler.snapshot()
         out.update({
@@ -142,6 +152,9 @@ class OpenAIServer:
             "prefill_chunk": eng.prefill_chunk,
             "prefill_bucket_floor": eng._bucket_floor,
             "prefill_buckets_compiled": sorted(eng._seen_buckets),
+            "sched_policy": eng.scheduler.policy.name,
+            "preemption": eng.preemption,
+            "speculative_fill": eng.speculative_fill,
         })
         if eng.prefix_cache is not None:
             out["prefix_cache"] = {

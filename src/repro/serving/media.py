@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import base64
 import io
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 import numpy as np
 

@@ -1,10 +1,12 @@
 """Minimal stdlib HTTP server exposing the OpenAI-compatible API.
 
-``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE),
+``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE; bodies may
+carry the scheduling extensions ``priority`` and ``deadline_ms``),
 ``GET /v1/models`` and ``GET /stats`` (scheduler queue depth / oldest wait /
-admission-pipeline counters).  Single-threaded handler in front of the
-continuous batching engine; intended for local use and the serving
-example."""
+admission-pipeline counters / per-class latency percentiles).  ``/stats``
+is served from handler threads while the engine loop mutates the scheduler,
+so everything it reads is snapshot-consistent by construction (see
+``Scheduler.snapshot``).  Intended for local use and the serving example."""
 from __future__ import annotations
 
 import json

@@ -4,7 +4,6 @@ No external checkpoint libs; path-keyed entries make checkpoints robust to
 pytree-definition reordering and give readable keys for surgery."""
 from __future__ import annotations
 
-import json
 import os
 from typing import Any, Dict
 

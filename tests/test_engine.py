@@ -143,8 +143,8 @@ def test_content_cache_speedup_and_correctness(vcfg):
         return r, time.monotonic() - t0
 
     r_cold, _ = ask()
-    r_warm, t_warm = ask()      # second identical query: full cache path
-    r_warm2, t_warm2 = ask()    # third: no compile noise at all
+    r_warm, _ = ask()           # second identical query: full cache path
+    r_warm2, _ = ask()          # third: no compile noise at all
     assert r_cold.output_tokens == r_warm.output_tokens == r_warm2.output_tokens
     assert r_warm2.vision_cache_hits == 1 and r_warm2.vision_cache_misses == 0
 

@@ -34,7 +34,8 @@ def test_vision_stub_deterministic_and_resolution_scaled(rng):
     np.testing.assert_array_equal(a, b)
     assert a.shape == (16, 32)
     # different pixels -> different embeddings
-    img2 = img.copy(); img2[0, 0, 0] ^= 0xFF
+    img2 = img.copy()
+    img2[0, 0, 0] ^= 0xFF
     assert np.abs(enc(img2) - a).max() > 0
 
 

@@ -3,12 +3,10 @@
 here, so every layout is numerically identical by construction — what this
 pins is that the variant *specs* are legal for every param/cache shape)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.distributed import default_rules, use_sharding
+from repro.distributed import use_sharding
 from repro.launch.specs import build_step_spec, shape_rules
 import repro.launch.specs as specs_mod
 

@@ -1,0 +1,421 @@
+"""Deadline-aware scheduling: policy ordering, speculative wave filling,
+slot preemption, per-class latency observability, and the sched_policy
+benchmark smoke.
+
+Pins the policy-subsystem contract: policies only reorder *schedule*, never
+semantics — greedy outputs stay bit-identical to the non-preempting FIFO
+path for every request, including evicted-and-resumed ones; speculative
+filling changes wave packing only; per-class latency surfaces in
+``GET /stats`` and stays snapshot-consistent under concurrent readers."""
+import json
+import threading
+import urllib.request
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import Request, SamplingParams
+from repro.core.scheduler import (ContinuousBatchingScheduler, EDFPolicy,
+                                  FIFOPolicy, PriorityPolicy, make_policy)
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+LONG = "shared system prompt for equivalence checking " * 3   # ~139 tokens
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def _req(text, max_tokens=6, priority=0, deadline_ms=None):
+    return Request(prompt_tokens=TOK.encode(text),
+                   sampling=SamplingParams(max_tokens=max_tokens),
+                   priority=priority, deadline_ms=deadline_ms)
+
+
+# --------------------------------------------------------------------------- #
+# policy ordering (pure scheduler)
+# --------------------------------------------------------------------------- #
+def test_make_policy_resolves_names_and_rejects_unknown():
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    assert isinstance(make_policy("edf"), EDFPolicy)
+    assert isinstance(make_policy(None), FIFOPolicy)
+    with pytest.raises(ValueError):
+        make_policy("shortest-job-first")
+
+
+def test_priority_policy_orders_admission():
+    s = ContinuousBatchingScheduler(max_batch=2, policy="priority")
+    low, high, mid = _req("low"), _req("high", priority=9), \
+        _req("mid", priority=4)
+    for r in (low, high, mid):
+        s.add(r)
+    admitted = s.admit([0, 1])
+    assert [r.request_id for _, r in admitted] == [high.request_id,
+                                                  mid.request_id]
+    assert s.pending == [low]
+
+
+def test_edf_policy_orders_by_deadline_then_fifo():
+    s = ContinuousBatchingScheduler(max_batch=3, policy="edf")
+    none1 = _req("no deadline, first")
+    tight = _req("tight", deadline_ms=10.0)
+    loose = _req("loose", deadline_ms=10_000.0)
+    for r in (none1, loose, tight):
+        s.add(r)
+    admitted = s.admit([0, 1, 2])
+    assert [r.request_id for _, r in admitted] == [
+        tight.request_id, loose.request_id, none1.request_id]
+
+
+def test_chunk_queue_drains_in_policy_order():
+    class Job:
+        def __init__(self, req):
+            self.req = req
+
+    s = ContinuousBatchingScheduler(max_batch=4, policy="edf")
+    a, b, c = (_req("a"), _req("b", deadline_ms=5.0),
+               _req("c", deadline_ms=50.0))
+    for r in (a, b, c):
+        s.enqueue_prefill(Job(r))
+    wave = s.pop_prefill_wave()
+    assert [j.req.request_id for j in wave] == [b.request_id, c.request_id,
+                                                a.request_id]
+    # opaque payloads (no .req) keep FIFO order ahead of request jobs
+    s.enqueue_prefill(object())
+    s.enqueue_prefill(Job(b))
+    wave = s.pop_prefill_wave()
+    assert not hasattr(wave[0], "req") and wave[1].req is b
+
+
+def test_fifo_policy_is_default_and_never_preemptive():
+    s = ContinuousBatchingScheduler(max_batch=1)
+    assert s.policy.name == "fifo" and not s.policy.preemptive
+    assert make_policy("priority").preemptive
+    assert make_policy("edf").preemptive
+
+
+def test_select_victim_and_requeue():
+    s = ContinuousBatchingScheduler(max_batch=2, policy="edf")
+    soon, late = _req("soon", deadline_ms=5.0), _req("late")
+    s.add(soon)
+    s.add(late)
+    s.admit([0, 1])
+    slot, victim = s.select_victim({0, 1}, max_preemptions=2)
+    assert victim is late
+    req = s.requeue(slot)
+    assert req is late and req.preempt_count == 1
+    assert s.num_active == 1 and s.pending == [late]
+    assert s.stats.preemptions == 1
+    # a maxed-out request is no longer an eligible victim
+    late.preempt_count = 2
+    s.admit([slot])
+    assert s.select_victim({0, 1}, max_preemptions=2)[1] is soon
+
+
+# --------------------------------------------------------------------------- #
+# preemption: bit-identical greedy outputs vs the non-preempting FIFO path
+# --------------------------------------------------------------------------- #
+def _preempt_scenario(cfg, *, policy, preemption, prefix_cache,
+                      cache_max_bytes=512 * 1024 * 1024):
+    """One long batch request decodes alone; an urgent deadline request
+    arrives with all slots busy."""
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                          sched_policy=policy, preemption=preemption,
+                          enable_prefix_cache=prefix_cache,
+                          cache_max_bytes=cache_max_bytes)
+    batch = _req("long-running batch request " * 2, max_tokens=24)
+    eng.add_request(batch)
+    for _ in range(4):                   # commit + a few decode blocks
+        eng.step()
+    urgent = _req("urgent interactive!", max_tokens=6, deadline_ms=1.0)
+    eng.add_request(urgent)
+    eng.run()
+    return batch, urgent, eng
+
+
+def test_preemption_outputs_bit_identical_to_fifo(cfg):
+    b1, u1, _ = _preempt_scenario(cfg, policy="fifo", preemption=False,
+                                  prefix_cache=True)
+    b2, u2, eng = _preempt_scenario(cfg, policy="edf", preemption=True,
+                                    prefix_cache=True)
+    assert eng.scheduler.stats.preemptions >= 1
+    assert eng.scheduler.stats.resumed >= 1
+    # the urgent request actually jumped the line...
+    assert u2.finish_time < b2.finish_time
+    # ...and nobody's greedy output changed — including the evictee, whose
+    # decode resumed bit-for-bit from its snapshot
+    assert b1.output_tokens == b2.output_tokens
+    assert u1.output_tokens == u2.output_tokens
+    assert b2.finish_reason == b1.finish_reason
+
+
+def test_preemption_without_prefix_cache_uses_engine_side_snapshot(cfg):
+    b, u, eng = _preempt_scenario(cfg, policy="edf", preemption=True,
+                                  prefix_cache=False)
+    assert eng.scheduler.stats.preemptions >= 1
+    assert eng.scheduler.stats.resumed >= 1
+    assert b.is_finished and u.is_finished
+    ref, uref, _ = _preempt_scenario(cfg, policy="fifo", preemption=False,
+                                     prefix_cache=False)
+    assert b.output_tokens == ref.output_tokens
+    assert u.output_tokens == uref.output_tokens
+
+
+def test_preemption_resume_after_snapshot_lru_eviction(cfg):
+    """A snapshot squeezed out of the byte-budget LRU degrades to the
+    re-prefill resume path — outputs must still match FIFO exactly under
+    monolithic re-prefill numerics (same prefill kernels, same positions)."""
+    b, u, eng = _preempt_scenario(cfg, policy="edf", preemption=True,
+                                  prefix_cache=True, cache_max_bytes=1)
+    assert eng.scheduler.stats.preemptions >= 1
+    assert eng.scheduler.stats.resumed == 0      # snapshot was LRU-evicted
+    assert b.is_finished and u.is_finished
+    assert b.num_generated == 24 and u.num_generated == 6
+    ref_b, ref_u, _ = _preempt_scenario(cfg, policy="fifo", preemption=False,
+                                        prefix_cache=True)
+    assert b.output_tokens == ref_b.output_tokens
+    assert u.output_tokens == ref_u.output_tokens
+
+
+def test_engine_side_snapshots_bounded_by_pool_size(cfg):
+    """Without a prefix cache there is no byte-budget LRU to own eviction
+    snapshots, so the engine keeps at most one pool's worth (max_batch);
+    older evictees degrade to the re-prefill resume path instead of
+    pinning KV pytrees proportional to queue depth."""
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                          sched_policy="edf", preemption=True,
+                          enable_prefix_cache=False)
+    a = _req("batch request with no deadline " * 2, max_tokens=20)
+    eng.add_request(a)
+    for _ in range(3):
+        eng.step()
+    b = _req("soonish deadline", max_tokens=12, deadline_ms=120_000.0)
+    eng.add_request(b)
+    eng.step()                               # b evicts a
+    c = _req("urgent now", max_tokens=4, deadline_ms=1.0)
+    eng.add_request(c)
+    for _ in range(3):                       # c evicts b
+        eng.step()
+    assert eng.scheduler.stats.preemptions == 2
+    held = [m for m in eng._evicted.values() if m["cache"] is not None]
+    assert len(held) <= eng.pool.max_batch   # oldest snapshot was dropped
+    eng.run()
+    assert a.is_finished and b.is_finished and c.is_finished
+    # b resumed from its kept snapshot; a fell back to re-prefill
+    assert eng.scheduler.stats.resumed == 1
+
+
+def test_fifo_never_preempts_even_when_enabled(cfg):
+    b, u, eng = _preempt_scenario(cfg, policy="fifo", preemption=True,
+                                  prefix_cache=True)
+    assert eng.scheduler.stats.preemptions == 0
+    assert b.is_finished and u.is_finished
+
+
+def test_no_preemption_of_ring_wrapped_slots(cfg):
+    """A slot whose prompt+generated history fills the KV ring is not an
+    eligible victim: if its snapshot were later lost, the re-prefill
+    fallback could not rebuild a wrapped history exactly."""
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=64, sched_policy="edf",
+                          preemption=True)
+    hog = _req("x" * 40, max_tokens=60)      # 40 prompt + 60 gen >> 64 ring
+    eng.add_request(hog)
+    for _ in range(6):                       # decode well past cache_len
+        eng.step()
+    urgent = _req("now!", max_tokens=2, deadline_ms=1.0)
+    eng.add_request(urgent)
+    eng.run()
+    assert eng.scheduler.stats.preemptions == 0
+    assert hog.is_finished and urgent.is_finished
+
+
+# --------------------------------------------------------------------------- #
+# speculative wave filling
+# --------------------------------------------------------------------------- #
+def _spec_reqs():
+    # staggered lengths keep wave sizes off powers of two -> padding rows
+    return [_req(LONG[: 40 + 25 * i] + f" tail {i}", max_tokens=5)
+            for i in range(5)]
+
+
+def test_speculative_fill_outputs_identical_and_counters(cfg):
+    mk = lambda spec: InferenceEngine(
+        cfg, max_batch=3, cache_len=256, prefill_chunk=32,
+        enable_prefix_cache=False, speculative_fill=spec)
+    plain = mk(False).generate(_spec_reqs())
+    eng = mk(True)
+    spec = eng.generate(_spec_reqs())
+    for ra, rb in zip(plain, spec):
+        assert ra.output_tokens == rb.output_tokens
+        assert ra.finish_reason == rb.finish_reason
+    s = eng.scheduler.stats
+    assert s.spec_jobs > 0 and s.spec_chunks > 0
+    # at least one admission arrived with its prefill already in flight
+    assert s.spec_admitted > 0
+
+
+def test_speculative_fill_publishes_partial_prefixes(cfg):
+    """A speculated request's chunks land in the prefix cache even before
+    it is admitted — the head start is durable work, not a side buffer.
+    Three staggered chunked prefills keep wave sizes at k=3 (kp=4), so one
+    padding row per wave is available for the pending request."""
+    eng = InferenceEngine(cfg, max_batch=3, cache_len=256, prefill_chunk=32,
+                          prefix_block_size=8)
+    hogs = [_req("slot hog " * (8 + 4 * i), max_tokens=24) for i in range(3)]
+    for hog in hogs:
+        eng.add_request(hog)
+    eng.step()                            # hogs take all three slots
+    waiting = _req(LONG, max_tokens=4)
+    eng.add_request(waiting)
+    for _ in range(6):                    # hogs chunk/decode; waiting rides
+        eng.step()
+    assert eng.scheduler.stats.spec_chunks > 0
+    probe, matched = eng.prefix_cache.lookup(TOK.encode(LONG),
+                                             max_len=len(TOK.encode(LONG)))
+    assert probe is not None and matched >= 8
+    eng.run()
+    assert waiting.is_finished
+
+
+# --------------------------------------------------------------------------- #
+# per-class latency + /stats under concurrency
+# --------------------------------------------------------------------------- #
+def test_per_class_latency_in_snapshot(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+    eng.generate([_req("plain batch work", max_tokens=3),
+                  _req("deadline", max_tokens=3, deadline_ms=60_000.0),
+                  _req("missed", max_tokens=3, deadline_ms=0.0)])
+    by_class = eng.scheduler.snapshot()["latency_by_class"]
+    assert set(by_class) == {"batch", "interactive"}
+    for cls in ("batch", "interactive"):
+        row = by_class[cls]
+        assert row["count"] >= 1
+        assert row["ttft_p95_ms"] >= row["ttft_p50_ms"] >= 0.0
+        assert row["e2e_p95_ms"] >= row["ttft_p50_ms"]
+    assert by_class["interactive"]["deadline_missed"] == 1
+
+
+def test_api_accepts_priority_and_deadline(cfg):
+    from repro.serving.api import OpenAIServer
+
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=128)
+    api = OpenAIServer(eng, "toy")
+    req = api._build_request({
+        "messages": [{"role": "user", "content": "hi"}],
+        "max_tokens": 2, "priority": 3, "deadline_ms": 250,
+    })
+    assert req.priority == 3 and req.deadline_ms == 250.0
+    assert req.latency_class == "interactive"
+    default = api._build_request(
+        {"messages": [{"role": "user", "content": "hi"}]})
+    assert default.priority == 0 and default.deadline_ms is None
+    assert default.latency_class == "batch"
+    st = api.stats()
+    assert st["sched_policy"] == "fifo"
+    assert st["preemption"] is False and st["speculative_fill"] is True
+    assert "latency_by_class" in st
+
+
+def test_stats_snapshot_consistent_under_concurrent_mutation(cfg):
+    """Hammer GET /stats from several threads while the engine loop admits,
+    preempts, decodes and retires a deadline-mixed workload: every response
+    must parse and carry the full key set (no torn reads, no 500s)."""
+    from repro.serving.api import OpenAIServer
+    from repro.serving.server import ApiServer
+
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128,
+                          sched_policy="edf", preemption=True)
+    api = OpenAIServer(eng, "toy", threaded=True)
+    server = ApiServer(api, port=0)
+    server.start()
+    url = f"http://127.0.0.1:{server.port}/stats"
+    required = {"queue_depth", "oldest_wait_s", "latency_by_class",
+                "sched_policy", "preemptions", "spec_chunks",
+                "rows_per_wave", "host_syncs_per_token"}
+    failures = []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                with urllib.request.urlopen(url, timeout=30) as resp:
+                    body = json.loads(resp.read())
+                missing = required - set(body)
+                if missing:
+                    failures.append(f"missing keys {missing}")
+                for row in body["latency_by_class"].values():
+                    if row["window"] > row["count"]:
+                        failures.append("window exceeds lifetime count")
+            except Exception as exc:        # noqa: BLE001 — collected
+                failures.append(repr(exc))
+
+    readers = [threading.Thread(target=hammer) for _ in range(3)]
+    for t in readers:
+        t.start()
+    try:
+        bodies = [{"messages": [{"role": "user", "content": f"load {i}"}],
+                   "max_tokens": 4,
+                   **({"deadline_ms": 50} if i % 2 else {})}
+                  for i in range(8)]
+        api.batch(bodies)
+    finally:
+        stop.set()
+        for t in readers:
+            t.join(timeout=10)
+        server.stop()
+        api.loop.stop()
+    assert not failures, failures[:5]
+
+
+# --------------------------------------------------------------------------- #
+# deprecation + benchmark smoke
+# --------------------------------------------------------------------------- #
+def test_legacy_admission_emits_deprecation_warning(cfg):
+    with pytest.warns(DeprecationWarning, match="legacy_admission"):
+        InferenceEngine(cfg, max_batch=1, cache_len=64,
+                        legacy_admission=True)
+
+
+def test_sched_policy_benchmark_smoke(tmp_path):
+    from benchmarks import sched_policy, validate
+
+    out = tmp_path / "BENCH_sched_policy.json"
+    result = sched_policy.run(smoke=True, out=out)
+    assert out.exists()
+    assert validate.validate_payload(result, source=str(out)) == []
+    variants = {r["variant"] for r in result["rows"]}
+    assert variants == {v[0] for v in sched_policy.VARIANTS}
+    for r in result["rows"]:
+        assert r["tok_s"] > 0
+        assert r["interactive_ttft_p95_ms"] >= r["interactive_ttft_p50_ms"]
+    by = {r["variant"]: r for r in result["rows"]}
+    assert by["edf_preempt"]["preemptions"] > 0
+    assert by["fifo"]["spec_chunks"] > 0 >= by["fifo_nospec"]["spec_chunks"]
+
+
+def test_validate_rejects_malformed_payloads():
+    from benchmarks import validate
+
+    good = {"name": "x", "schema_version": 1,
+            "machine": {"platform": "p", "python": "3", "jax": "j",
+                        "backend": "cpu", "device": "cpu"},
+            "variants": ["a"], "rows": [{"variant": "a", "tok_s": 1.0}]}
+    assert validate.validate_payload(good) == []
+    for breakage in (
+            lambda d: d.pop("machine"),
+            lambda d: d.pop("variants"),
+            lambda d: d.update(schema_version=0),
+            lambda d: d.update(rows=[{"variant": "zzz", "tok_s": 1.0}]),
+            lambda d: d.update(rows=[{"variant": "a", "note": "no metrics"}]),
+    ):
+        bad = json.loads(json.dumps(good))
+        breakage(bad)
+        assert validate.validate_payload(bad), breakage
+    # every artifact-declaring benchmark module is registered in run.py
+    assert validate.validate_registration() == []
+    declared = validate.declared_artifacts()
+    assert {"decode_loop", "prefill_overlap", "sched_policy"} <= set(declared)

@@ -10,7 +10,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
 from repro.distributed import default_rules, param_shardings, use_sharding
 from repro.distributed.sharding import sanitize_spec
-from repro.launch.specs import SHAPES, build_step_spec, shape_rules
+from repro.launch.specs import build_step_spec, shape_rules
 from repro.models import build_model
 
 
