@@ -5,10 +5,11 @@ The paper's serving claim (Fig.2, 4.3x aggregate at 16 concurrent) depends
 on admission not stalling decode: before the prefill pipeline, every
 admission wave ran k sequential blocking batch=1 prefills, so TTFT p95 grew
 linearly with queue depth and in-flight decode stalled for the whole wave.
-This suite tracks three admission variants at each concurrency level:
+(That ``pre_pr``/``legacy_admission`` baseline was deleted once
+``BENCH_prefill_overlap.json`` + ``BENCH_sched_policy.json`` had baselined
+the pipeline against it — the committed history keeps its numbers.)  This
+suite tracks the pipeline's chunk-size axis at each concurrency level:
 
-  * ``pre_pr``    — the legacy path (sequential batch=1 blocking prefills,
-                    committed before the decode block; ``legacy_admission``)
   * ``chunk=0``   — batched waves + async overlap, monolithic prompts
   * ``chunk=N``   — batched waves + async overlap + chunked prefill
                     (``prefill_chunk=N``): long prompts advance N tokens per
@@ -64,18 +65,18 @@ def _requests(n: int, prompt_len: int, max_tokens: int) -> List[Request]:
     return out
 
 
-def _engine(variant: str, chunk: int, conc: int, cache_len: int,
+def _engine(chunk: int, conc: int, cache_len: int,
             params) -> InferenceEngine:
     cfg, p = params
     return InferenceEngine(
         cfg, params=p, max_batch=conc, cache_len=cache_len,
-        prefill_chunk=chunk, legacy_admission=(variant == "pre_pr"),
+        prefill_chunk=chunk,
         enable_prefix_cache=False, enable_content_cache=False)
 
 
 def _measure(variant: str, chunk: int, conc: int, *, prompt_len: int,
              max_tokens: int, cache_len: int, repeats: int, params) -> dict:
-    eng = _engine(variant, chunk, conc, cache_len, params)
+    eng = _engine(chunk, conc, cache_len, params)
     # warm every compiled shape (prefill buckets/waves + block sizes)
     eng.generate(_requests(2 * conc, prompt_len, max_tokens))
     best = None
@@ -105,7 +106,7 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
         max_tokens=MAX_TOKENS, cache_len=CACHE_LEN, repeats=REPEATS)
     params = micro_model()
     rows = []
-    variants = [("pre_pr", 0)] + [("pipeline", c) for c in knobs["chunks"]]
+    variants = [("pipeline", c) for c in knobs["chunks"]]
     for conc in knobs["concurrency"]:
         for variant, chunk in variants:
             row = _measure(variant, chunk, conc,
@@ -114,14 +115,13 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
                            cache_len=knobs["cache_len"],
                            repeats=knobs["repeats"], params=params)
             rows.append(row)
-            tag = variant if variant == "pre_pr" else f"chunk{chunk}"
-            emit(f"prefill_overlap/c{conc}/{tag}", 1e6 / row["tok_s"],
+            emit(f"prefill_overlap/c{conc}/chunk{chunk}", 1e6 / row["tok_s"],
                  f"tok_s={row['tok_s']:.1f} "
                  f"ttft_p50={row['ttft_p50_ms']:.1f}ms "
                  f"ttft_p95={row['ttft_p95_ms']:.1f}ms "
                  f"rows_per_wave={row['rows_per_wave']:.2f}")
     result = bench_result(
-        "prefill_overlap", ["pre_pr", "pipeline"], rows,
+        "prefill_overlap", ["pipeline"], rows,
         arch=params[0].name, smoke=smoke, **{k: v for k, v in knobs.items()})
     path = out or OUT
     path.write_text(json.dumps(result, indent=2))

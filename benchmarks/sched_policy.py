@@ -9,6 +9,12 @@ This suite pins both sides of that trade for the policy subsystem:
 
   * ``fifo_nospec`` — FIFO, speculative wave filling off (the PR 2 engine)
   * ``fifo``        — FIFO + speculative filling (rows-per-wave uplift)
+  * ``fifo_abort``  — FIFO + speculative filling under *abort churn*: a
+                      fraction of the batch requests is cancelled mid-flight
+                      (the EngineClient disconnect scenario); tracks the
+                      slot-reclaim latency (abort -> freed capacity re-admits
+                      a pending request) and the aggregate-throughput cost
+                      of cancellation
   * ``priority``    — priority ordering + speculative filling
   * ``edf``         — earliest-deadline-first + speculative filling
   * ``edf_preempt`` — EDF + slot preemption (urgent requests evict the
@@ -21,10 +27,14 @@ outputs, no deadline) swamp the engine first; after a few engine steps
 deadline, high priority) arrive behind them.  Under FIFO the interactives
 strand behind the batch backlog; deadline/priority policies reorder
 admission and the chunk queue, and preemption frees slots immediately.
+In the abort variant, one queued victim is cancelled per engine step once
+the interactives have arrived — mimicking clients that hang up while their
+request decodes.
 
 Metrics per variant: interactive TTFT p50/p95 and e2e p95, aggregate and
 batch-class tokens/s, rows-per-wave, deadline miss count, preemption /
-speculative-fill counters.  Best-of-``REPEATS`` on aggregate tokens/s.
+speculative-fill / abort counters, slot-reclaim p50/p95 latency.
+Best-of-``REPEATS`` on aggregate tokens/s.
 
 Emits ``BENCH_sched_policy.json`` (shared schema — benchmarks/validate.py).
 
@@ -60,13 +70,17 @@ WARM_STEPS = 4
 REPEATS = 6
 OUT = Path("BENCH_sched_policy.json")
 
+#: fraction of batch requests cancelled mid-flight in the abort variant
+ABORT_FRAC = 0.25
+
 VARIANTS = [
-    # (tag, policy, preemption, speculative_fill)
-    ("fifo_nospec", "fifo", False, False),
-    ("fifo", "fifo", False, True),
-    ("priority", "priority", False, True),
-    ("edf", "edf", False, True),
-    ("edf_preempt", "edf", True, True),
+    # (tag, policy, preemption, speculative_fill, abort_frac)
+    ("fifo_nospec", "fifo", False, False, 0.0),
+    ("fifo", "fifo", False, True, 0.0),
+    ("fifo_abort", "fifo", False, True, ABORT_FRAC),
+    ("priority", "priority", False, True, 0.0),
+    ("edf", "edf", False, True, 0.0),
+    ("edf_preempt", "edf", True, True, 0.0),
 ]
 
 SMOKE = dict(concurrency=[4], batch_prompt=48, batch_tokens=12,
@@ -111,8 +125,15 @@ def _engine(policy: str, preempt: bool, spec: bool, conc: int,
         enable_content_cache=False)
 
 
-def _episode(eng: InferenceEngine, knobs: dict, conc: int) -> dict:
-    """One mixed-workload episode; returns raw per-class measurements."""
+def _episode(eng: InferenceEngine, knobs: dict, conc: int,
+             abort_frac: float = 0.0) -> dict:
+    """One mixed-workload episode; returns raw per-class measurements.
+
+    With ``abort_frac > 0``, that fraction of the batch requests is
+    cancelled mid-flight (one per engine step once the interactives have
+    arrived).  Slot-reclaim latency is measured from the ``engine.abort``
+    call to the first admission that lands *after* it — i.e. until the
+    cancelled request's capacity is demonstrably serving someone else."""
     batch = _batch_requests(2 * conc, knobs["batch_prompt"],
                             knobs["batch_tokens"])
     t0 = time.monotonic()
@@ -124,24 +145,55 @@ def _episode(eng: InferenceEngine, knobs: dict, conc: int) -> dict:
                                   knobs["inter_tokens"])
     for r in inter:
         eng.add_request(r)
-    eng.run()
+    victims: List[Request] = []
+    if abort_frac > 0:
+        stride = max(1, round(1.0 / abort_frac))
+        victims = list(batch[::stride])
+    reclaims: List[float] = []
+    open_reclaims: List[dict] = []
+    aborted = 0
+    while eng.scheduler.has_work:
+        while victims and victims[0].is_finished:
+            victims.pop(0)
+        if victims:
+            victim = victims.pop(0)
+            mark = {"t": time.monotonic(),
+                    "admitted": eng.scheduler.stats.admitted}
+            eng.abort(victim.request_id)
+            aborted += 1
+            open_reclaims.append(mark)
+        eng.step()
+        if open_reclaims:
+            now = time.monotonic()
+            admitted = eng.scheduler.stats.admitted
+            still = []
+            for m in open_reclaims:
+                if admitted > m["admitted"]:
+                    reclaims.append(now - m["t"])
+                else:
+                    still.append(m)
+            open_reclaims = still
     wall = time.monotonic() - t0
     toks = sum(r.num_generated for r in batch + inter)
     batch_toks = sum(r.num_generated for r in batch)
     ttfts = np.array([r.ttft for r in inter])
     e2es = np.array([r.finish_time - r.arrival_time for r in inter])
     missed = sum(1 for r in inter if r.missed_deadline)
+    reclaim = np.array(reclaims) if reclaims else np.array([0.0])
     return {
         "wall_s": wall, "tok_s": toks / wall, "batch_tok_s": batch_toks / wall,
         "interactive_ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
         "interactive_ttft_p95_ms": float(np.percentile(ttfts, 95) * 1e3),
         "interactive_e2e_p95_ms": float(np.percentile(e2es, 95) * 1e3),
         "deadline_missed": missed,
+        "aborted_inflight": aborted,
+        "slot_reclaim_p50_ms": float(np.percentile(reclaim, 50) * 1e3),
+        "slot_reclaim_p95_ms": float(np.percentile(reclaim, 95) * 1e3),
     }
 
 
 _STAT_DELTAS = ("prefill_waves", "prefill_chunks", "spec_chunks",
-                "preemptions", "resumed")
+                "preemptions", "resumed", "aborted")
 
 
 def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
@@ -154,24 +206,24 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
     whichever one it happened to land on, so the best-of comparison stays
     apples-to-apples."""
     engines = {}
-    for tag, policy, preempt, spec in VARIANTS:
+    for tag, policy, preempt, spec, abort_frac in VARIANTS:
         eng = _engine(policy, preempt, spec, conc, knobs["cache_len"],
                       knobs["prefill_chunk"], params)
-        _episode(eng, knobs, conc)                 # warmup (compiles)
+        _episode(eng, knobs, conc, abort_frac)     # warmup (compiles)
         engines[tag] = eng
     best: dict = {}
     for _ in range(knobs["repeats"]):
-        for tag, policy, preempt, spec in VARIANTS:
+        for tag, policy, preempt, spec, abort_frac in VARIANTS:
             eng = engines[tag]
             before = {k: getattr(eng.scheduler.stats, k)
                       for k in _STAT_DELTAS}
-            row = _episode(eng, knobs, conc)
+            row = _episode(eng, knobs, conc, abort_frac)
             delta = {k: getattr(eng.scheduler.stats, k) - before[k]
                      for k in _STAT_DELTAS}
             row.update({
                 "variant": tag, "policy": policy, "preemption": preempt,
-                "speculative_fill": spec, "concurrency": conc,
-                "requests": 3 * conc,
+                "speculative_fill": spec, "abort_frac": abort_frac,
+                "concurrency": conc, "requests": 3 * conc,
                 "rows_per_wave": (delta["prefill_chunks"]
                                   / max(delta["prefill_waves"], 1)),
                 **delta,
@@ -196,11 +248,13 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
                  f"tok_s={row['tok_s']:.1f} "
                  f"int_ttft_p95={row['interactive_ttft_p95_ms']:.1f}ms "
                  f"rows_per_wave={row['rows_per_wave']:.2f} "
-                 f"preempt={row['preemptions']} miss={row['deadline_missed']}")
+                 f"preempt={row['preemptions']} miss={row['deadline_missed']} "
+                 f"abort={row['aborted_inflight']} "
+                 f"reclaim_p95={row['slot_reclaim_p95_ms']:.1f}ms")
     result = bench_result(
         "sched_policy", [v[0] for v in VARIANTS], rows,
         arch=params[0].name, smoke=smoke, deadline_ms=DEADLINE_MS,
-        **{k: v for k, v in knobs.items()})
+        abort_frac=ABORT_FRAC, **{k: v for k, v in knobs.items()})
     path = out or OUT
     path.write_text(json.dumps(result, indent=2))
     print(f"# wrote {path}")

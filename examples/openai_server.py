@@ -12,11 +12,13 @@ import urllib.request
 from repro.configs import get_config
 from repro.core.engine import InferenceEngine
 from repro.serving.api import OpenAIServer
+from repro.serving.client import EngineClient
 from repro.serving.server import ApiServer
 
 cfg = get_config("qwen3-0.6b-toy")
 engine = InferenceEngine(cfg, max_batch=8, cache_len=256)
-server = ApiServer(OpenAIServer(engine, cfg.name, threaded=True), port=0)
+client = EngineClient(engine)
+server = ApiServer(OpenAIServer(client, cfg.name), port=0)
 server.start()
 base = f"http://127.0.0.1:{server.port}"
 print(f"serving {cfg.name} at {base}/v1/chat/completions")
@@ -67,3 +69,4 @@ print(f"  latency p50={lats[len(lats)//2]*1e3:.0f}ms "
       f"p95={lats[int(len(lats)*0.95)]*1e3:.0f}ms")
 print(f"  peak batch occupancy: {engine.scheduler.stats.peak_batch}")
 server.stop()
+client.stop()

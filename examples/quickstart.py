@@ -1,4 +1,5 @@
-"""Quickstart: build an engine, serve a few concurrent requests, stream one.
+"""Quickstart: build an engine, serve a few concurrent requests through the
+EngineClient lifecycle API, stream one, cancel one.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,7 +7,8 @@ import time
 
 from repro.configs import get_config
 from repro.core.engine import InferenceEngine
-from repro.core.request import Request, SamplingParams
+from repro.core.request import GenerationRequest, Request, SamplingParams
+from repro.serving.client import EngineClient, TokenEvent
 from repro.serving.tokenizer import ByteTokenizer
 
 tok = ByteTokenizer()
@@ -33,23 +35,31 @@ for r in requests:
     print(f"  [{r.request_id}] ttft={r.ttft*1e3:.0f}ms "
           f"tokens={r.output_tokens[:6]}...")
 
-# --- token streaming ------------------------------------------------------ #
-print("\nstreaming:")
-req = Request(prompt_tokens=tok.encode("stream this"),
-              sampling=SamplingParams(max_tokens=12))
-engine.add_request(req)
-while not req.is_finished:
-    for ev in engine.step():
-        if ev.token is not None:
-            print(f"  token={ev.token:5d} text={ev.text!r}")
-print("done:", req.finish_reason)
+# --- the request-lifecycle client: streaming + cancellation --------------- #
+client = EngineClient(engine)
+print("\nstreaming via EngineClient:")
+handle = client.submit(GenerationRequest(prompt="stream this",
+                                         sampling=SamplingParams(max_tokens=12)))
+for ev in handle.stream():
+    if isinstance(ev, TokenEvent):
+        print(f"  token={ev.token:5d} text={ev.text!r}")
+print("done:", handle.result().choices[0].finish_reason,
+      f"(status={handle.status.value})")
+
+# true cancellation: the slot is reclaimed within one decode block
+victim = client.submit(GenerationRequest(prompt="never finishes",
+                                         sampling=SamplingParams(max_tokens=4096)))
+time.sleep(0.05)
+victim.abort()
+print("aborted:", victim.status.value,
+      f"after {victim.usage()['completion_tokens']} tokens")
 
 # --- prefix cache --------------------------------------------------------- #
 shared = tok.encode("You are a helpful assistant. " * 4)
 for i in range(2):
     r = Request(prompt_tokens=shared + tok.encode(f"Q{i}", add_bos=False),
                 sampling=SamplingParams(max_tokens=4))
-    t0 = time.monotonic()
-    engine.generate([r])
+    client.generate(r)
     print(f"turn {i}: ttft={r.ttft*1e3:6.1f}ms "
           f"cached_prefix={r.cached_prefix_len} tokens")
+client.stop()

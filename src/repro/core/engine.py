@@ -59,10 +59,21 @@ never wasted even if the request is admitted elsewhere or much later.
 
 ``max_decode_block=1`` reproduces the per-token engine exactly (same event
 order).  Greedy outputs are invariant to K, to ``prefill_chunk``, to
-wave packing, to speculative filling, and to preemption/resume.
-``legacy_admission=True`` restores the pre-pipeline path (sequential
-blocking batch=1 prefills) as a benchmark baseline — deprecated, removal
-tracked in ROADMAP.md.
+wave packing, to speculative filling, to preemption/resume, and — for the
+surviving slots — to aborts of their neighbours.
+
+**Request lifecycle** (see DESIGN_engine_client.md): every request moves
+QUEUED → PREFILLING → DECODING → FINISHED, with DECODING → QUEUED on
+preemption.  :meth:`InferenceEngine.abort` cancels a request wherever it
+currently lives — pending queue, speculative job table, prefill chunk
+queue, eviction-snapshot table, or a live decode slot — freeing the slot
+immediately (the device row is frozen, so the next decode block ignores
+it and the next admission reuses it).  Host-side *stop sequences*
+(``SamplingParams.stop_sequences``) are enforced at block emit with the
+partial match held back from the stream and the match truncated away;
+per-token logprobs (``SamplingParams.logprobs``/``top_logprobs``) ride the
+decode block as an optional second output (separate compiled variant, same
+sampling RNG, so enabling them never changes the tokens).
 
 Cost-structure fidelity to the paper's ablation (Table 4): the media
 pipeline always runs unless the *content* cache hits (so "KV-only" caching
@@ -74,7 +85,6 @@ from __future__ import annotations
 import functools
 import logging
 import time
-import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple, Union
 
@@ -92,10 +102,10 @@ from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
                                  tree_bytes)
 from repro.core.prefix_cache import TextPrefixCache
 from repro.core.request import (FinishReason, PromptTooLongError, Request,
-                                StreamEvent)
+                                RequestStatus, StreamEvent)
 from repro.core.sampling import sample_tokens, sample_tokens_inner
 from repro.core.scheduler import ContinuousBatchingScheduler, SchedulingPolicy
-from repro.core.streaming import TokenStreamDecoder
+from repro.core.streaming import StopSequenceChecker, TokenStreamDecoder
 from repro.models import build_model
 from repro.serving.media import AudioEncoderStub, VisionEncoderStub, decode_media
 from repro.serving.tokenizer import ByteTokenizer
@@ -122,6 +132,8 @@ class _Admission:
     first_token: int
     ctx_valid: Optional[np.ndarray]      # [T] bool or None
     seq_len: int                         # tokens materialised in the cache
+    logprob: Optional[float] = None      # first-token logprob (if requested)
+    top_logprobs: Optional[List[Tuple[int, float]]] = None
 
 
 @dataclass
@@ -179,10 +191,10 @@ class InferenceEngine:
         vision_work_iters: int = 8,
         max_decode_block: int = 8,
         max_stop_tokens: int = 8,
+        max_top_logprobs: int = 5,
         truncate_long_prompts: bool = False,
         prefill_chunk: int = 512,
         max_prefill_buckets: int = 6,
-        legacy_admission: bool = False,
         sched_policy: Union[str, SchedulingPolicy] = "fifo",
         preemption: bool = False,
         max_preemptions: int = 2,
@@ -197,25 +209,19 @@ class InferenceEngine:
         self.top_k, self.top_p = top_k, top_p
         self.max_decode_block = max(1, max_decode_block)
         self.max_stop_tokens = max_stop_tokens
+        # widest top-logprobs list the decode block can return (static shape
+        # of the compiled logprobs variant); per-request `top_logprobs` is
+        # validated against it at add_request
+        self.max_top_logprobs = max(1, max_top_logprobs)
         self.truncate_long_prompts = truncate_long_prompts
         # admission pipeline knobs: chunk size for piecewise prefill (0 =
-        # monolithic), cap on distinct compiled prefill buckets, and the
-        # pre-pipeline sequential path as a benchmark baseline
+        # monolithic) and cap on distinct compiled prefill buckets
         self.prefill_chunk = max(0, prefill_chunk)
-        if legacy_admission:
-            warnings.warn(
-                "legacy_admission=True is deprecated: the pre-pipeline "
-                "sequential admission path is kept only as a benchmark "
-                "baseline and will be removed once BENCH_sched_policy.json "
-                "has baselined against it (see ROADMAP.md)",
-                DeprecationWarning, stacklevel=2)
-        self.legacy_admission = legacy_admission
         # scheduling-policy subsystem: admission/chunk-queue ordering,
-        # slot preemption, and speculative wave filling (disabled on the
-        # legacy baseline, which predates waves entirely)
-        self.preemption = preemption and not legacy_admission
+        # slot preemption, and speculative wave filling
+        self.preemption = preemption
         self.max_preemptions = max(0, max_preemptions)
-        self.speculative_fill = speculative_fill and not legacy_admission
+        self.speculative_fill = speculative_fill
         self.max_spec_jobs = (max_batch if max_spec_jobs is None
                               else max(0, max_spec_jobs))
 
@@ -257,6 +263,9 @@ class InferenceEngine:
                                        max_stop_tokens,
                                        jax.random.PRNGKey(seed + 1))
         self._streamers: Dict[int, TokenStreamDecoder] = {}
+        # per-request stop-sequence checkers (only for requests that set
+        # sampling.stop_sequences); live alongside the streamers
+        self._stopchk: Dict[int, StopSequenceChecker] = {}
         self._live_slots: set = set()        # slots committed to DecodeState
         # speculative prefill jobs for not-yet-admitted pending requests
         # (request_id -> job); bounded by max_spec_jobs
@@ -297,13 +306,22 @@ class InferenceEngine:
     # ------------------------------------------------------------------ #
     def _build_decode_block_fn(self):
         """K decode+sample iterations under one jit (one trace per distinct
-        K; the scheduler restricts K to powers of two ≤ max_decode_block)."""
+        K; the scheduler restricts K to powers of two ≤ max_decode_block).
+
+        ``want_logprobs`` (static) selects a variant that additionally
+        returns the sampled token's logprob and the top
+        ``max_top_logprobs`` alternatives per step.  The sampling path (RNG
+        splits included) is identical in both variants, so the emitted
+        tokens never depend on whether logprobs are collected."""
         model, top_k, top_p = self.model, self.top_k, self.top_p
         use_ctx = self.media_kind != "none"
+        n_top = self.max_top_logprobs
 
-        @functools.partial(jax.jit, static_argnames=("num_steps",),
+        @functools.partial(jax.jit,
+                           static_argnames=("num_steps", "want_logprobs"),
                            donate_argnums=(1, 2))
-        def decode_block(params, cache, state: DecodeState, *, num_steps: int):
+        def decode_block(params, cache, state: DecodeState, *,
+                         num_steps: int, want_logprobs: bool = False):
             def body(carry, _):
                 cache, st = carry
                 out = model.apply(
@@ -327,11 +345,21 @@ class InferenceEngine:
                                  budget=budget,
                                  active=st.active & ~finished,
                                  rng=key)
+                if want_logprobs:
+                    lp = jax.nn.log_softmax(
+                        out.logits[:, 0].astype(jnp.float32), axis=-1)
+                    chosen = jnp.take_along_axis(lp, nxt[:, None],
+                                                 axis=-1)[:, 0]
+                    top_v, top_i = jax.lax.top_k(lp, n_top)
+                    return (cache, st), (emit, chosen, top_v, top_i)
                 return (cache, st), emit
 
-            (cache, state), toks = jax.lax.scan(body, (cache, state), None,
-                                                length=num_steps)
-            return cache, state, toks                         # toks: [K, B]
+            (cache, state), ys = jax.lax.scan(body, (cache, state), None,
+                                              length=num_steps)
+            if want_logprobs:
+                toks, lp_chosen, lp_top_v, lp_top_i = ys
+                return cache, state, toks, (lp_chosen, lp_top_v, lp_top_i)
+            return cache, state, ys, None                     # toks: [K, B]
 
         return decode_block
 
@@ -501,6 +529,7 @@ class InferenceEngine:
         job = self._spec_jobs.pop(req.request_id, None)
         if job is not None:
             job.slot = slot
+            req.status = RequestStatus.PREFILLING
             self.scheduler.stats.spec_admitted += 1
             if job.logits is not None:   # whole prompt already materialised
                 self._ready_jobs.append(job)
@@ -573,6 +602,7 @@ class InferenceEngine:
         else:
             meta["cache"] = single
         self._evicted[req.request_id] = meta
+        req.status = RequestStatus.QUEUED
         if self.prefix_cache is None:
             # no byte-budget LRU to own the snapshots: bound engine-side
             # cache pytrees at one pool's worth, dropping the *oldest*
@@ -587,6 +617,13 @@ class InferenceEngine:
         self._live_slots.discard(slot)
         # freeze the slot on-device so decode blocks dispatched before the
         # next admission lands there cannot advance stale state
+        self._deactivate_slot(slot)
+
+    def _deactivate_slot(self, slot: int) -> None:
+        """Freeze a slot's device row (preemption, host-side stop-sequence
+        finish, abort): the next decode block masks its cache writes and
+        stops advancing its positions, so the slot is immediately safe to
+        hand to the next admission."""
         self.state = self.state._replace(
             active=self.state.active.at[slot].set(False))
 
@@ -611,6 +648,7 @@ class InferenceEngine:
               len(req.prompt_tokens) + req.num_generated - 1,
               meta["ctx_valid"], True)])
         self._live_slots.add(slot)
+        req.status = RequestStatus.DECODING
         self.scheduler.stats.resumed += 1
         return True
 
@@ -619,6 +657,8 @@ class InferenceEngine:
         t0 = time.monotonic()
         tokens = list(req.prompt_tokens if tokens is None else tokens)
         assert tokens, "empty prompt"
+        if slot is not None:
+            req.status = RequestStatus.PREFILLING
 
         embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
         req.media_set_digest = set_digest
@@ -677,8 +717,7 @@ class InferenceEngine:
         groups: Dict[Tuple[int, bool], List[Tuple[_PrefillJob, int]]] = {}
         for job in jobs:
             remaining = len(job.tokens) - job.consumed
-            take = (remaining
-                    if self.prefill_chunk == 0 or self.legacy_admission
+            take = (remaining if self.prefill_chunk == 0
                     else min(self.prefill_chunk, remaining))
             # every chunk must fit the KV ring: cap ``take`` (oversized
             # sliding-window prompts auto-chunk) and clamp the bucket to
@@ -697,11 +736,7 @@ class InferenceEngine:
 
         completed: List[Tuple[_PrefillJob, jax.Array]] = []
         for (bucket, cross_cached), rows in groups.items():
-            batches = ([[r] for r in rows] if self.legacy_admission
-                       else [rows])
-            for batch in batches:
-                completed.extend(
-                    self._run_wave_group(bucket, cross_cached, batch))
+            completed.extend(self._run_wave_group(bucket, cross_cached, rows))
         return completed
 
     def _backfill_groups(
@@ -846,9 +881,13 @@ class InferenceEngine:
                             jnp.float32)
         firsts = np.asarray(sample_tokens(logits, sub, temps,
                                           top_k=self.top_k, top_p=self.top_p))
+        # first-token logprobs for requests that asked: one host-side
+        # log-softmax over the staged wave logits (tiny: [k, V])
+        lp = (np.asarray(jax.nn.log_softmax(logits, axis=-1))
+              if any(j.req.sampling.logprobs for j in jobs) else None)
         now = time.monotonic()
         wave = []
-        for job, first in zip(jobs, firsts):
+        for i, (job, first) in enumerate(zip(jobs, firsts)):
             req = job.req
             # guards: a preempted request resumed by re-prefill keeps its
             # original prefill/first-token timestamps (TTFT is a property
@@ -858,11 +897,26 @@ class InferenceEngine:
             if req.first_token_time is None:
                 req.first_token_time = now
             req.output_tokens.append(int(first))
+            logprob = top = None
+            if lp is not None and req.sampling.logprobs:
+                logprob, top = self._top_logprobs(lp[i], int(first),
+                                                  req.sampling.top_logprobs)
             wave.append(_Admission(
                 job.slot, req, job.cache, int(first),
                 None if job.ctx_valid is None else job.ctx_valid[0],
-                seq_len=len(job.tokens)))
+                seq_len=len(job.tokens), logprob=logprob, top_logprobs=top))
         return self._commit_admissions(wave)
+
+    @staticmethod
+    def _top_logprobs(row: np.ndarray, token: int, n: int
+                      ) -> Tuple[float, List[Tuple[int, float]]]:
+        """(chosen logprob, top-n (token_id, logprob) pairs) from one [V]
+        log-softmax row."""
+        top: List[Tuple[int, float]] = []
+        if n > 0:
+            ids = np.argsort(row)[::-1][:n]
+            top = [(int(t), float(row[t])) for t in ids]
+        return float(row[token]), top
 
     def _commit_admissions(self, wave: List[_Admission]) -> List[StreamEvent]:
         """Land an admission wave: one compiled cache scatter, one decode-state
@@ -877,9 +931,12 @@ class InferenceEngine:
             if a.req.request_id not in self._streamers:
                 self._streamers[a.req.request_id] = \
                     TokenStreamDecoder(self.tokenizer)
-            text = self._streamers[a.req.request_id].push_token(a.first_token)
-            events.append(StreamEvent(a.req.request_id, a.first_token, text))
-            events.extend(self._maybe_finish(a.slot, a.req, a.first_token))
+                if a.req.sampling.stop_sequences:
+                    self._stopchk[a.req.request_id] = StopSequenceChecker(
+                        list(a.req.sampling.stop_sequences))
+            a.req.status = RequestStatus.DECODING
+            events.extend(self._emit_token(a.slot, a.req, a.first_token,
+                                           a.logprob, a.top_logprobs))
 
         self._admit_rows_to_state(
             [(a.slot, a.req, a.first_token, a.seq_len, a.ctx_valid,
@@ -917,6 +974,37 @@ class InferenceEngine:
             jnp.asarray([active for *_, active in rows], bool))
 
     # ------------------------------------------------------------------ #
+    # emit / finish / abort (the host side of the request lifecycle)
+    # ------------------------------------------------------------------ #
+    def _emit_token(self, slot: int, req: Request, token: int,
+                    logprob: Optional[float] = None,
+                    top_logprobs: Optional[List[Tuple[int, float]]] = None
+                    ) -> List[StreamEvent]:
+        """Stream one sampled token: incremental detokenisation, host-side
+        stop-sequence filtering (text that could still become a match is
+        held back; a completed match truncates and finishes the request),
+        logprob attachment, and the finish checks."""
+        text = self._streamers[req.request_id].push_token(token)
+        chk = self._stopchk.get(req.request_id)
+        stopped = False
+        if chk is not None:
+            text, stopped = chk.push(text)
+        req.output_text += text
+        if req.sampling.logprobs:
+            req.output_logprobs.append((logprob, top_logprobs or []))
+        events = [StreamEvent(req.request_id, token, text,
+                              logprob=logprob, top_logprobs=top_logprobs)]
+        if stopped:
+            # host-detected finish: the device row is still live, so it
+            # must be frozen explicitly before the slot is reused; any
+            # text still buffered belongs after the match — discard it
+            events.extend(self._finish(slot, req, FinishReason.STOP,
+                                       publish=False, deactivate=True,
+                                       drop_tail=True))
+        else:
+            events.extend(self._maybe_finish(slot, req, token))
+        return events
+
     def _maybe_finish(self, slot: int, req: Request, token: int
                       ) -> List[StreamEvent]:
         stop_ids = set(req.sampling.stop_token_ids) | {self.tokenizer.EOS}
@@ -927,21 +1015,45 @@ class InferenceEngine:
             reason = FinishReason.LENGTH
         if reason is None:
             return []
+        return self._finish(slot, req, reason)
+
+    def _finish(self, slot: int, req: Request, reason: FinishReason, *,
+                publish: bool = True, deactivate: bool = False,
+                drop_tail: bool = False) -> List[StreamEvent]:
+        """Terminal transition: flush the streamer (through the stop
+        checker, so a match completing in the tail is still truncated),
+        retire the slot, and emit the finished event.  ``drop_tail`` (the
+        stop-sequence finish) discards everything still buffered: it all
+        sits after the match, which truncation removed."""
         req.finish_reason = reason
         req.finish_time = time.monotonic()
-        self._retire(slot, req)
-        return [StreamEvent(req.request_id, None,
-                            self._streamers.pop(req.request_id).flush(),
+        req.status = RequestStatus.FINISHED
+        tail = self._streamers.pop(req.request_id).flush()
+        chk = self._stopchk.pop(req.request_id, None)
+        if drop_tail:
+            tail = ""
+        elif chk is not None:
+            safe, stopped = chk.push(tail)
+            tail = safe if stopped else safe + chk.flush()
+        req.output_text += tail
+        self._retire(slot, req, publish=publish)
+        if deactivate:
+            self._deactivate_slot(slot)
+        return [StreamEvent(req.request_id, None, tail,
                             finished=True, finish_reason=reason)]
 
-    def _retire(self, slot: int, req: Request) -> None:
+    def _retire(self, slot: int, req: Request, *, publish: bool = True
+                ) -> None:
         # publish the prompt's KV/state to the prefix cache (Alg.2 insert).
         # Skip if generation ring-wrapped the cache: wrapped slots have
         # prompt KV cells overwritten by generated-token KV, so the entry
-        # would be silently wrong for a future resume.
+        # would be silently wrong for a future resume.  Host-side stop
+        # -sequence finishes also skip (publish=False): the device kept
+        # writing past the stop point for the rest of the block, so
+        # num_generated undercounts the ring occupancy.
         wrapped = (len(req.prompt_tokens) + req.num_generated - 1
                    > self.pool.cache_len)
-        if self.prefix_cache is not None and not wrapped and \
+        if publish and self.prefix_cache is not None and not wrapped and \
                 len(req.prompt_tokens) >= self.prefix_cache.block_size:
             # salt from the digest stashed at admission — no media re-decode
             single = self.pool.read(slot)
@@ -951,6 +1063,59 @@ class InferenceEngine:
         self.scheduler.retire(slot)
         self.pool.free(slot)
         self._live_slots.discard(slot)
+
+    def abort(self, request_id: int) -> List[StreamEvent]:
+        """Cancel a request wherever it currently lives (see
+        DESIGN_engine_client.md for the propagation map):
+
+        * **pending queue** — dropped before it ever binds a slot;
+        * **speculative job table** — the backfill job is cancelled (chunks
+          already published to the prefix cache stay: they are valid work);
+        * **prefill chunk queue** — remaining chunks never ride another
+          wave and the bound slot is freed;
+        * **eviction-snapshot table** — the preemption snapshot is released
+          (popped from the prefix cache's byte budget);
+        * **live decode slot** — the slot is freed immediately and its
+          device row frozen, so the next decode block ignores it and the
+          next admission reuses it.
+
+        Not thread-safe (like every engine method): callers off the engine
+        thread go through :meth:`repro.serving.client.EngineClient.abort`,
+        which applies aborts at the next block boundary.  Returns the final
+        ABORT event (empty list if the request is unknown or already
+        finished — abort-after-finish is a no-op)."""
+        req: Optional[Request] = None
+        slot = next((s for s, r in self.scheduler.active.items()
+                     if r.request_id == request_id), None)
+        if slot is not None:
+            req = self.scheduler.active[slot]
+            self.scheduler.drop_prefill_jobs(request_id)
+            self._ready_jobs = [j for j in self._ready_jobs
+                                if j.req.request_id != request_id]
+            self.scheduler.abort_slot(slot)
+            self.pool.free(slot)
+            self._live_slots.discard(slot)
+            self._deactivate_slot(slot)
+        else:
+            req = self.scheduler.abort_pending(request_id)
+            job = self._spec_jobs.pop(request_id, None)
+            if job is not None:
+                req = req or job.req
+        if req is None or req.is_finished:
+            return []
+        meta = self._evicted.pop(request_id, None)
+        if meta is not None and self.prefix_cache is not None:
+            # drop the preemption snapshot from the byte budget
+            self.prefix_cache.take_exact(
+                req.prompt_tokens + req.output_tokens, salt=self._salt(req))
+        req.finish_reason = FinishReason.ABORT
+        req.finish_time = time.monotonic()
+        req.status = RequestStatus.ABORTED
+        self._streamers.pop(request_id, None)
+        self._stopchk.pop(request_id, None)
+        self.scheduler.stats.aborted += 1
+        return [StreamEvent(request_id, None, "", finished=True,
+                            finish_reason=FinishReason.ABORT)]
 
     # ------------------------------------------------------------------ #
     # public API
@@ -969,6 +1134,14 @@ class InferenceEngine:
             raise ValueError(
                 f"{len(req.sampling.stop_token_ids)} stop tokens exceed "
                 f"max_stop_tokens={self.max_stop_tokens}")
+        if any(not isinstance(s, str) or not s
+               for s in req.sampling.stop_sequences):
+            raise ValueError("stop sequences must be non-empty strings")
+        if not 0 <= req.sampling.top_logprobs <= self.max_top_logprobs:
+            raise ValueError(
+                f"top_logprobs={req.sampling.top_logprobs} out of range "
+                f"[0, max_top_logprobs={self.max_top_logprobs}]")
+        req.status = RequestStatus.QUEUED
         self.scheduler.add(req)
 
     def step(self) -> List[StreamEvent]:
@@ -984,32 +1157,31 @@ class InferenceEngine:
         # 1. bind pending requests to slots; open prefill jobs
         self._plan_admissions()
 
-        if self.legacy_admission:
-            # pre-pipeline baseline: sequential batch=1 prefills, committed
-            # (blocking) before the decode block is dispatched
-            events.extend(self._commit_jobs(self._dispatch_prefill_wave()))
-
         # 2. dispatch one compiled block of K decode steps (no host block
         # yet); K collapses to 1 while requests or chunks wait
         block_plan = None
         if self._live_slots:
             num_steps = self.scheduler.plan_decode_block(self.max_decode_block)
-            cache, state, toks = self._decode_block_fn(
+            want_lp = any(r.sampling.logprobs
+                          for s, r in self.scheduler.active.items()
+                          if s in self._live_slots)
+            cache, state, toks, lps = self._decode_block_fn(
                 self.params, self.pool.cache, self.state,
-                num_steps=num_steps)
+                num_steps=num_steps, want_logprobs=want_lp)
             self.pool.cache = cache
             self.state = state
-            block_plan = (num_steps, toks)
+            block_plan = (num_steps, toks, lps)
 
         # 3. dispatch the prefill wave behind the in-flight decode block
-        completed: List[Tuple[_PrefillJob, jax.Array]] = []
-        if not self.legacy_admission:
-            completed = self._dispatch_prefill_wave()
+        completed = self._dispatch_prefill_wave()
 
         # 4. sync the token block; emit + retire step-major
         if block_plan is not None:
-            num_steps, toks = block_plan
+            num_steps, toks, lps = block_plan
             block = np.asarray(toks)              # [K, B]: the block's one sync
+            lp_c = lp_v = lp_i = None
+            if lps is not None:
+                lp_c, lp_v, lp_i = (np.asarray(a) for a in lps)
             self._step_count += 1
             self.scheduler.stats.steps += 1
             self.scheduler.stats.device_steps += num_steps
@@ -1028,9 +1200,14 @@ class InferenceEngine:
                         continue
                     req.output_tokens.append(tok)
                     self.scheduler.stats.tokens_generated += 1
-                    text = self._streamers[req.request_id].push_token(tok)
-                    events.append(StreamEvent(req.request_id, tok, text))
-                    events.extend(self._maybe_finish(slot, req, tok))
+                    logprob = top = None
+                    if lp_c is not None and req.sampling.logprobs:
+                        logprob = float(lp_c[k, slot])
+                        ntop = req.sampling.top_logprobs
+                        top = list(zip(lp_i[k, slot, :ntop].tolist(),
+                                       lp_v[k, slot, :ntop].tolist()))
+                    events.extend(
+                        self._emit_token(slot, req, tok, logprob, top))
 
         # 5. land finished prefills (next block picks the new slots up);
         # speculative jobs whose slot arrived this step commit in the same

@@ -1,19 +1,34 @@
-"""Request / sequence-state types shared by the scheduler and engine."""
+"""Request / sequence-state types shared by the scheduler, engine and the
+request-lifecycle client (:mod:`repro.serving.client`)."""
 from __future__ import annotations
 
 import itertools
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 _req_counter = itertools.count()
 
 
 class FinishReason(str, Enum):
-    STOP = "stop"            # EOS sampled
+    STOP = "stop"            # EOS / stop token / stop sequence
     LENGTH = "length"        # max_tokens reached
     ABORT = "abort"
+
+
+class RequestStatus(str, Enum):
+    """Lifecycle states of one engine request (see DESIGN_engine_client.md).
+
+    QUEUED -> PREFILLING -> DECODING -> FINISHED | ABORTED, with
+    DECODING -> QUEUED on preemption.  ``abort()`` is legal from any state
+    and terminal; aborting a FINISHED request is a no-op."""
+
+    QUEUED = "queued"            # pending admission (incl. speculative jobs)
+    PREFILLING = "prefilling"    # slot bound, prompt chunks in flight
+    DECODING = "decoding"        # live decode slot, tokens streaming
+    FINISHED = "finished"        # stop / length — terminal
+    ABORTED = "aborted"          # cancelled — terminal
 
 
 class PromptTooLongError(ValueError):
@@ -28,6 +43,17 @@ class SamplingParams:
     top_p: float = 1.0                # 1 = off
     max_tokens: int = 64
     stop_token_ids: tuple = ()
+    # stop *sequences* (strings) are enforced host-side at block emit:
+    # generation finishes with reason "stop" the moment the accumulated text
+    # contains one, the match itself is truncated away, and text that could
+    # still become a match is held back from the stream (core/streaming.py
+    # StopSequenceChecker)
+    stop_sequences: Tuple[str, ...] = ()
+    # per-token logprob collection (OpenAI `logprobs` / `top_logprobs`):
+    # when enabled the decode block also returns the sampled token's
+    # logprob and the top-`top_logprobs` alternatives per step
+    logprobs: bool = False
+    top_logprobs: int = 0
     seed: Optional[int] = None
 
 
@@ -50,7 +76,17 @@ class Request:
     deadline_ms: Optional[float] = None
 
     # -- filled in by the engine --------------------------------------- #
+    status: RequestStatus = RequestStatus.QUEUED
     output_tokens: List[int] = field(default_factory=list)
+    # emitted text after stop-sequence filtering — authoritative for user
+    # -facing responses (equals decode(output_tokens) when no stop sequence
+    # fired; shorter when one did, with the match truncated away)
+    output_text: str = ""
+    # per-token logprob data, populated only when sampling.logprobs: one
+    # (logprob, top_logprobs) pair per emitted token, where top_logprobs is
+    # a list of (token_id, logprob) pairs (len == sampling.top_logprobs)
+    output_logprobs: List[Tuple[float, List[Tuple[int, float]]]] = \
+        field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -113,3 +149,46 @@ class StreamEvent:
     text: str = ""
     finished: bool = False
     finish_reason: Optional[FinishReason] = None
+    # populated when the request asked for logprobs: the emitted token's
+    # logprob and its top-k alternatives as (token_id, logprob) pairs
+    logprob: Optional[float] = None
+    top_logprobs: Optional[List[Tuple[int, float]]] = None
+
+
+@dataclass
+class GenerationRequest:
+    """User-facing request spec for :class:`repro.serving.client.EngineClient`.
+
+    One ``GenerationRequest`` maps to ``n`` engine :class:`Request`\\ s (the
+    OpenAI ``n`` fan-out: one handle, n decode slots, prompt prefills shared
+    through the prefix cache).  ``prompt`` is either raw text (encoded with
+    the engine's tokenizer at submit time) or pre-tokenised ids."""
+
+    prompt: Union[str, List[int]]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    n: int = 1
+    images: List[Any] = field(default_factory=list)
+    video_frames: List[Any] = field(default_factory=list)
+    audio: Optional[Any] = None
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def to_requests(self, tokenizer) -> List["Request"]:
+        """Expand into ``n`` engine requests (choice index in metadata)."""
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        tokens = (tokenizer.encode(self.prompt)
+                  if isinstance(self.prompt, str) else list(self.prompt))
+        out = []
+        for i in range(self.n):
+            out.append(Request(
+                prompt_tokens=list(tokens),
+                sampling=self.sampling,
+                images=list(self.images),
+                video_frames=list(self.video_frames),
+                audio=self.audio,
+                priority=self.priority,
+                deadline_ms=self.deadline_ms,
+                metadata={**self.metadata, "choice_index": i}))
+        return out

@@ -132,6 +132,7 @@ class SchedulerStats:
     spec_admitted: int = 0       # admissions that reused speculative progress
     preemptions: int = 0         # active slots evicted for urgent requests
     resumed: int = 0             # evicted requests resumed from a snapshot
+    aborted: int = 0             # requests cancelled before finishing
 
     @property
     def host_syncs_per_token(self) -> float:
@@ -214,6 +215,34 @@ class ContinuousBatchingScheduler:
         self.stats.retired += 1
         self.record_latency(req)
         return req
+
+    # ------------------------------------------------------------------ #
+    # cancellation (engine.abort bookkeeping; see DESIGN_engine_client.md)
+    # ------------------------------------------------------------------ #
+    def abort_pending(self, request_id: int) -> Optional[Request]:
+        """Drop a not-yet-admitted request from the pending queue."""
+        for req in list(self.pending):
+            if req.request_id == request_id:
+                self.pending.remove(req)
+                return req
+        return None
+
+    def abort_slot(self, slot: int) -> Request:
+        """Release an active slot whose request was cancelled.  Unlike
+        :meth:`retire`, the request does not count as served and is kept out
+        of the per-class latency window (an abort is not a latency sample —
+        it would poison the p95 the window exists to track)."""
+        return self.active.pop(slot)
+
+    def drop_prefill_jobs(self, request_id: int) -> List[Any]:
+        """Remove (and return) the chunk-queue jobs of a cancelled request
+        so its remaining prompt chunks never ride another wave."""
+        dropped = [job for job in self.chunk_queue
+                   if getattr(getattr(job, "req", None), "request_id", None)
+                   == request_id]
+        for job in dropped:
+            self.chunk_queue.remove(job)
+        return dropped
 
     # ------------------------------------------------------------------ #
     # preemption (policy-gated; mechanics live in the engine)
@@ -371,6 +400,7 @@ class ContinuousBatchingScheduler:
             "spec_admitted": s.spec_admitted,
             "preemptions": s.preemptions,
             "resumed": s.resumed,
+            "aborted": s.aborted,
             "latency_by_class": self.latency_by_class(),
         }
 

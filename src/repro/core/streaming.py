@@ -40,6 +40,53 @@ class StreamDecoder:
         return out
 
 
+class StopSequenceChecker:
+    """Host-side stop-*sequence* enforcement at block emit.
+
+    Streaming text must never show a stop sequence (or a prefix of one that
+    later completes), so the checker buffers the longest tail that could
+    still become a match and releases it only once it provably cannot.
+    ``push`` returns ``(safe_text, stopped)``; on a match the text *before*
+    the match is released and the match itself (plus anything after it) is
+    discarded — OpenAI truncation semantics."""
+
+    def __init__(self, stops: List[str]) -> None:
+        assert stops and all(stops), "empty stop sequence"
+        self._stops = list(stops)
+        self._maxlen = max(len(s) for s in stops)
+        self._buf = ""
+
+    def push(self, text: str) -> "tuple[str, bool]":
+        self._buf += text
+        # the winning match is the one that *completes* first (min end
+        # position, then min start) — start position alone would make the
+        # outcome depend on chunk boundaries when matches overlap
+        best = None
+        for s in self._stops:
+            idx = self._buf.find(s)
+            if idx != -1 and (best is None or (idx + len(s), idx) < best):
+                best = (idx + len(s), idx)
+        if best is not None:
+            emit, self._buf = self._buf[:best[1]], ""
+            return emit, True
+        # hold back the longest suffix that is a prefix of any stop sequence
+        keep = 0
+        for back in range(1, min(self._maxlen - 1, len(self._buf)) + 1):
+            tail = self._buf[-back:]
+            if any(s.startswith(tail) for s in self._stops):
+                keep = back
+        if keep:
+            emit, self._buf = self._buf[:-keep], self._buf[-keep:]
+        else:
+            emit, self._buf = self._buf, ""
+        return emit, False
+
+    def flush(self) -> str:
+        """Release held-back text (generation ended without a match)."""
+        out, self._buf = self._buf, ""
+        return out
+
+
 class TokenStreamDecoder:
     """Per-request token → text streamer on top of a byte-level tokenizer."""
 

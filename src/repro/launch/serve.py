@@ -12,6 +12,7 @@ import time
 from repro.configs import get_config
 from repro.core.engine import InferenceEngine
 from repro.serving.api import OpenAIServer
+from repro.serving.client import EngineClient
 from repro.serving.server import ApiServer
 
 
@@ -70,16 +71,17 @@ def main() -> None:
         preemption=args.preemption,
         max_preemptions=args.max_preemptions,
         speculative_fill=not args.no_spec_fill)
-    server = ApiServer(OpenAIServer(engine, cfg.name, threaded=True),
-                       port=args.port)
+    client = EngineClient(engine)
+    server = ApiServer(OpenAIServer(client, cfg.name), port=args.port)
     server.start()
-    print(f"listening on http://127.0.0.1:{server.port}/v1/chat/completions "
-          "(stats: /stats)")
+    print(f"listening on http://127.0.0.1:{server.port} "
+          "(chat + completions + models; stats: /stats)")
     try:
         while True:
             time.sleep(3600)
     except KeyboardInterrupt:
         server.stop()
+        client.stop()
 
 
 if __name__ == "__main__":

@@ -1,161 +1,564 @@
 """OpenAI-compatible API surface (paper §3.2: drop-in replacement).
 
-In-process implementation of the ``/v1/chat/completions`` contract: the same
-request/response JSON schema (including multimodal ``image_url`` content
-parts and streaming chunks), backed by the continuous-batching engine.  A
-thin stdlib HTTP wrapper (serving/server.py) exposes it on a socket; the
-benchmark/test suite drives this layer directly."""
+In-process implementation of the OpenAI REST contract — chat completions,
+legacy completions, model listing — as a pure *codec* over the
+request-lifecycle :class:`repro.serving.client.EngineClient`: request
+bodies decode to :class:`repro.core.request.GenerationRequest`, handle
+events encode to response/chunk dicts, and nothing here reaches into
+engine internals.  A thin stdlib HTTP wrapper (serving/server.py) exposes
+it on a socket; the benchmark/test suite drives this layer directly.
+
+Surface:
+
+* ``chat_completion`` / ``chat_completion_stream`` — messages (string or
+  multimodal content parts), ``stop`` (string or list, host-side stop
+  sequences with correct partial-match truncation), ``n`` fan-out,
+  ``logprobs`` + ``top_logprobs``, ``stream_options.include_usage``;
+* ``completion`` / ``completion_stream`` — prompt as string, list of
+  strings, or pre-tokenised ids; legacy integer ``logprobs``;
+* ``models`` / ``stats``;
+* every rejection raises :class:`OpenAIError`, which carries the
+  structured ``{"error": {message, type, param, code}}`` envelope and an
+  HTTP status — no ad-hoc 400 strings.
+
+Streaming generators abort their handle on early close (``GeneratorExit``
+from a dropped SSE connection propagates into true engine cancellation).
+"""
 from __future__ import annotations
 
 import time
 import uuid
-from typing import Any, Dict, Iterator, List
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 from repro.core.engine import InferenceEngine
-from repro.core.request import FinishReason, Request, SamplingParams
-from repro.serving.engine_loop import EngineLoop
+from repro.core.request import GenerationRequest, PromptTooLongError, SamplingParams
+from repro.serving.client import EngineClient, FinishEvent, RequestHandle, TokenEvent
+
+#: OpenAI caps `stop` at 4 sequences; we mirror it so error behaviour matches
+MAX_STOP_SEQUENCES = 4
+MAX_N = 16
 
 
-def _parse_content(content: Any) -> Dict[str, Any]:
-    """OpenAI content: plain string or a list of typed parts."""
+class OpenAIError(Exception):
+    """Structured OpenAI-style API error: ``{"error": {...}}`` + status."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        etype: str = "invalid_request_error",
+        param: Optional[str] = None,
+        code: Optional[str] = None,
+        status: int = 400,
+    ):
+        super().__init__(message)
+        self.message = message
+        self.etype = etype
+        self.param = param
+        self.code = code
+        self.status = status
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "error": {
+                "message": self.message,
+                "type": self.etype,
+                "param": self.param,
+                "code": self.code,
+            }
+        }
+
+
+def _as_int(body: Dict[str, Any], key: str, default: int) -> int:
+    val = body.get(key, default)
+    if isinstance(val, bool) or not isinstance(val, (int, float)) or int(val) != val:
+        raise OpenAIError(f"'{key}' must be an integer", param=key)
+    return int(val)
+
+
+def _as_float(body: Dict[str, Any], key: str, default: float) -> float:
+    val = body.get(key, default)
+    if isinstance(val, bool) or not isinstance(val, (int, float)):
+        raise OpenAIError(f"'{key}' must be a number", param=key)
+    return float(val)
+
+
+def _parse_stop(body: Dict[str, Any]) -> Tuple[str, ...]:
+    stop = body.get("stop")
+    if stop is None:
+        return ()
+    if isinstance(stop, str):
+        stops: Tuple[str, ...] = (stop,)
+    elif isinstance(stop, list) and all(isinstance(s, str) for s in stop):
+        stops = tuple(stop)
+    else:
+        raise OpenAIError("'stop' must be a string or a list of strings", param="stop")
+    if len(stops) > MAX_STOP_SEQUENCES:
+        raise OpenAIError(f"'stop' supports at most {MAX_STOP_SEQUENCES} sequences", param="stop")
+    if any(not s for s in stops):
+        raise OpenAIError("'stop' sequences must be non-empty", param="stop")
+    return stops
+
+
+def _parse_content(content: Any, param: str = "content") -> Dict[str, Any]:
+    """OpenAI message content: plain string or a list of typed parts.
+    ``None``/missing content and malformed parts raise :class:`OpenAIError`
+    (never ``KeyError`` through the handler)."""
     text_parts: List[str] = []
     images: List[Any] = []
+    if content is None:
+        raise OpenAIError(f"'{param}' is required", param=param)
     if isinstance(content, str):
-        text_parts.append(content)
-    else:
-        for part in content:
-            if part.get("type") == "text":
-                text_parts.append(part["text"])
-            elif part.get("type") == "image_url":
-                url = part["image_url"]["url"]
-                if url.startswith("data:"):            # data:...;base64,XXX
-                    images.append({"base64": url.split(",", 1)[1]})
-                else:
-                    images.append({"url": url})
+        return {"text": content, "images": images}
+    if not isinstance(content, list):
+        raise OpenAIError(f"'{param}' must be a string or a list of content parts", param=param)
+    for i, part in enumerate(content):
+        where = f"{param}[{i}]"
+        if not isinstance(part, dict) or not isinstance(part.get("type"), str):
+            raise OpenAIError(f"'{where}' must be an object with a string 'type'", param=where)
+        kind = part["type"]
+        if kind == "text":
+            if not isinstance(part.get("text"), str):
+                raise OpenAIError(f"'{where}.text' must be a string", param=where)
+            text_parts.append(part["text"])
+        elif kind == "image_url":
+            image_url = part.get("image_url")
+            if not isinstance(image_url, dict) or not isinstance(image_url.get("url"), str):
+                raise OpenAIError(
+                    f"'{where}.image_url' must be an object with a string 'url'",
+                    param=where,
+                )
+            url = image_url["url"]
+            if url.startswith("data:"):  # data:...;base64,XXX
+                if "," not in url:
+                    raise OpenAIError(
+                        f"'{where}.image_url.url' is a malformed data: URL", param=where
+                    )
+                images.append({"base64": url.split(",", 1)[1]})
+            else:
+                images.append({"url": url})
+        else:
+            raise OpenAIError(f"unknown content part type {kind!r} in '{where}'", param=where)
     return {"text": "".join(text_parts), "images": images}
 
 
 class OpenAIServer:
-    """Engine adapter implementing the chat-completions contract."""
+    """OpenAI codec over the :class:`EngineClient` lifecycle API."""
 
-    def __init__(self, engine: InferenceEngine, model_name: str = "repro",
-                 *, threaded: bool = False):
-        self.engine = engine
+    def __init__(
+        self,
+        client: Union[EngineClient, InferenceEngine],
+        model_name: str = "repro",
+        **_compat: Any,
+    ):
+        # accept a bare engine for convenience (tests, examples): the codec
+        # always talks to a client — it never drives engine.step() itself
+        if isinstance(client, InferenceEngine):
+            client = EngineClient(client)
+        self.client = client
+        self.engine = client.engine
         self.model_name = model_name
-        # threaded: a background loop drives Alg.1 so concurrent HTTP
-        # handlers batch together instead of serialising (Fig.2 scenario).
-        self.loop = EngineLoop(engine) if threaded else None
 
     # ------------------------------------------------------------------ #
-    def _build_request(self, body: Dict[str, Any]) -> Request:
-        tok = self.engine.tokenizer
-        prompt_parts: List[str] = []
-        images: List[Any] = []
-        for msg in body.get("messages", []):
-            parsed = _parse_content(msg.get("content", ""))
-            prompt_parts.append(f"<|{msg['role']}|>{parsed['text']}")
-            images.extend(parsed["images"])
-        prompt = "".join(prompt_parts) + "<|assistant|>"
+    # request decoding
+    # ------------------------------------------------------------------ #
+    def _decode_common(
+        self,
+        body: Dict[str, Any],
+        prompt: Union[str, List[int]],
+        images: Optional[List[Any]] = None,
+    ) -> GenerationRequest:
+        if not isinstance(body, dict):
+            raise OpenAIError("request body must be a JSON object")
+        logprobs = body.get("logprobs", False)
+        top_logprobs = _as_int(body, "top_logprobs", 0)
+        if not isinstance(logprobs, bool):
+            raise OpenAIError("'logprobs' must be a boolean", param="logprobs")
+        if top_logprobs and not logprobs:
+            raise OpenAIError("'top_logprobs' requires 'logprobs' to be true", param="top_logprobs")
+        if top_logprobs < 0:
+            raise OpenAIError("'top_logprobs' must be >= 0", param="top_logprobs")
+        n = _as_int(body, "n", 1)
+        if not 1 <= n <= MAX_N:
+            raise OpenAIError(f"'n' must be between 1 and {MAX_N}", param="n")
         sampling = SamplingParams(
-            temperature=float(body.get("temperature", 0.0)),
-            max_tokens=int(body.get("max_tokens", 64)),
+            temperature=_as_float(body, "temperature", 0.0),
+            max_tokens=_as_int(body, "max_tokens", 64),
+            stop_sequences=_parse_stop(body),
+            logprobs=logprobs,
+            top_logprobs=top_logprobs,
         )
+        if sampling.max_tokens < 1:
+            raise OpenAIError("'max_tokens' must be >= 1", param="max_tokens")
         # scheduling-class extensions (beyond the OpenAI schema): integer
         # priority (higher = more urgent) and a deadline in milliseconds
-        # relative to arrival — inputs to the engine's scheduling policy
-        # (admission order, chunk-queue order, preemption); see
-        # core/scheduler.py and GET /stats latency_by_class.
-        priority = body.get("priority")
+        # relative to arrival — inputs to the scheduler's policy ordering
+        # and slot preemption; see core/scheduler.py.
+        priority = _as_int(body, "priority", 0)
         deadline_ms = body.get("deadline_ms")
-        return Request(prompt_tokens=tok.encode(prompt), images=images,
-                       sampling=sampling,
-                       priority=0 if priority is None else int(priority),
-                       deadline_ms=(None if deadline_ms is None
-                                    else float(deadline_ms)))
+        if deadline_ms is not None:
+            deadline_ms = _as_float(body, "deadline_ms", 0.0)
+        return GenerationRequest(
+            prompt=prompt,
+            sampling=sampling,
+            n=n,
+            images=list(images or []),
+            priority=priority,
+            deadline_ms=deadline_ms,
+        )
 
-    def _response(self, req: Request) -> Dict[str, Any]:
-        text = self.engine.tokenizer.decode(req.output_tokens)
+    def _decode_chat(self, body: Dict[str, Any]) -> GenerationRequest:
+        if not isinstance(body, dict):
+            raise OpenAIError("request body must be a JSON object")
+        messages = body.get("messages")
+        if not isinstance(messages, list) or not messages:
+            raise OpenAIError("'messages' must be a non-empty list", param="messages")
+        parts: List[str] = []
+        images: List[Any] = []
+        for i, msg in enumerate(messages):
+            where = f"messages[{i}]"
+            if not isinstance(msg, dict) or not isinstance(msg.get("role"), str):
+                raise OpenAIError(f"'{where}' must be an object with a string 'role'", param=where)
+            parsed = _parse_content(msg.get("content"), param=f"{where}.content")
+            parts.append(f"<|{msg['role']}|>{parsed['text']}")
+            images.extend(parsed["images"])
+        prompt = "".join(parts) + "<|assistant|>"
+        return self._decode_common(body, prompt, images)
+
+    def _decode_completion_prompts(self, body: Dict[str, Any]) -> List[Union[str, List[int]]]:
+        prompt = body.get("prompt")
+        if isinstance(prompt, str):
+            return [prompt]
+        if isinstance(prompt, list) and prompt and all(isinstance(p, str) for p in prompt):
+            return list(prompt)
+        if isinstance(prompt, list) and prompt and all(
+            isinstance(t, int) and not isinstance(t, bool) for t in prompt
+        ):
+            return [list(prompt)]
+        raise OpenAIError(
+            "'prompt' must be a string, a list of strings, or a list of token ids",
+            param="prompt",
+        )
+
+    def _submit(self, greq: GenerationRequest) -> RequestHandle:
+        try:
+            return self.client.submit(greq)
+        except PromptTooLongError as e:
+            raise OpenAIError(str(e), code="context_length_exceeded") from e
+        except ValueError as e:
+            raise OpenAIError(str(e)) from e
+
+    # ------------------------------------------------------------------ #
+    # response encoding
+    # ------------------------------------------------------------------ #
+    def _token_repr(self, token: int) -> Dict[str, Any]:
+        tok = self.engine.tokenizer
+        return {
+            "token": tok.decode([token]),
+            "bytes": list(tok.token_bytes(token)),
+        }
+
+    def _chat_logprobs(self, tokens: List[int], logprobs) -> Dict[str, Any]:
+        content = []
+        for token, (lp, top) in zip(tokens, logprobs):
+            entry = self._token_repr(token)
+            entry["logprob"] = lp
+            entry["top_logprobs"] = [{**self._token_repr(t), "logprob": t_lp} for t, t_lp in top]
+            content.append(entry)
+        return {"content": content}
+
+    def _completion_logprobs(self, tokens: List[int], logprobs) -> Dict[str, Any]:
+        """Legacy completions logprobs block (tokens / token_logprobs /
+        top_logprobs / text_offset, offsets into the generated text)."""
+        tok = self.engine.tokenizer
+        out: Dict[str, List[Any]] = {
+            "tokens": [],
+            "token_logprobs": [],
+            "top_logprobs": [],
+            "text_offset": [],
+        }
+        offset = 0
+        for token, (lp, top) in zip(tokens, logprobs):
+            text = tok.decode([token])
+            out["tokens"].append(text)
+            out["token_logprobs"].append(lp)
+            out["top_logprobs"].append({tok.decode([t]): t_lp for t, t_lp in top})
+            out["text_offset"].append(offset)
+            offset += len(text)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # chat completions
+    # ------------------------------------------------------------------ #
+    def chat_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        greq = self._decode_chat(body)
+        handle = self._submit(greq)
+        result = handle.result()
+        choices = []
+        for c in result.choices:
+            choices.append(
+                {
+                    "index": c.index,
+                    "message": {"role": "assistant", "content": c.text},
+                    "logprobs": (
+                        self._chat_logprobs(c.tokens, c.logprobs)
+                        if greq.sampling.logprobs
+                        else None
+                    ),
+                    "finish_reason": c.finish_reason,
+                }
+            )
         return {
             "id": f"chatcmpl-{uuid.uuid4().hex[:12]}",
             "object": "chat.completion",
             "created": int(time.time()),
             "model": self.model_name,
-            "choices": [{
-                "index": 0,
-                "message": {"role": "assistant", "content": text},
-                "finish_reason": req.finish_reason.value,
-            }],
-            "usage": {
-                "prompt_tokens": len(req.prompt_tokens),
-                "completion_tokens": req.num_generated,
-                "total_tokens": len(req.prompt_tokens) + req.num_generated,
-            },
+            "choices": choices,
+            "usage": result.usage(),
         }
 
-    # ------------------------------------------------------------------ #
-    def chat_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
-        req = self._build_request(body)
-        if self.loop is not None:
-            self.loop.generate(req)
-        else:
-            self.engine.generate([req])
-        return self._response(req)
-
-    def chat_completion_stream(self, body: Dict[str, Any]
-                               ) -> Iterator[Dict[str, Any]]:
-        """SSE-style chunk dicts (one per emitted token)."""
-        req = self._build_request(body)
+    def chat_completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
+        """SSE-style chunk dicts.  Closing the generator early (client
+        disconnect) aborts the underlying request."""
+        greq = self._decode_chat(body)
+        include_usage = self._include_usage(body)
+        handle = self._submit(greq)
         cid = f"chatcmpl-{uuid.uuid4().hex[:12]}"
+        created = int(time.time())
 
-        def chunk(ev):
-            return {
+        def chunk(index: int, delta: Dict[str, Any], finish=None, logprobs=None):
+            out = {
                 "id": cid,
                 "object": "chat.completion.chunk",
+                "created": created,
                 "model": self.model_name,
-                "choices": [{
-                    "index": 0,
-                    "delta": ({"content": ev.text} if ev.text else {}),
-                    "finish_reason": (ev.finish_reason.value
-                                      if ev.finished else None),
-                }],
+                "choices": [
+                    {
+                        "index": index,
+                        "delta": delta,
+                        "logprobs": logprobs,
+                        "finish_reason": finish,
+                    }
+                ],
             }
+            if include_usage:
+                out["usage"] = None
+            return out
 
-        if self.loop is not None:
-            q = self.loop.submit(req)
-            while True:
-                ev = q.get()
-                yield chunk(ev)
-                if ev.finished:
-                    return
+        def gen() -> Iterator[Dict[str, Any]]:
+            try:
+                for i in range(greq.n):
+                    yield chunk(i, {"role": "assistant", "content": ""})
+                for ev in handle.stream():
+                    if isinstance(ev, TokenEvent):
+                        logprobs = None
+                        if greq.sampling.logprobs:
+                            logprobs = self._chat_logprobs(
+                                [ev.token], [(ev.logprob, ev.top_logprobs or [])]
+                            )
+                        if ev.text or logprobs:
+                            yield chunk(ev.index, {"content": ev.text}, logprobs=logprobs)
+                    elif isinstance(ev, FinishEvent):
+                        delta = {"content": ev.text} if ev.text else {}
+                        yield chunk(ev.index, delta, finish=ev.finish_reason)
+                if include_usage:
+                    yield {
+                        "id": cid,
+                        "object": "chat.completion.chunk",
+                        "created": created,
+                        "model": self.model_name,
+                        "choices": [],
+                        "usage": handle.usage(),
+                    }
+            finally:
+                # GeneratorExit from a dropped SSE connection lands here:
+                # propagate it into true engine-side cancellation
+                if not handle.finished:
+                    handle.abort(wait=False)
+
+        return gen()
+
+    # ------------------------------------------------------------------ #
+    # legacy completions
+    # ------------------------------------------------------------------ #
+    def _decode_completion(self, body: Dict[str, Any]) -> List[GenerationRequest]:
+        if not isinstance(body, dict):
+            raise OpenAIError("request body must be a JSON object")
+        for unsupported in ("echo", "suffix"):
+            if body.get(unsupported):
+                raise OpenAIError(
+                    f"'{unsupported}' is not supported",
+                    param=unsupported,
+                    code="unsupported_parameter",
+                )
+        prompts = self._decode_completion_prompts(body)
+        # legacy integer `logprobs`: top-k count, chosen logprob included
+        lp = body.get("logprobs")
+        body = dict(body)
+        if lp is not None:
+            if isinstance(lp, bool) or not isinstance(lp, int) or lp < 0:
+                raise OpenAIError("'logprobs' must be a non-negative integer", param="logprobs")
+            body["logprobs"] = True
+            body["top_logprobs"] = lp
         else:
-            self.engine.add_request(req)
-            while not req.is_finished:
-                for ev in self.engine.step():
-                    if ev.request_id == req.request_id:
-                        yield chunk(ev)
+            body["logprobs"] = False
+            body["top_logprobs"] = 0
+        body.setdefault("max_tokens", 16)
+        return [self._decode_common(body, prompt) for prompt in prompts]
+
+    def _submit_all(self, greqs: List[GenerationRequest]) -> List[RequestHandle]:
+        """Submit a multi-prompt fan-out atomically enough: if a later
+        prompt is rejected at submit, the already-running handles are
+        aborted instead of leaking decode slots behind a 400."""
+        handles: List[RequestHandle] = []
+        try:
+            for g in greqs:
+                handles.append(self._submit(g))
+        except OpenAIError:
+            for h in handles:
+                h.abort(wait=False)
+            raise
+        return handles
+
+    def completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        greqs = self._decode_completion(body)
+        handles = self._submit_all(greqs)
+        choices = []
+        usage = {"prompt_tokens": 0, "completion_tokens": 0, "total_tokens": 0}
+        for p, (greq, handle) in enumerate(zip(greqs, handles)):
+            result = handle.result()
+            for c in result.choices:
+                choices.append(
+                    {
+                        "index": p * greq.n + c.index,
+                        "text": c.text,
+                        "logprobs": (
+                            self._completion_logprobs(c.tokens, c.logprobs)
+                            if greq.sampling.logprobs
+                            else None
+                        ),
+                        "finish_reason": c.finish_reason,
+                    }
+                )
+            for key, val in result.usage().items():
+                usage[key] += val
+        return {
+            "id": f"cmpl-{uuid.uuid4().hex[:12]}",
+            "object": "text_completion",
+            "created": int(time.time()),
+            "model": self.model_name,
+            "choices": choices,
+            "usage": usage,
+        }
+
+    def completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
+        greqs = self._decode_completion(body)
+        include_usage = self._include_usage(body)
+        handles = self._submit_all(greqs)
+        cid = f"cmpl-{uuid.uuid4().hex[:12]}"
+        created = int(time.time())
+
+        def chunk(index: int, text: str, finish=None, logprobs=None):
+            out = {
+                "id": cid,
+                "object": "text_completion",
+                "created": created,
+                "model": self.model_name,
+                "choices": [
+                    {
+                        "index": index,
+                        "text": text,
+                        "logprobs": logprobs,
+                        "finish_reason": finish,
+                    }
+                ],
+            }
+            if include_usage:
+                out["usage"] = None
+            return out
+
+        def gen() -> Iterator[Dict[str, Any]]:
+            try:
+                for p, (greq, handle) in enumerate(zip(greqs, handles)):
+                    base = p * greq.n
+                    for ev in handle.stream():
+                        if isinstance(ev, TokenEvent):
+                            logprobs = None
+                            if greq.sampling.logprobs:
+                                logprobs = self._completion_logprobs(
+                                    [ev.token], [(ev.logprob, ev.top_logprobs or [])]
+                                )
+                            if ev.text or logprobs:
+                                yield chunk(base + ev.index, ev.text, logprobs=logprobs)
+                        elif isinstance(ev, FinishEvent):
+                            yield chunk(base + ev.index, ev.text, finish=ev.finish_reason)
+                if include_usage:
+                    usage = {"prompt_tokens": 0, "completion_tokens": 0, "total_tokens": 0}
+                    for handle in handles:
+                        for key, val in handle.usage().items():
+                            usage[key] += val
+                    yield {
+                        "id": cid,
+                        "object": "text_completion",
+                        "created": created,
+                        "model": self.model_name,
+                        "choices": [],
+                        "usage": usage,
+                    }
+            finally:
+                for handle in handles:
+                    if not handle.finished:
+                        handle.abort(wait=False)
+
+        return gen()
+
+    @staticmethod
+    def _include_usage(body: Dict[str, Any]) -> bool:
+        opts = body.get("stream_options") or {}
+        if not isinstance(opts, dict):
+            raise OpenAIError("'stream_options' must be an object", param="stream_options")
+        return bool(opts.get("include_usage"))
+
+    # ------------------------------------------------------------------ #
+    # models / stats / batch
+    # ------------------------------------------------------------------ #
+    def models(self) -> Dict[str, Any]:
+        return {
+            "object": "list",
+            "data": [
+                {
+                    "id": self.model_name,
+                    "object": "model",
+                    "created": int(time.time()),
+                    "owned_by": "repro",
+                }
+            ],
+        }
 
     def stats(self) -> Dict[str, Any]:
         """Serving observability (``GET /stats``): scheduler queue depth and
         wait age (starvation surface), decode-block and admission-pipeline
         counters, scheduling-policy counters (speculative fill, preemptions,
-        per-class TTFT/e2e latency percentiles and deadline misses), and the
-        engine's knobs — the signals the prefill/decode overlap and
-        deadline-scheduling work are judged by in production."""
+        per-class TTFT/e2e latency percentiles and deadline misses), abort
+        counts, and the engine's knobs — the signals the prefill/decode
+        overlap and cancellation work are judged by in production."""
         eng = self.engine
-        out = self.engine.scheduler.snapshot()
-        out.update({
-            "model": self.model_name,
-            "max_batch": eng.scheduler.max_batch,
-            "free_slots": eng.pool.num_free,
-            "cache_len": eng.pool.cache_len,
-            "max_decode_block": eng.max_decode_block,
-            "prefill_chunk": eng.prefill_chunk,
-            "prefill_bucket_floor": eng._bucket_floor,
-            "prefill_buckets_compiled": sorted(eng._seen_buckets),
-            "sched_policy": eng.scheduler.policy.name,
-            "preemption": eng.preemption,
-            "speculative_fill": eng.speculative_fill,
-        })
+        out = eng.scheduler.snapshot()
+        out.update(
+            {
+                "model": self.model_name,
+                "max_batch": eng.scheduler.max_batch,
+                "free_slots": eng.pool.num_free,
+                "cache_len": eng.pool.cache_len,
+                "max_decode_block": eng.max_decode_block,
+                "prefill_chunk": eng.prefill_chunk,
+                "prefill_bucket_floor": eng._bucket_floor,
+                "prefill_buckets_compiled": sorted(eng._seen_buckets),
+                "sched_policy": eng.scheduler.policy.name,
+                "preemption": eng.preemption,
+                "speculative_fill": eng.speculative_fill,
+            }
+        )
         if eng.prefix_cache is not None:
             out["prefix_cache"] = {
                 "entries": len(eng.prefix_cache),
@@ -165,17 +568,27 @@ class OpenAIServer:
         return out
 
     def batch(self, bodies: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
-        """Serve many requests concurrently through continuous batching."""
-        reqs = [self._build_request(b) for b in bodies]
-        if self.loop is not None:
-            qs = [self.loop.submit(r) for r in reqs]
-            for r, q in zip(reqs, qs):
-                while not r.is_finished:
-                    ev = q.get()
-                    if ev is None or ev.finished:
-                        break
-                if not r.is_finished:        # loop stopped mid-generation
-                    r.finish_reason = FinishReason.ABORT
-        else:
-            self.engine.generate(reqs)
-        return [self._response(r) for r in reqs]
+        """Serve many chat requests concurrently (continuous batching)."""
+        handles = self._submit_all([self._decode_chat(b) for b in bodies])
+        out = []
+        for handle in handles:
+            result = handle.result()
+            c = result.choices[0]
+            out.append(
+                {
+                    "id": f"chatcmpl-{uuid.uuid4().hex[:12]}",
+                    "object": "chat.completion",
+                    "created": int(time.time()),
+                    "model": self.model_name,
+                    "choices": [
+                        {
+                            "index": 0,
+                            "message": {"role": "assistant", "content": c.text},
+                            "logprobs": None,
+                            "finish_reason": c.finish_reason,
+                        }
+                    ],
+                    "usage": result.usage(),
+                }
+            )
+        return out

@@ -1,0 +1,371 @@
+"""EngineClient: the async-first request-lifecycle API over the engine.
+
+This is the layer between the single-threaded continuous-batching engine
+and anything concurrent — HTTP handlers, asyncio apps, benchmark drivers.
+``submit(GenerationRequest) -> RequestHandle`` returns immediately; the
+handle exposes the whole lifecycle of one *logical* request (which fans out
+to ``n`` engine requests for OpenAI-style multi-choice sampling):
+
+* ``handle.stream()`` — typed :class:`TokenEvent` / :class:`FinishEvent`
+  stream, consumable as a plain iterator **and** as an async iterator
+  (``async for`` runs the blocking queue reads in a worker thread, so one
+  event loop can multiplex many handles without starving the engine);
+* ``handle.result()`` / ``await handle.result_async()`` — block until every
+  choice finished, then return a :class:`GenerationResult`;
+* ``handle.abort()`` — true cancellation: the abort propagates through the
+  scheduler (pending queue, chunk queue, speculative jobs, preemption
+  snapshots) and the engine (live slot freed, device row frozen) at the
+  next block boundary — a disconnected client never holds a slot to budget
+  exhaustion;
+* ``handle.status`` — coarsest in-flight choice state
+  (:class:`repro.core.request.RequestStatus`).
+
+One dedicated loop thread owns the engine and drives ``engine.step()``
+(the paper's Algorithm 1 outer loop); with block decode each step advances
+up to ``max_decode_block`` tokens and the whole block's events fan out to
+the per-handle queues in one critical section.  Submissions and aborts are
+thread-safe and are applied at block boundaries: the engine collapses the
+block size to 1 whenever requests or prefill chunks are pending, so a new
+request waits at most one token for a free slot, and an abort frees its
+slot within one decode block.
+
+``OpenAIServer`` (serving/api.py) and ``ApiServer`` (serving/server.py)
+are thin codecs over this client — they never touch engine internals.
+"""
+from __future__ import annotations
+
+import asyncio
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+from repro.core.engine import InferenceEngine
+from repro.core.request import (
+    FinishReason,
+    GenerationRequest,
+    Request,
+    RequestStatus,
+    StreamEvent,
+)
+
+# lifecycle progress order used to aggregate a handle's per-choice states
+_PROGRESS = {
+    RequestStatus.QUEUED: 0,
+    RequestStatus.PREFILLING: 1,
+    RequestStatus.DECODING: 2,
+    RequestStatus.FINISHED: 3,
+    RequestStatus.ABORTED: 3,
+}
+
+
+@dataclass
+class TokenEvent:
+    """One generated token for one choice of a handle."""
+
+    index: int                    # choice index (0..n-1)
+    token: int
+    text: str                     # stop-sequence-filtered incremental text
+    logprob: Optional[float] = None
+    top_logprobs: Optional[List[Tuple[int, float]]] = None
+
+
+@dataclass
+class FinishEvent:
+    """Terminal event for one choice; ``text`` carries any held-back tail
+    (incomplete UTF-8 bytes / unmatched stop-sequence prefix)."""
+
+    index: int
+    finish_reason: str            # "stop" | "length" | "abort"
+    text: str = ""
+
+
+@dataclass
+class ChoiceResult:
+    index: int
+    text: str
+    tokens: List[int]
+    finish_reason: Optional[str]
+    logprobs: List[Tuple[float, List[Tuple[int, float]]]] = field(default_factory=list)
+
+
+@dataclass
+class GenerationResult:
+    """Aggregate of all ``n`` choices of one handle."""
+
+    choices: List[ChoiceResult]
+    prompt_tokens: int
+
+    @property
+    def text(self) -> str:
+        return self.choices[0].text
+
+    @property
+    def completion_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.choices)
+
+    def usage(self) -> Dict[str, int]:
+        return {
+            "prompt_tokens": self.prompt_tokens,
+            "completion_tokens": self.completion_tokens,
+            "total_tokens": self.prompt_tokens + self.completion_tokens,
+        }
+
+
+class HandleStream:
+    """Single-consumer event stream of a handle: iterate synchronously or
+    with ``async for`` (queue reads hop to a worker thread so the event
+    loop stays free)."""
+
+    def __init__(self, q: "queue.Queue[Optional[object]]") -> None:
+        self._q = q
+
+    def __iter__(self) -> Iterator[object]:
+        while True:
+            ev = self._q.get()
+            if ev is None:
+                return
+            yield ev
+
+    def __aiter__(self):
+        return self._agen()
+
+    async def _agen(self):
+        while True:
+            ev = await asyncio.to_thread(self._q.get)
+            if ev is None:
+                return
+            yield ev
+
+
+class RequestHandle:
+    """Lifecycle handle for one submitted :class:`GenerationRequest`."""
+
+    def __init__(self, client: "EngineClient", requests: List[Request]):
+        self._client = client
+        self._requests = requests
+        self._index = {r.request_id: i for i, r in enumerate(requests)}
+        self._queue: "queue.Queue[Optional[object]]" = queue.Queue()
+        self._done = threading.Event()
+        self._open = len(requests)
+        self._lock = threading.Lock()
+
+    # -- identity / introspection -------------------------------------- #
+    @property
+    def request_ids(self) -> List[int]:
+        return [r.request_id for r in self._requests]
+
+    @property
+    def n(self) -> int:
+        return len(self._requests)
+
+    @property
+    def prompt_tokens(self) -> int:
+        return len(self._requests[0].prompt_tokens)
+
+    @property
+    def statuses(self) -> List[RequestStatus]:
+        return [r.status for r in self._requests]
+
+    @property
+    def status(self) -> RequestStatus:
+        """Aggregate state: the least-advanced unfinished choice; FINISHED
+        only when every choice is terminal (ABORTED if any was aborted)."""
+        states = self.statuses
+        running = [s for s in states if _PROGRESS[s] < 3]
+        if running:
+            return min(running, key=lambda s: _PROGRESS[s])
+        if RequestStatus.ABORTED in states:
+            return RequestStatus.ABORTED
+        return RequestStatus.FINISHED
+
+    @property
+    def finished(self) -> bool:
+        return self._done.is_set()
+
+    # -- consumption ---------------------------------------------------- #
+    def stream(self) -> HandleStream:
+        """The handle's typed event stream (single consumer)."""
+        return HandleStream(self._queue)
+
+    def result(self, timeout: Optional[float] = None) -> GenerationResult:
+        """Block until every choice finished (or aborted)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request not finished within {timeout}s")
+        return self._result()
+
+    async def result_async(self) -> GenerationResult:
+        await asyncio.to_thread(self._done.wait)
+        return self._result()
+
+    def _result(self) -> GenerationResult:
+        choices = [
+            ChoiceResult(
+                index=i,
+                text=r.output_text,
+                tokens=list(r.output_tokens),
+                finish_reason=(r.finish_reason.value if r.finish_reason else None),
+                logprobs=list(r.output_logprobs),
+            )
+            for i, r in enumerate(self._requests)
+        ]
+        return GenerationResult(choices=choices, prompt_tokens=self.prompt_tokens)
+
+    def usage(self) -> Dict[str, int]:
+        """OpenAI-style usage counts (prompt counted once across choices)."""
+        return {
+            "prompt_tokens": self.prompt_tokens,
+            "completion_tokens": sum(r.num_generated for r in self._requests),
+            "total_tokens": self.prompt_tokens + sum(r.num_generated for r in self._requests),
+        }
+
+    # -- cancellation --------------------------------------------------- #
+    def abort(self, wait: bool = True, timeout: Optional[float] = 30.0) -> bool:
+        """Cancel every unfinished choice.  The abort is applied by the
+        engine thread at the next block boundary; with ``wait=True`` the
+        call returns once the slots are actually reclaimed (the ABORT
+        finish events arrived).  Aborting a finished handle is a no-op."""
+        if self._done.is_set():
+            return True
+        self._client._request_abort(self.request_ids)
+        if not wait:
+            return True
+        return self._done.wait(timeout)
+
+    async def abort_async(self) -> bool:
+        return await asyncio.to_thread(self.abort)
+
+    # -- engine-thread side --------------------------------------------- #
+    def _on_event(self, ev: StreamEvent) -> None:
+        """Fan one engine event into the typed stream (engine thread)."""
+        idx = self._index[ev.request_id]
+        if ev.finished:
+            reason = (ev.finish_reason or FinishReason.ABORT).value
+            self._queue.put(FinishEvent(idx, reason, ev.text))
+            with self._lock:
+                self._open -= 1
+                last = self._open == 0
+            if last:
+                self._queue.put(None)          # stream sentinel
+                self._done.set()
+        elif ev.token is not None:
+            self._queue.put(TokenEvent(idx, ev.token, ev.text, ev.logprob, ev.top_logprobs))
+
+
+class EngineClient:
+    """Thread-safe request-lifecycle front end that owns the engine."""
+
+    def __init__(self, engine: InferenceEngine, *, auto_start: bool = True):
+        self.engine = engine
+        self._cv = threading.Condition()
+        self._handles: Dict[int, RequestHandle] = {}
+        self._aborts: List[int] = []
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        if auto_start:
+            self.start()
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def submit(self, request: Union[GenerationRequest, Request]) -> RequestHandle:
+        """Validate + enqueue; returns the lifecycle handle immediately.
+        Invalid requests (prompt too long, bad stop sequences, ...) raise
+        here, before anything is enqueued."""
+        if isinstance(request, Request):
+            reqs = [request]
+        else:
+            reqs = request.to_requests(self.engine.tokenizer)
+        handle = RequestHandle(self, reqs)
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("EngineClient is stopped")
+            admitted: List[Request] = []
+            try:
+                for r in reqs:
+                    self.engine.add_request(r)
+                    admitted.append(r)
+            except BaseException:
+                # roll back the partial fan-out so no orphan choice decodes
+                for r in admitted:
+                    self._aborts.append(r.request_id)
+                self._cv.notify()
+                raise
+            for r in reqs:
+                self._handles[r.request_id] = handle
+            self._cv.notify()
+        return handle
+
+    def generate(self, request: Union[GenerationRequest, Request]) -> GenerationResult:
+        """Blocking convenience: submit + wait."""
+        return self.submit(request).result()
+
+    def stats(self) -> Dict[str, object]:
+        return self.engine.scheduler.snapshot()
+
+    # ------------------------------------------------------------------ #
+    def _request_abort(self, request_ids: List[int]) -> None:
+        with self._cv:
+            self._aborts.extend(request_ids)
+            self._cv.notify()
+
+    def _drain_aborts_locked(self) -> List[int]:
+        out, self._aborts = self._aborts, []
+        return out
+
+    def _run(self) -> None:
+        engine = self.engine
+        while True:
+            with self._cv:
+                while not engine.scheduler.has_work and not self._aborts and not self._stop:
+                    self._cv.wait(timeout=0.5)
+                if self._stop:
+                    self._shutdown_locked()
+                    return
+                aborts = self._drain_aborts_locked()
+            events: List[StreamEvent] = []
+            # aborts land at the block boundary, before the next admission
+            # plan — the freed slot is reusable in this very step
+            for rid in aborts:
+                events.extend(engine.abort(rid))
+            if engine.scheduler.has_work:
+                events.extend(engine.step())
+            with self._cv:
+                for ev in events:
+                    handle = self._handles.get(ev.request_id)
+                    if handle is not None:
+                        handle._on_event(ev)
+                        if ev.finished:
+                            del self._handles[ev.request_id]
+
+    def _shutdown_locked(self) -> None:
+        """Terminate every in-flight consumer with an ABORT finish event
+        (the loop stops; their requests will never finish)."""
+        for rid, handle in list(self._handles.items()):
+            for r in handle._requests:
+                if r.request_id == rid and not r.is_finished:
+                    r.finish_reason = FinishReason.ABORT
+                    r.status = RequestStatus.ABORTED
+            handle._on_event(
+                StreamEvent(rid, None, "", finished=True, finish_reason=FinishReason.ABORT)
+            )
+        self._handles.clear()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+    close = stop
+
+    def __enter__(self) -> "EngineClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

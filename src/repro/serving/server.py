@@ -1,12 +1,22 @@
 """Minimal stdlib HTTP server exposing the OpenAI-compatible API.
 
-``POST /v1/chat/completions`` (with ``"stream": true`` -> SSE; bodies may
-carry the scheduling extensions ``priority`` and ``deadline_ms``),
-``GET /v1/models`` and ``GET /stats`` (scheduler queue depth / oldest wait /
-admission-pipeline counters / per-class latency percentiles).  ``/stats``
-is served from handler threads while the engine loop mutates the scheduler,
-so everything it reads is snapshot-consistent by construction (see
-``Scheduler.snapshot``).  Intended for local use and the serving example."""
+Routes: ``POST /v1/chat/completions`` and ``POST /v1/completions`` (with
+``"stream": true`` -> SSE; bodies may carry the scheduling extensions
+``priority`` and ``deadline_ms``), ``GET /v1/models`` and ``GET /stats``
+(scheduler queue depth / oldest wait / admission-pipeline counters /
+per-class latency percentiles / abort counts).
+
+Every error — bad JSON, unknown route, invalid request, engine rejection —
+is the structured OpenAI envelope ``{"error": {message, type, param,
+code}}`` with the matching HTTP status.  A client that disconnects during
+an SSE stream closes the chunk generator, which aborts the in-flight
+request: the decode slot is reclaimed within one block instead of burning
+to budget exhaustion (``GET /stats`` counts these under ``aborted``).
+
+``/stats`` is served from handler threads while the engine loop mutates
+the scheduler, so everything it reads is snapshot-consistent by
+construction (see ``Scheduler.snapshot``).  Intended for local use and
+the serving example."""
 from __future__ import annotations
 
 import json
@@ -14,12 +24,12 @@ import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
-from repro.serving.api import OpenAIServer
+from repro.serving.api import OpenAIError, OpenAIServer
 
 
 def make_handler(api: OpenAIServer):
     class Handler(BaseHTTPRequestHandler):
-        def log_message(self, *a):                      # quiet
+        def log_message(self, *a):  # quiet
             pass
 
         def _send_json(self, obj, code=200):
@@ -30,54 +40,86 @@ def make_handler(api: OpenAIServer):
             self.end_headers()
             self.wfile.write(body)
 
+        def _send_error(self, err: OpenAIError):
+            self._send_json(err.to_dict(), err.status)
+
+        def _not_found(self):
+            self._send_error(
+                OpenAIError(f"unknown route {self.path}", code="not_found", status=404)
+            )
+
         def do_GET(self):
             if self.path == "/v1/models":
-                self._send_json({"object": "list", "data": [
-                    {"id": api.model_name, "object": "model"}]})
+                self._send_json(api.models())
             elif self.path == "/stats":
-                # queue depth / oldest wait / admission-pipeline counters —
-                # the production view of prefill/decode overlap behaviour
+                # queue depth / oldest wait / admission + abort counters —
+                # the production view of overlap and cancellation behaviour
                 self._send_json(api.stats())
             else:
-                self._send_json({"error": "not found"}, 404)
+                self._not_found()
+
+        def _read_body(self):
+            length = int(self.headers.get("Content-Length", "0"))
+            raw = self.rfile.read(length) or b"{}"
+            try:
+                body = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise OpenAIError(
+                    f"request body is not valid JSON: {e}", code="invalid_json"
+                ) from e
+            if not isinstance(body, dict):
+                raise OpenAIError("request body must be a JSON object")
+            return body
+
+        def _stream_sse(self, chunks):
+            """Write SSE chunks; a dropped connection closes the generator,
+            whose ``finally`` aborts the in-flight request."""
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.end_headers()
+            try:
+                for chunk in chunks:
+                    payload = b"data: " + json.dumps(chunk).encode() + b"\n\n"
+                    self.wfile.write(payload)
+                    self.wfile.flush()
+                self.wfile.write(b"data: [DONE]\n\n")
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                pass  # client went away; generator cleanup aborted the work
+            finally:
+                chunks.close()
 
         def do_POST(self):
-            if self.path != "/v1/chat/completions":
-                self._send_json({"error": "not found"}, 404)
+            routes = {
+                "/v1/chat/completions": (
+                    api.chat_completion,
+                    api.chat_completion_stream,
+                ),
+                "/v1/completions": (api.completion, api.completion_stream),
+            }
+            route = routes.get(self.path)
+            if route is None:
+                self._not_found()
                 return
-            length = int(self.headers.get("Content-Length", "0"))
-            body = json.loads(self.rfile.read(length) or b"{}")
-            if body.get("stream"):
-                self.send_response(200)
-                self.send_header("Content-Type", "text/event-stream")
-                self.end_headers()
-                try:
-                    for chunk in api.chat_completion_stream(body):
-                        self.wfile.write(b"data: " + json.dumps(chunk).encode()
-                                         + b"\n\n")
-                except ValueError as e:
-                    # headers are gone: surface the error as an SSE event
-                    self.wfile.write(b"data: " + json.dumps(
-                        {"error": {"message": str(e),
-                                   "type": type(e).__name__}}).encode()
-                        + b"\n\n")
-                self.wfile.write(b"data: [DONE]\n\n")
-            else:
-                try:
-                    self._send_json(api.chat_completion(body))
-                except ValueError as e:
-                    # invalid request (e.g. PromptTooLongError, too many
-                    # stop tokens): a 400, not a dropped connection
-                    self._send_json({"error": {"message": str(e),
-                                               "type": type(e).__name__}},
-                                    400)
+            blocking, streaming = route
+            try:
+                body = self._read_body()
+                if body.get("stream"):
+                    self._stream_sse(streaming(body))
+                else:
+                    self._send_json(blocking(body))
+            except OpenAIError as e:
+                self._send_error(e)
+            except ValueError as e:
+                # engine rejection that escaped the codec: still an envelope
+                self._send_error(OpenAIError(str(e)))
 
     return Handler
 
 
 class ApiServer:
-    def __init__(self, api: OpenAIServer, host: str = "127.0.0.1",
-                 port: int = 8177):
+    def __init__(self, api: OpenAIServer, host: str = "127.0.0.1", port: int = 8177):
+        self.api = api
         self._httpd = ThreadingHTTPServer((host, port), make_handler(api))
         self._thread: Optional[threading.Thread] = None
 
@@ -86,8 +128,7 @@ class ApiServer:
         return self._httpd.server_address[1]
 
     def start(self) -> None:
-        self._thread = threading.Thread(target=self._httpd.serve_forever,
-                                        daemon=True)
+        self._thread = threading.Thread(target=self._httpd.serve_forever, daemon=True)
         self._thread.start()
 
     def stop(self) -> None:

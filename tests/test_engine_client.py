@@ -1,0 +1,357 @@
+"""Request-lifecycle API: EngineClient handles + true cancellation.
+
+Pins the PR 4 contract (DESIGN_engine_client.md): ``submit`` returns a
+handle whose stream works both sync and async; ``abort`` propagates into
+every engine layer — pending queue, speculative jobs, prefill chunk queue,
+eviction snapshots, live decode slots — and the freed slot is re-admitted
+within one decode block; surviving slots' greedy outputs are bit-identical
+across a neighbour's abort; SSE client disconnect triggers the same abort
+path end to end through the HTTP server."""
+import asyncio
+import json
+import socket
+import time
+import urllib.request
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.request import (GenerationRequest, Request, RequestStatus,
+                                SamplingParams)
+from repro.serving.client import (EngineClient, FinishEvent, RequestHandle,
+                                  TokenEvent)
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+LONG = "shared system prompt for request lifecycle testing " * 3
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+@pytest.fixture(scope="module")
+def byte_cfg():
+    # vocab == tokenizer vocab: sampled ids decode to real bytes, so text
+    # -level features (stop sequences) are exercised for real
+    return get_config("qwen3-0.6b-toy").reduced(vocab_size=259)
+
+
+def _req(text, max_tokens=6, **kw):
+    return Request(prompt_tokens=TOK.encode(text),
+                   sampling=SamplingParams(max_tokens=max_tokens), **kw)
+
+
+# --------------------------------------------------------------------------- #
+# handle basics: stream (sync + async), result, status, n-fan-out
+# --------------------------------------------------------------------------- #
+def test_handle_stream_result_and_status(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+    with EngineClient(eng) as client:
+        handle = client.submit(GenerationRequest(
+            prompt="stream me", sampling=SamplingParams(max_tokens=5)))
+        assert isinstance(handle, RequestHandle)
+        events = list(handle.stream())
+        tokens = [e for e in events if isinstance(e, TokenEvent)]
+        finishes = [e for e in events if isinstance(e, FinishEvent)]
+        assert len(tokens) == 5 and len(finishes) == 1
+        assert finishes[0].finish_reason == "length"
+        assert handle.status is RequestStatus.FINISHED
+        result = handle.result()
+        assert result.choices[0].tokens == [t.token for t in tokens]
+        assert result.usage()["completion_tokens"] == 5
+
+
+def test_handle_async_stream_and_result(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+
+    async def drive(client):
+        h = client.submit(GenerationRequest(
+            prompt="async", sampling=SamplingParams(max_tokens=4)))
+        toks = 0
+        async for ev in h.stream():
+            toks += isinstance(ev, TokenEvent)
+        result = await h.result_async()
+        return toks, result.choices[0].finish_reason
+
+    with EngineClient(eng) as client:
+        toks, reason = asyncio.run(drive(client))
+    assert toks == 4 and reason == "length"
+
+
+def test_n_fanout_one_handle_n_slots(cfg):
+    eng = InferenceEngine(cfg, max_batch=4, cache_len=128)
+    with EngineClient(eng) as client:
+        handle = client.submit(GenerationRequest(
+            prompt="fan out", n=3, sampling=SamplingParams(max_tokens=4)))
+        assert handle.n == 3 and len(handle.request_ids) == 3
+        result = handle.result()
+    assert [c.index for c in result.choices] == [0, 1, 2]
+    # greedy: all choices identical (OpenAI semantics at temperature 0)
+    assert result.choices[0].tokens == result.choices[1].tokens
+    assert result.usage()["completion_tokens"] == 12
+    # the fan-out genuinely occupied multiple slots
+    assert eng.scheduler.stats.peak_batch >= 2
+
+
+# --------------------------------------------------------------------------- #
+# abort mid-decode: slot freed within one block, then reused
+# --------------------------------------------------------------------------- #
+def test_abort_mid_decode_frees_and_reuses_slot(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+    hog = _req("hog request", max_tokens=4096)
+    mate = _req("fellow traveller", max_tokens=40)
+    eng.add_request(hog)
+    eng.add_request(mate)
+    for _ in range(3):
+        eng.step()
+    assert hog.status is RequestStatus.DECODING
+    hog_slot = next(s for s, r in eng.scheduler.active.items() if r is hog)
+    assert eng.pool.num_free == 0
+
+    events = eng.abort(hog.request_id)
+    assert [e.finish_reason.value for e in events if e.finished] == ["abort"]
+    assert hog.status is RequestStatus.ABORTED
+    assert eng.pool.num_free == 1                  # freed immediately
+    assert eng.scheduler.stats.aborted == 1
+
+    newcomer = _req("newcomer", max_tokens=3)
+    eng.add_request(newcomer)
+    eng.step()                                     # next block boundary
+    # the newcomer was admitted into the aborted request's slot
+    assert any(r is newcomer for r in eng.scheduler.active.values())
+    new_slot = next(s for s, r in eng.scheduler.active.items()
+                    if r is newcomer)
+    assert new_slot == hog_slot
+    eng.run()
+    assert newcomer.is_finished and mate.is_finished
+    assert hog.finish_reason.value == "abort"
+
+
+def test_survivor_greedy_bit_identity_across_abort(cfg):
+    def run(abort):
+        eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+        victim = _req("the victim", max_tokens=64)
+        survivor = _req("the survivor", max_tokens=32)
+        eng.add_request(victim)
+        eng.add_request(survivor)
+        steps = 0
+        while eng.scheduler.has_work:
+            eng.step()
+            steps += 1
+            if abort and steps == 3:
+                eng.abort(victim.request_id)
+        return survivor.output_tokens
+
+    assert run(False) == run(True)
+
+
+# --------------------------------------------------------------------------- #
+# abort mid-prefill: chunk queue + speculative jobs
+# --------------------------------------------------------------------------- #
+def test_abort_mid_prefill_drops_chunk_queue_job(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=256, prefill_chunk=32)
+    long = Request(prompt_tokens=TOK.encode(LONG),
+                   sampling=SamplingParams(max_tokens=8))
+    eng.add_request(long)
+    eng.step()                                     # first chunk ran
+    assert long.status is RequestStatus.PREFILLING
+    assert eng.scheduler.has_prefill_work          # more chunks queued
+    eng.abort(long.request_id)
+    assert long.status is RequestStatus.ABORTED
+    assert not eng.scheduler.has_prefill_work      # chunks cancelled
+    assert eng.pool.num_free == 2                  # slot back in the pool
+    assert not eng.scheduler.has_work
+    # the engine is fully reusable afterwards
+    fresh = _req("fresh", max_tokens=3)
+    eng.generate([fresh])
+    assert fresh.is_finished
+
+
+def test_abort_speculative_job_cancelled(cfg):
+    # 3 staggered chunked prefills keep wave sizes at k=3 (kp=4): one
+    # padding row per wave carries the pending request's chunks
+    eng = InferenceEngine(cfg, max_batch=3, cache_len=256, prefill_chunk=32,
+                          enable_prefix_cache=False)
+    hogs = [Request(prompt_tokens=TOK.encode("slot hog " * (8 + 4 * i)),
+                    sampling=SamplingParams(max_tokens=24))
+            for i in range(3)]
+    for hog in hogs:
+        eng.add_request(hog)
+    eng.step()                                     # hogs take all slots
+    waiting = Request(prompt_tokens=TOK.encode(LONG),
+                      sampling=SamplingParams(max_tokens=4))
+    eng.add_request(waiting)
+    for _ in range(4):                             # spec chunks ride waves
+        eng.step()
+        if waiting.request_id in eng._spec_jobs:
+            break
+    assert waiting.request_id in eng._spec_jobs
+    eng.abort(waiting.request_id)
+    assert waiting.request_id not in eng._spec_jobs
+    assert waiting.status is RequestStatus.ABORTED
+    assert waiting not in eng.scheduler.pending
+    eng.run()
+    assert all(h.is_finished for h in hogs)
+    assert eng.scheduler.stats.aborted == 1
+
+
+def test_abort_preempted_request_releases_snapshot(cfg):
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                          sched_policy="edf", preemption=True)
+    batch = _req("long batch request " * 2, max_tokens=24)
+    eng.add_request(batch)
+    for _ in range(4):
+        eng.step()
+    urgent = _req("urgent!", max_tokens=6, deadline_ms=1.0)
+    eng.add_request(urgent)
+    eng.step()                                     # urgent evicts batch
+    assert eng.scheduler.stats.preemptions == 1
+    assert batch.request_id in eng._evicted
+    eng.abort(batch.request_id)
+    assert batch.request_id not in eng._evicted    # snapshot released
+    assert batch.status is RequestStatus.ABORTED
+    eng.run()
+    assert urgent.is_finished
+    assert eng.scheduler.stats.resumed == 0
+
+
+# --------------------------------------------------------------------------- #
+# abort after finish: no-op
+# --------------------------------------------------------------------------- #
+def test_abort_after_finish_is_noop(cfg):
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=128)
+    done = _req("quick", max_tokens=2)
+    eng.generate([done])
+    assert done.is_finished
+    assert eng.abort(done.request_id) == []
+    assert eng.scheduler.stats.aborted == 0
+    assert done.finish_reason.value == "length"    # reason untouched
+    # unknown ids are equally a no-op
+    assert eng.abort(10**9) == []
+
+
+def test_client_abort_waits_for_reclaim(cfg):
+    eng = InferenceEngine(cfg, max_batch=2, cache_len=128)
+    with EngineClient(eng) as client:
+        hog = client.submit(GenerationRequest(
+            prompt="unbounded", sampling=SamplingParams(max_tokens=4096)))
+        deadline = time.monotonic() + 60
+        while hog.status is not RequestStatus.DECODING:
+            assert time.monotonic() < deadline, "hog never started decoding"
+            time.sleep(0.01)
+        assert hog.abort()                         # wait=True: slot reclaimed
+        assert hog.status is RequestStatus.ABORTED
+        assert eng.pool.num_free == 2
+        # aborting again (finished handle) stays a no-op
+        assert hog.abort()
+        # the engine still serves new work afterwards
+        after = client.generate(GenerationRequest(
+            prompt="after the abort", sampling=SamplingParams(max_tokens=3)))
+        assert after.choices[0].finish_reason == "length"
+    assert eng.scheduler.stats.aborted == 1
+
+
+# --------------------------------------------------------------------------- #
+# SSE client disconnect -> abort (end to end through the HTTP server)
+# --------------------------------------------------------------------------- #
+def test_sse_disconnect_aborts_request(byte_cfg):
+    from repro.serving.api import OpenAIServer
+    from repro.serving.server import ApiServer
+
+    eng = InferenceEngine(byte_cfg, max_batch=2, cache_len=128)
+    api = OpenAIServer(eng, "toy")
+    server = ApiServer(api, port=0)
+    server.start()
+    try:
+        body = json.dumps({
+            "messages": [{"role": "user", "content": "never ending"}],
+            "max_tokens": 100_000, "stream": True,
+        }).encode()
+        conn = socket.create_connection(("127.0.0.1", server.port),
+                                        timeout=30)
+        conn.sendall(
+            b"POST /v1/chat/completions HTTP/1.1\r\n"
+            b"Host: localhost\r\nContent-Type: application/json\r\n"
+            b"Content-Length: " + str(len(body)).encode() + b"\r\n\r\n"
+            + body)
+        assert conn.recv(4096)                     # stream started
+        conn.close()                               # client hangs up
+
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if (eng.scheduler.stats.aborted >= 1
+                    and eng.pool.num_free == 2):
+                break
+            time.sleep(0.05)
+        assert eng.scheduler.stats.aborted >= 1, "disconnect never aborted"
+        assert eng.pool.num_free == 2              # slot reclaimed
+        # /stats surfaces the abort counter
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{server.port}/stats", timeout=30) as r:
+            stats = json.loads(r.read())
+        assert stats["aborted"] >= 1
+    finally:
+        server.stop()
+        api.client.stop()
+
+
+# --------------------------------------------------------------------------- #
+# stop sequences (host-side, text level)
+# --------------------------------------------------------------------------- #
+def test_stop_sequence_truncates_and_frees_slot(byte_cfg):
+    base = Request(prompt_tokens=TOK.encode("tell me something"),
+                   sampling=SamplingParams(max_tokens=24))
+    InferenceEngine(byte_cfg, max_batch=2, cache_len=128).generate([base])
+    assert len(base.output_text) >= 6, "byte model emitted no text"
+    stop = base.output_text[3:6]
+    cut = base.output_text.find(stop)
+
+    eng = InferenceEngine(byte_cfg, max_batch=2, cache_len=128)
+    r = Request(prompt_tokens=TOK.encode("tell me something"),
+                sampling=SamplingParams(max_tokens=24,
+                                        stop_sequences=(stop,)))
+    eng.generate([r])
+    assert r.finish_reason.value == "stop"
+    assert r.output_text == base.output_text[:cut]  # match truncated away
+    assert stop not in r.output_text
+    assert eng.pool.num_free == 2                   # slot freed at the stop
+    assert r.num_generated < base.num_generated or cut == len(base.output_text)
+
+
+def test_stop_sequence_streaming_never_reveals_match(byte_cfg):
+    base = Request(prompt_tokens=TOK.encode("stream stop test"),
+                   sampling=SamplingParams(max_tokens=24))
+    InferenceEngine(byte_cfg, max_batch=2, cache_len=128).generate([base])
+    if len(base.output_text) < 6:
+        pytest.skip("model emitted too little text")
+    stop = base.output_text[2:5]
+    eng = InferenceEngine(byte_cfg, max_batch=2, cache_len=128)
+    with EngineClient(eng) as client:
+        handle = client.submit(GenerationRequest(
+            prompt="stream stop test",
+            sampling=SamplingParams(max_tokens=24, stop_sequences=(stop,))))
+        streamed = ""
+        for ev in handle.stream():
+            if isinstance(ev, (TokenEvent, FinishEvent)):
+                streamed += ev.text
+                assert stop not in streamed     # held back at every point
+        assert handle.result().choices[0].finish_reason == "stop"
+
+
+def test_multiple_stop_sequences_earliest_wins(byte_cfg):
+    base = Request(prompt_tokens=TOK.encode("many stops"),
+                   sampling=SamplingParams(max_tokens=24))
+    InferenceEngine(byte_cfg, max_batch=2, cache_len=128).generate([base])
+    if len(base.output_text) < 8:
+        pytest.skip("model emitted too little text")
+    early, late = base.output_text[2:4], base.output_text[6:8]
+    eng = InferenceEngine(byte_cfg, max_batch=2, cache_len=128)
+    r = Request(prompt_tokens=TOK.encode("many stops"),
+                sampling=SamplingParams(max_tokens=24,
+                                        stop_sequences=(late, early)))
+    eng.generate([r])
+    assert r.finish_reason.value == "stop"
+    assert r.output_text == base.output_text[:base.output_text.find(early)]

@@ -1,4 +1,4 @@
-"""Media pipeline format handling + engine-loop threading coverage."""
+"""Media pipeline format handling + engine-client threading coverage."""
 import threading
 
 import numpy as np
@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.engine import InferenceEngine
 from repro.core.request import Request, SamplingParams
-from repro.serving.engine_loop import EngineLoop
+from repro.serving.client import EngineClient
 from repro.serving.media import (AudioEncoderStub, VisionEncoderStub,
                                  decode_media, encode_b64, register_url)
 from repro.serving.tokenizer import ByteTokenizer
@@ -47,24 +47,25 @@ def test_audio_stub_shapes(rng):
     np.testing.assert_array_equal(emb, enc(wav))
 
 
-def test_engine_loop_concurrent_submitters():
+def test_engine_client_concurrent_submitters():
     cfg = get_config("qwen3-0.6b-toy")
     engine = InferenceEngine(cfg, max_batch=4, cache_len=128)
-    loop = EngineLoop(engine)
+    client = EngineClient(engine)
     results = {}
 
-    def client(i):
+    def submitter(i):
         r = Request(prompt_tokens=TOK.encode(f"client {i}"),
                     sampling=SamplingParams(max_tokens=5))
-        loop.generate(r)
+        client.generate(r)
         results[i] = r
 
-    threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(6)]
     for t in threads:
         t.start()
     for t in threads:
         t.join(timeout=120)
-    loop.stop()
+    client.stop()
     assert len(results) == 6
     assert all(r.is_finished and r.num_generated >= 1
                for r in results.values())

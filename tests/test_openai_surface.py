@@ -1,0 +1,225 @@
+"""OpenAI-schema conformance: golden request/response fixtures round-trip
+through the real HTTP server (tests/golden_openai/*.json).
+
+Each fixture carries a request and a structural response schema; leaves are
+matchers (``__type`` / ``__const`` / ``__enum`` / ``__each`` + ``__len``)
+so the goldens pin the *contract* — key sets, types, enums, list shapes —
+without depending on what a randomly initialised toy model generates.
+Streaming fixtures validate the first/last/all SSE chunks plus the
+``data: [DONE]`` terminator.  CI runs this module as its own conformance
+smoke job (see .github/workflows/ci.yml)."""
+import http.client
+import json
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.serving.api import OpenAIServer
+from repro.serving.server import ApiServer
+
+GOLDEN = sorted((Path(__file__).parent / "golden_openai").glob("*.json"))
+assert GOLDEN, "golden fixture directory is empty"
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = get_config("qwen3-0.6b-toy")
+    engine = InferenceEngine(cfg, max_batch=4, cache_len=128)
+    api = OpenAIServer(engine, "toy")
+    srv = ApiServer(api, port=0)
+    srv.start()
+    yield srv
+    srv.stop()
+    api.client.stop()
+
+
+# --------------------------------------------------------------------------- #
+# structural matcher
+# --------------------------------------------------------------------------- #
+def match(schema, value, path="$"):
+    """Return a list of mismatch strings (empty = conforms)."""
+    if isinstance(schema, dict) and "__type" in schema:
+        kinds = {"string": str, "int": int, "number": (int, float),
+                 "bool": bool, "null": type(None)}
+        kind = schema["__type"]
+        if kind == "any":
+            return []
+        if not isinstance(value, kinds[kind]) or (
+                kind in ("int", "number") and isinstance(value, bool)):
+            return [f"{path}: expected {kind}, got {type(value).__name__}"]
+        return []
+    if isinstance(schema, dict) and "__const" in schema:
+        ok = value == schema["__const"]
+        return [] if ok else [f"{path}: expected {schema['__const']!r}, "
+                              f"got {value!r}"]
+    if isinstance(schema, dict) and "__enum" in schema:
+        ok = value in schema["__enum"]
+        return [] if ok else [f"{path}: {value!r} not in {schema['__enum']}"]
+    if isinstance(schema, dict) and "__each" in schema:
+        if not isinstance(value, list):
+            return [f"{path}: expected list, got {type(value).__name__}"]
+        errs = []
+        want_len = schema.get("__len")
+        if want_len is not None and len(value) != want_len:
+            errs.append(f"{path}: expected {want_len} items, "
+                        f"got {len(value)}")
+        for i, item in enumerate(value):
+            errs += match(schema["__each"], item, f"{path}[{i}]")
+        return errs
+    if isinstance(schema, dict):
+        if not isinstance(value, dict):
+            return [f"{path}: expected object, got {type(value).__name__}"]
+        errs = []
+        for key, sub in schema.items():
+            if key not in value:
+                errs.append(f"{path}.{key}: missing")
+            else:
+                errs += match(sub, value[key], f"{path}.{key}")
+        return errs
+    return [] if value == schema else [f"{path}: expected {schema!r}, "
+                                       f"got {value!r}"]
+
+
+def _request_json(server, fixture):
+    url = f"http://127.0.0.1:{server.port}{fixture['path']}"
+    if fixture["method"] == "GET":
+        req = urllib.request.Request(url)
+    else:
+        req = urllib.request.Request(
+            url, data=json.dumps(fixture["request"]).encode(),
+            headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _request_sse(server, fixture):
+    conn = http.client.HTTPConnection("127.0.0.1", server.port, timeout=120)
+    conn.request("POST", fixture["path"],
+                 body=json.dumps(fixture["request"]).encode(),
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    raw = resp.read().decode()
+    conn.close()
+    events = [line[len("data: "):] for line in raw.split("\n\n")
+              if line.startswith("data: ")]
+    assert events and events[-1] == "[DONE]", raw[:400]
+    return resp.status, [json.loads(e) for e in events[:-1]]
+
+
+@pytest.mark.parametrize("path", GOLDEN, ids=lambda p: p.stem)
+def test_golden_fixture(server, path):
+    fixture = json.loads(path.read_text())
+    if fixture.get("stream"):
+        status, chunks = _request_sse(server, fixture)
+        assert status == fixture["status"]
+        assert chunks, "no SSE chunks before [DONE]"
+        errs = []
+        if "first_chunk" in fixture:
+            errs += match(fixture["first_chunk"], chunks[0], "first")
+        if "last_chunk" in fixture:
+            errs += match(fixture["last_chunk"], chunks[-1], "last")
+        if "all_chunks" in fixture:
+            for i, chunk in enumerate(chunks):
+                errs += match(fixture["all_chunks"], chunk, f"chunk[{i}]")
+        assert not errs, errs[:8]
+    else:
+        status, body = _request_json(server, fixture)
+        assert status == fixture["status"], body
+        errs = match(fixture["response"], body)
+        assert not errs, errs[:8]
+
+
+# --------------------------------------------------------------------------- #
+# semantic checks the structural goldens cannot express
+# --------------------------------------------------------------------------- #
+def test_greedy_n_choices_identical(server):
+    fixture = {
+        "method": "POST", "path": "/v1/chat/completions",
+        "request": {"messages": [{"role": "user", "content": "same"}],
+                    "max_tokens": 4, "n": 3},
+    }
+    _, body = _request_json(server, fixture)
+    texts = {c["message"]["content"] for c in body["choices"]}
+    assert len(body["choices"]) == 3 and len(texts) == 1
+    assert body["usage"]["completion_tokens"] == 12
+
+
+def test_chat_logprobs_are_normalised(server):
+    _, body = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions",
+        "request": {"messages": [{"role": "user", "content": "lp"}],
+                    "max_tokens": 3, "logprobs": True, "top_logprobs": 3},
+    })
+    for entry in body["choices"][0]["logprobs"]["content"]:
+        assert entry["logprob"] <= 0.0
+        tops = [t["logprob"] for t in entry["top_logprobs"]]
+        assert tops == sorted(tops, reverse=True)
+        # greedy sampling: the chosen token is the argmax
+        assert abs(entry["logprob"] - tops[0]) < 1e-5
+
+
+def test_usage_chunk_matches_blocking_usage(server):
+    req = {"messages": [{"role": "user", "content": "usage parity"}],
+           "max_tokens": 5}
+    _, blocking = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    _, chunks = _request_sse(server, {
+        "path": "/v1/chat/completions",
+        "request": {**req, "stream": True,
+                    "stream_options": {"include_usage": True}}})
+    assert chunks[-1]["usage"] == blocking["usage"]
+    assert chunks[-1]["choices"] == []
+    # chunks before the usage chunk carry a null usage placeholder
+    assert all(c["usage"] is None for c in chunks[:-1])
+
+
+def test_negative_top_logprobs_rejected(server):
+    status, body = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions",
+        "request": {"messages": [{"role": "user", "content": "x"}],
+                    "logprobs": True, "top_logprobs": -1},
+    })
+    assert status == 400
+    assert body["error"]["param"] == "top_logprobs"
+
+
+def test_multi_prompt_submit_failure_leaks_no_slots(server):
+    """If a later prompt of a multi-prompt completion is rejected at
+    submit, the earlier prompts' handles are aborted — a 400 must not
+    leave a decode slot burning to budget exhaustion."""
+    import time as _time
+
+    eng = server.api.engine
+    status, body = _request_json(server, {
+        "method": "POST", "path": "/v1/completions",
+        "request": {"prompt": ["fine prompt", "x" * 4096],   # 2nd too long
+                    "max_tokens": 100_000},
+    })
+    assert status == 400 and "error" in body
+    deadline = _time.monotonic() + 60
+    while _time.monotonic() < deadline:
+        if (eng.pool.num_free == eng.pool.max_batch
+                and not eng.scheduler.has_work):
+            break
+        _time.sleep(0.05)
+    assert eng.pool.num_free == eng.pool.max_batch, "leaked a decode slot"
+    assert eng.scheduler.stats.aborted >= 1
+
+
+def test_stream_reassembles_to_blocking_text(server):
+    req = {"messages": [{"role": "user", "content": "reassemble me"}],
+           "max_tokens": 6}
+    _, blocking = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    _, chunks = _request_sse(server, {
+        "path": "/v1/chat/completions", "request": {**req, "stream": True}})
+    text = "".join(c["choices"][0]["delta"].get("content", "")
+                   for c in chunks if c["choices"])
+    assert text == blocking["choices"][0]["message"]["content"]

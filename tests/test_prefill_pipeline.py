@@ -134,17 +134,12 @@ def test_batched_wave_equals_sequential(cfg):
     assert bat.scheduler.stats.rows_per_wave > 1.0
 
 
-def test_legacy_admission_matches_pipeline_greedy(cfg):
-    """The pre-pipeline baseline path (sequential blocking prefills) stays
-    output-equivalent — it differs in schedule, not semantics."""
-    mk = lambda legacy: InferenceEngine(
-        cfg, max_batch=4, cache_len=128, enable_prefix_cache=False,
-        legacy_admission=legacy)
-    reqs = lambda: [_req(f"request {i}", 6) for i in range(5)]
-    a = mk(False).generate(reqs())
-    b = mk(True).generate(reqs())
-    for ra, rb in zip(a, b):
-        assert ra.output_tokens == rb.output_tokens
+def test_legacy_admission_path_is_gone(cfg):
+    """The deprecated pre-pipeline baseline was removed (ROADMAP removal
+    target after PR 3 baselined it): the knob must not silently no-op."""
+    with pytest.raises(TypeError):
+        InferenceEngine(cfg, max_batch=1, cache_len=64,
+                        legacy_admission=True)
 
 
 def test_vision_chunked_wave_equivalence():
@@ -261,7 +256,8 @@ def test_prefill_overlap_benchmark_smoke(tmp_path):
     assert out.exists()
     rows = result["rows"]
     variants = {(r["variant"], r["chunk"]) for r in rows}
-    assert ("pre_pr", 0) in variants and ("pipeline", 0) in variants
+    assert ("pipeline", 0) in variants and len(variants) >= 2
+    assert all(v == "pipeline" for v, _ in variants)   # pre_pr is gone
     for r in rows:
         assert r["tok_s"] > 0
         assert r["ttft_p95_ms"] >= r["ttft_p50_ms"] >= 0

@@ -304,20 +304,22 @@ def test_api_accepts_priority_and_deadline(cfg):
 
     eng = InferenceEngine(cfg, max_batch=1, cache_len=128)
     api = OpenAIServer(eng, "toy")
-    req = api._build_request({
+    greq = api._decode_chat({
         "messages": [{"role": "user", "content": "hi"}],
         "max_tokens": 2, "priority": 3, "deadline_ms": 250,
     })
+    req = greq.to_requests(eng.tokenizer)[0]
     assert req.priority == 3 and req.deadline_ms == 250.0
     assert req.latency_class == "interactive"
-    default = api._build_request(
-        {"messages": [{"role": "user", "content": "hi"}]})
+    default = api._decode_chat(
+        {"messages": [{"role": "user", "content": "hi"}]}
+    ).to_requests(eng.tokenizer)[0]
     assert default.priority == 0 and default.deadline_ms is None
     assert default.latency_class == "batch"
     st = api.stats()
     assert st["sched_policy"] == "fifo"
     assert st["preemption"] is False and st["speculative_fill"] is True
-    assert "latency_by_class" in st
+    assert "latency_by_class" in st and "aborted" in st
 
 
 def test_stats_snapshot_consistent_under_concurrent_mutation(cfg):
@@ -329,7 +331,7 @@ def test_stats_snapshot_consistent_under_concurrent_mutation(cfg):
 
     eng = InferenceEngine(cfg, max_batch=2, cache_len=128,
                           sched_policy="edf", preemption=True)
-    api = OpenAIServer(eng, "toy", threaded=True)
+    api = OpenAIServer(eng, "toy")
     server = ApiServer(api, port=0)
     server.start()
     url = f"http://127.0.0.1:{server.port}/stats"
@@ -367,19 +369,13 @@ def test_stats_snapshot_consistent_under_concurrent_mutation(cfg):
         for t in readers:
             t.join(timeout=10)
         server.stop()
-        api.loop.stop()
+        api.client.stop()
     assert not failures, failures[:5]
 
 
 # --------------------------------------------------------------------------- #
-# deprecation + benchmark smoke
+# benchmark smoke
 # --------------------------------------------------------------------------- #
-def test_legacy_admission_emits_deprecation_warning(cfg):
-    with pytest.warns(DeprecationWarning, match="legacy_admission"):
-        InferenceEngine(cfg, max_batch=1, cache_len=64,
-                        legacy_admission=True)
-
-
 def test_sched_policy_benchmark_smoke(tmp_path):
     from benchmarks import sched_policy, validate
 
@@ -395,6 +391,12 @@ def test_sched_policy_benchmark_smoke(tmp_path):
     by = {r["variant"]: r for r in result["rows"]}
     assert by["edf_preempt"]["preemptions"] > 0
     assert by["fifo"]["spec_chunks"] > 0 >= by["fifo_nospec"]["spec_chunks"]
+    # abort churn: requests really were cancelled mid-flight, their slots
+    # were reclaimed, and the reclaim latency was measured
+    assert by["fifo_abort"]["aborted"] > 0
+    assert by["fifo_abort"]["slot_reclaim_p95_ms"] >= 0.0
+    assert all(r["aborted"] == 0 for r in result["rows"]
+               if r["variant"] != "fifo_abort")
 
 
 def test_validate_rejects_malformed_payloads():

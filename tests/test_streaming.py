@@ -1,12 +1,14 @@
 """UTF-8-safe streaming (paper §3.2): never split a code point, lose no
-bytes, for arbitrary text and arbitrary chunking."""
+bytes, for arbitrary text and arbitrary chunking — and stop-sequence
+filtering that matches non-streaming truncation for arbitrary chunking."""
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(optional dev dep — see tests/README.md)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.streaming import StreamDecoder, TokenStreamDecoder
+from repro.core.streaming import (StopSequenceChecker, StreamDecoder,
+                                  TokenStreamDecoder)
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -49,3 +51,43 @@ def test_specials_emit_nothing():
     dec = TokenStreamDecoder(tok)
     assert dec.push_token(tok.EOS) == ""
     assert dec.push_token(tok.BOS) == ""
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.text(alphabet="abcXY ", min_size=0, max_size=80),
+       st.lists(st.text(alphabet="abcXY ", min_size=1, max_size=5),
+                min_size=1, max_size=3),
+       st.lists(st.integers(1, 5), min_size=1, max_size=20))
+def test_stop_checker_matches_offline_truncation(text, stops, cuts):
+    """Streaming through StopSequenceChecker must equal the offline rule:
+    truncate at the earliest occurrence of any stop sequence — regardless
+    of how the text is chunked, and never emitting a match prefix that
+    later completes."""
+    chk = StopSequenceChecker(stops)
+    out, pos, i, stopped = [], 0, 0, False
+    while pos < len(text) and not stopped:
+        step = cuts[i % len(cuts)]
+        emitted, stopped = chk.push(text[pos:pos + step])
+        out.append(emitted)
+        pos += step
+        i += 1
+    if not stopped:
+        out.append(chk.flush())
+    got = "".join(out)
+
+    # offline rule: the match that *completes* first wins (min end, then
+    # min start) — the streaming semantics, chunking-invariant
+    hits = [(text.find(s) + len(s), text.find(s)) for s in stops
+            if text.find(s) != -1]
+    want = text[:min(hits)[1]] if hits else text
+    assert got == want
+    assert stopped == bool(hits)
+
+
+def test_stop_checker_holds_back_partial_match():
+    chk = StopSequenceChecker(["END"])
+    assert chk.push("abcE") == ("abc", False)     # "E" could become "END"
+    assert chk.push("N") == ("", False)           # still ambiguous
+    assert chk.push("!") == ("EN!", False)        # disproven: released
+    emitted, stopped = chk.push("xEND trailing")
+    assert (emitted, stopped) == ("x", True)      # match + tail truncated
