@@ -5,28 +5,66 @@ with :func:`benchmarks.common.bench_result`, which stamps the shared schema:
 ``name``, ``schema_version``, ``machine`` (host/runtime identity), a
 non-empty ``variants`` list, and one metrics dict per ``rows`` entry (each
 row tagged with a ``variant`` drawn from that list plus at least one
-numeric metric).  This module checks all of that, and additionally that
-every benchmark module declaring an ``OUT`` artifact is registered in
-``benchmarks/run.py`` — so a stale, hand-edited, or orphaned artifact fails
-CI instead of silently shipping.
+numeric metric).  This module checks all of that, and additionally that the
+whole ``benchmarks/`` directory is covered: every module either declares an
+``OUT`` artifact and is registered in ``benchmarks/run.py``, or carries an
+explicit exemption (with its reason) in :data:`EXEMPT` — so a stale,
+hand-edited, orphaned, or silently-untracked benchmark fails CI instead of
+quietly shipping.
 
   PYTHONPATH=src python -m benchmarks.validate [FILES...]
+  PYTHONPATH=src python -m benchmarks.validate BENCH_x.json \\
+      --baseline path/to/committed/BENCH_x.json [--tolerance 0.15]
 
-With no arguments, validates every ``BENCH_*.json`` in the repository root
-(the working directory).  Exits non-zero on the first problem set.
+With no file arguments, validates every ``BENCH_*.json`` in the repository
+root (the working directory).  With ``--baseline``, additionally compares
+the fresh artifact's aggregate throughput (geometric mean of the rows'
+``tok_s``) against the committed baseline and fails on a regression larger
+than ``--tolerance`` (default 15%) — the nightly benchmark-regression gate
+(.github/workflows/nightly.yml).  Exits non-zero on the first problem set.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import math
 import re
 import sys
 from pathlib import Path
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 from benchmarks.common import BENCH_SCHEMA_VERSION
 
 REQUIRED_MACHINE_KEYS = ("platform", "python", "jax", "backend", "device")
+
+#: machine-identity fields that must match for the --baseline throughput
+#: gate to hard-fail (vs warn): ``platform`` is deliberately excluded — it
+#: embeds the kernel build, which drifts across CI runner images without
+#: changing the hardware class
+GATE_MACHINE_KEYS = ("python", "jax", "backend", "device", "cpu_count")
+
+#: modules that are harness plumbing, not benchmark suites
+INFRA_MODULES = {"__init__", "common", "run", "validate"}
+
+#: benchmark modules that intentionally emit no BENCH_*.json artifact, with
+#: the reason.  Everything in benchmarks/ that is neither infra nor listed
+#: here must declare ``OUT = Path("BENCH_*.json")`` and be registered in
+#: run.py — validate_directory_coverage() enforces the trichotomy.
+EXEMPT: Dict[str, str] = {
+    "fig2_concurrency": "paper-figure CSV (throughput-vs-concurrency curve) for human "
+    "comparison against Fig.2; no tracked regression artifact",
+    "roofline_report": "analytic report derived from config arithmetic (no timed "
+    "workload to regress)",
+    "table1_throughput": "paper-table CSV compared against the paper by eye; "
+    "regression tracking for the serving path lives in decode_loop/prefill_overlap",
+    "table2_mllm_cache": "paper-table CSV (MLLM cache ablation) for human comparison",
+    "table3_video": "paper-table CSV (video workloads) for human comparison",
+    "table4_ablation": "paper-table CSV (cache-level ablation) for human comparison",
+    "table5_resolution": "paper-table CSV (resolution sweep) for human comparison",
+    "table6_video_frames": "paper-table CSV (frame-count sweep) for human comparison",
+    "table7_text_prefix": "paper-table CSV (text prefix reuse) for human comparison",
+}
 
 _OUT_RE = re.compile(r'^OUT\s*=\s*Path\("(BENCH_[A-Za-z0-9_]+\.json)"\)', re.M)
 
@@ -37,6 +75,8 @@ def declared_artifacts() -> Dict[str, str]:
     suite just to read a constant would pull in the whole model zoo)."""
     out: Dict[str, str] = {}
     for path in sorted(Path(__file__).parent.glob("*.py")):
+        if path.stem in INFRA_MODULES:
+            continue
         match = _OUT_RE.search(path.read_text())
         if match:
             out[path.stem] = match.group(1)
@@ -120,13 +160,159 @@ def validate_registration() -> List[str]:
     return errors
 
 
+def validate_directory_coverage() -> List[str]:
+    """Every benchmarks/*.py is infra, declares a registered BENCH artifact,
+    or is explicitly exempted with a reason — never silently untracked."""
+    errors = []
+    declared = declared_artifacts()
+    for path in sorted(Path(__file__).parent.glob("*.py")):
+        stem = path.stem
+        if stem in INFRA_MODULES:
+            continue
+        if stem in declared and stem in EXEMPT:
+            errors.append(
+                f"benchmarks/{stem}.py declares {declared[stem]} but is also "
+                "listed in validate.EXEMPT — drop one"
+            )
+        elif stem not in declared and stem not in EXEMPT:
+            errors.append(
+                f"benchmarks/{stem}.py neither declares a BENCH_*.json "
+                "artifact (OUT = ...) nor carries an exemption reason in "
+                "benchmarks/validate.py EXEMPT"
+            )
+    for stem in EXEMPT:
+        if not (Path(__file__).parent / f"{stem}.py").exists():
+            errors.append(f"validate.EXEMPT lists benchmarks/{stem}.py, which does not exist")
+    return errors
+
+
+# --------------------------------------------------------------------------- #
+# baseline regression gate (nightly)
+# --------------------------------------------------------------------------- #
+def aggregate_throughput(payload: Dict[str, Any]) -> Optional[float]:
+    """Geometric mean of the rows' ``tok_s`` — scale-invariant across the
+    heterogeneous cells of one suite (batch sizes, concurrency levels,
+    variants), so one collapsed cell moves the aggregate no matter how the
+    other cells are scaled.  None if no row carries ``tok_s``."""
+    vals = [
+        row["tok_s"]
+        for row in payload.get("rows", [])
+        if isinstance(row, dict)
+        and isinstance(row.get("tok_s"), (int, float))
+        and not isinstance(row.get("tok_s"), bool)
+        and row["tok_s"] > 0
+    ]
+    if not vals:
+        return None
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def _throughput_cells(payload: Dict[str, Any], source: str) -> tuple:
+    """(errors, per-variant row counts).  Every row must carry a positive
+    numeric ``tok_s`` — a dropped, zeroed, or stringified cell is an error,
+    never a silent exclusion from the aggregate."""
+    errors: List[str] = []
+    counts: Dict[Any, int] = {}
+    for i, row in enumerate(payload.get("rows", [])):
+        tok_s = row.get("tok_s") if isinstance(row, dict) else None
+        if not isinstance(tok_s, (int, float)) or isinstance(tok_s, bool) or tok_s <= 0:
+            errors.append(f"{source}: rows[{i}] has no positive numeric 'tok_s' ({tok_s!r})")
+            continue
+        key = row.get("variant")
+        counts[key] = counts.get(key, 0) + 1
+    return errors, counts
+
+
+def validate_baseline(current: Path, baseline: Path, tolerance: float) -> List[str]:
+    """Fail when the fresh artifact's aggregate throughput regressed more
+    than ``tolerance`` (fraction) below the committed baseline's.  Both
+    payloads must pass the schema first; mismatched benchmark names or
+    variant sets make the comparison meaningless and fail too.  Speedups
+    and small regressions print as info, never fail."""
+    errors = validate_file(current) + validate_file(baseline)
+    if errors:
+        return errors
+    cur = json.loads(current.read_text())
+    base = json.loads(baseline.read_text())
+    where = f"{current} vs {baseline}"
+    if cur.get("name") != base.get("name"):
+        return [f"{where}: benchmark names differ ({cur.get('name')!r} vs {base.get('name')!r})"]
+    if sorted(cur.get("variants", [])) != sorted(base.get("variants", [])):
+        return [
+            f"{where}: variant sets differ ({cur.get('variants')} vs "
+            f"{base.get('variants')}) — refresh the committed baseline"
+        ]
+    cur_errs, cur_cells = _throughput_cells(cur, str(current))
+    base_errs, base_cells = _throughput_cells(base, str(baseline))
+    if cur_errs or base_errs:
+        return cur_errs + base_errs
+    if cur_cells != base_cells:
+        return [
+            f"{where}: per-variant row counts differ ({cur_cells} vs {base_cells}) "
+            "— a dropped cell would silently skew the aggregate; refresh the "
+            "committed baseline if the sweep intentionally changed"
+        ]
+    mismatched = [
+        key
+        for key in GATE_MACHINE_KEYS
+        if cur.get("machine", {}).get(key) != base.get("machine", {}).get(key)
+    ]
+    cur_agg, base_agg = aggregate_throughput(cur), aggregate_throughput(base)
+    if cur_agg is None or base_agg is None:
+        return [f"{where}: no 'tok_s' rows to compare"]
+    ratio = cur_agg / base_agg
+    verdict = (
+        f"aggregate tok_s {cur_agg:.1f} vs baseline {base_agg:.1f} "
+        f"({(ratio - 1) * 100:+.1f}%, tolerance -{tolerance * 100:.0f}%)"
+    )
+    if ratio < 1.0 - tolerance:
+        if mismatched:
+            # a baseline from different hardware can't distinguish a code
+            # regression from a host-class delta: report loudly, don't fail
+            # — the gate arms itself once a like-hardware baseline lands
+            print(
+                f"warning: {where}: {verdict} BUT machine info differs on "
+                f"{mismatched} — not failing; refresh the committed baseline "
+                "from this host class to arm the gate"
+            )
+            return []
+        return [f"{where}: throughput regression — {verdict}"]
+    print(f"ok: {current.name} {verdict}")
+    return []
+
+
 def main(argv: List[str]) -> int:
-    files = [Path(a) for a in argv] or sorted(Path.cwd().glob("BENCH_*.json"))
-    errors = validate_registration()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", type=Path, help="BENCH_*.json artifacts to validate")
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="committed BENCH_*.json to gate aggregate throughput against "
+        "(requires exactly one positional file)",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="max tolerated aggregate-throughput regression as a fraction (default 0.15)",
+    )
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(Path.cwd().glob("BENCH_*.json"))
+    errors = validate_registration() + validate_directory_coverage()
     if not files:
         errors.append("no BENCH_*.json artifacts found to validate")
-    for path in files:
-        errors.extend(validate_file(path))
+    baseline_mode = args.baseline is not None and len(files) == 1
+    if not baseline_mode:
+        # in baseline mode validate_baseline schema-checks both sides itself
+        for path in files:
+            errors.extend(validate_file(path))
+    if args.baseline is not None:
+        if len(files) != 1:
+            errors.append("--baseline compares exactly one artifact; pass one file")
+        else:
+            errors.extend(validate_baseline(files[0], args.baseline, args.tolerance))
     for line in errors:
         print(f"FAIL {line}")
     if not errors:

@@ -75,6 +75,17 @@ per-token logprobs (``SamplingParams.logprobs``/``top_logprobs``) ride the
 decode block as an optional second output (separate compiled variant, same
 sampling RNG, so enabling them never changes the tokens).
 
+**Per-request sampling** lives in the device-resident ``DecodeState``:
+every slot carries its own ``temperature``/``top_p``/``top_k``/``min_p``
+and its request's base PRNG key, applied inside the compiled block by one
+shape-stable masked kernel (sort + cumulative-mass threshold at fixed
+vocab width — heterogeneous batches never recompile; see
+``core/sampling.py``).  Per-token keys are stateless
+(``fold_in(base, position)``), so a slot's sampled stream is independent
+of its neighbours, of K, and of preemption/resume; a request with an
+explicit ``seed`` replays bit-identically across runs.  Engine-level
+``top_p``/``top_k``/``min_p`` knobs are per-request fallbacks.
+
 Cost-structure fidelity to the paper's ablation (Table 4): the media
 pipeline always runs unless the *content* cache hits (so "KV-only" caching
 still pays the encoder, reproducing the paper's 1.2x), and the prefix cache
@@ -103,7 +114,8 @@ from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
 from repro.core.prefix_cache import TextPrefixCache
 from repro.core.request import (FinishReason, PromptTooLongError, Request,
                                 RequestStatus, StreamEvent)
-from repro.core.sampling import sample_tokens, sample_tokens_inner
+from repro.core.sampling import (masked_sample, masked_sample_inner,
+                                 request_base_key, validate_sampling_params)
 from repro.core.scheduler import ContinuousBatchingScheduler, SchedulingPolicy
 from repro.core.streaming import StopSequenceChecker, TokenStreamDecoder
 from repro.models import build_model
@@ -186,6 +198,7 @@ class InferenceEngine:
         cache_max_bytes: int = 512 * 1024 * 1024,
         top_k: int = 0,
         top_p: float = 1.0,
+        min_p: float = 0.0,
         frame_tokens: Optional[int] = None,
         max_media_items: int = 4,
         vision_work_iters: int = 8,
@@ -203,10 +216,16 @@ class InferenceEngine:
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
+        self.seed = seed
         key = jax.random.PRNGKey(seed)
         self.params = params if params is not None else self.model.init(key)
         self.tokenizer = tokenizer or ByteTokenizer()
-        self.top_k, self.top_p = top_k, top_p
+        # engine-level sampling knobs are *per-request fallbacks*: a request
+        # whose SamplingParams leaves top_p/top_k/min_p as None inherits
+        # these; explicit per-request values win (device-resident per-slot
+        # sampler state — see core/sampling.py and DecodeState)
+        validate_sampling_params(top_p, top_k, min_p, None)
+        self.top_k, self.top_p, self.min_p = top_k, top_p, min_p
         self.max_decode_block = max(1, max_decode_block)
         self.max_stop_tokens = max_stop_tokens
         # widest top-logprobs list the decode block can return (static shape
@@ -258,10 +277,13 @@ class InferenceEngine:
                               if enable_content_cache else None)
 
         # per-slot decode state lives on device (one pytree); the host keeps
-        # only the streaming decoders
+        # only the streaming decoders.  Sampler RNG is per-request: seeded
+        # requests derive their base key from the seed alone, unseeded ones
+        # draw from this engine-owned chain at add_request (deterministic
+        # for a fixed engine seed + submission order).
         self.state = init_decode_state(max_batch, self.ctx_len,
-                                       max_stop_tokens,
-                                       jax.random.PRNGKey(seed + 1))
+                                       max_stop_tokens)
+        self._request_rng = jax.random.PRNGKey(seed + 1)
         self._streamers: Dict[int, TokenStreamDecoder] = {}
         # per-request stop-sequence checkers (only for requests that set
         # sampling.stop_sequences); live alongside the streamers
@@ -310,10 +332,15 @@ class InferenceEngine:
 
         ``want_logprobs`` (static) selects a variant that additionally
         returns the sampled token's logprob and the top
-        ``max_top_logprobs`` alternatives per step.  The sampling path (RNG
-        splits included) is identical in both variants, so the emitted
-        tokens never depend on whether logprobs are collected."""
-        model, top_k, top_p = self.model, self.top_k, self.top_p
+        ``max_top_logprobs`` alternatives per step.  The sampling path (the
+        per-slot ``fold_in`` key derivation included) is identical in both
+        variants, so the emitted tokens never depend on whether logprobs
+        are collected.  Sampling parameters are per-slot state
+        (``temps``/``top_p``/``top_k``/``min_p``/``sample_key`` in
+        :class:`DecodeState`), applied by one shape-stable masked kernel —
+        heterogeneous batches never retrace, and a slot's stream depends
+        only on its own key and positions (never on its neighbours)."""
+        model = self.model
         use_ctx = self.media_kind != "none"
         n_top = self.max_top_logprobs
 
@@ -331,9 +358,20 @@ class InferenceEngine:
                 # frozen slots keep their previous cache bit-for-bit
                 cache = select_cache_slots(st.active, st.positions,
                                            out.cache, cache)
-                key, sub = jax.random.split(st.rng)
-                nxt = sample_tokens_inner(out.logits[:, 0], sub, st.temps,
-                                          top_k=top_k, top_p=top_p)
+                # stateless per-token keys: the kernel folds the sampled
+                # token's position into each slot's base key (replay-stable
+                # across preemption/resume; independent of batch
+                # composition; skipped entirely for all-greedy batches).
+                # Frozen slots' sampler fields are neutralised so a
+                # finished/aborted request's stale temperature (or mask
+                # knobs) can't hold later blocks off the greedy / plain
+                # -temperature fast paths
+                nxt = masked_sample_inner(out.logits[:, 0], st.sample_key,
+                                          st.positions + 1,
+                                          st.temps * st.active,
+                                          jnp.where(st.active, st.top_p, 1.0),
+                                          jnp.where(st.active, st.top_k, 0),
+                                          jnp.where(st.active, st.min_p, 0.0))
                 nxt = jnp.where(st.active, nxt, st.last_token)
                 emit = jnp.where(st.active, nxt, -1)          # -1 = frozen
                 alive = st.active.astype(jnp.int32)
@@ -343,8 +381,7 @@ class InferenceEngine:
                 st = st._replace(last_token=nxt,
                                  positions=st.positions + alive,
                                  budget=budget,
-                                 active=st.active & ~finished,
-                                 rng=key)
+                                 active=st.active & ~finished)
                 if want_logprobs:
                     lp = jax.nn.log_softmax(
                         out.logits[:, 0].astype(jnp.float32), axis=-1)
@@ -484,10 +521,32 @@ class InferenceEngine:
     # ------------------------------------------------------------------ #
     # admission pipeline: wave packing → chunk interleave → async overlap
     # ------------------------------------------------------------------ #
-    def _split_rng(self) -> jax.Array:
-        key, sub = jax.random.split(self.state.rng)
-        self.state = self.state._replace(rng=key)
-        return sub
+    def _assign_sample_key(self, req: Request) -> None:
+        """Bind the request's base PRNG key once, at add_request: seeded
+        requests get ``PRNGKey(seed)`` (engine-independent, so replay holds
+        across runs and processes), unseeded ones a split of the engine's
+        request-key chain (deterministic per engine seed + add order).  The
+        key lives on the Request, so preemption/re-admission — snapshot or
+        re-prefill — resumes the exact same per-token key stream."""
+        if req.sample_key is not None:
+            return
+        if req.sampling.seed is not None:
+            req.sample_key = request_base_key(req.sampling.seed)
+        else:
+            self._request_rng, sub = jax.random.split(self._request_rng)
+            req.sample_key = np.asarray(sub)
+
+    def _resolve_sampling(self, req: Request) -> Tuple[float, float, int, float]:
+        """Effective (temperature, top_p, top_k, min_p) for one request:
+        per-request values with the engine knobs as fallbacks — the single
+        place the fallback rule lives, shared by decode-state admission and
+        first-token wave sampling (drift between the two would make a
+        request's first token obey different knobs than its stream)."""
+        sp = req.sampling
+        return (sp.temperature,
+                self.top_p if sp.top_p is None else float(sp.top_p),
+                self.top_k if sp.top_k is None else int(sp.top_k),
+                self.min_p if sp.min_p is None else float(sp.min_p))
 
     def _plan_admissions(self) -> None:
         """Alg.1 lines 3-6, policy-ordered: bind pending requests to free
@@ -876,11 +935,19 @@ class InferenceEngine:
             return []
         jobs = [j for j, _ in completed]
         logits = jnp.stack([lg for _, lg in completed])          # [k, V]
-        sub = self._split_rng()
-        temps = jnp.asarray([j.req.sampling.temperature for j in jobs],
-                            jnp.float32)
-        firsts = np.asarray(sample_tokens(logits, sub, temps,
-                                          top_k=self.top_k, top_p=self.top_p))
+        # first tokens use the same per-request sampler as the decode block:
+        # key = fold_in(base, position-of-the-new-token), parameters resolved
+        # through the same fallback rule — so token 0 and token 1 of a
+        # request are drawn from one consistent stream
+        samp = [self._resolve_sampling(j.req) for j in jobs]
+        firsts = np.asarray(masked_sample(
+            logits,
+            jnp.asarray(np.stack([j.req.sample_key for j in jobs])),
+            jnp.asarray([len(j.tokens) for j in jobs], jnp.int32),
+            jnp.asarray([s[0] for s in samp], jnp.float32),
+            jnp.asarray([s[1] for s in samp], jnp.float32),
+            jnp.asarray([s[2] for s in samp], jnp.int32),
+            jnp.asarray([s[3] for s in samp], jnp.float32)))
         # first-token logprobs for requests that asked: one host-side
         # log-softmax over the staged wave logits (tiny: [k, V])
         lp = (np.asarray(jax.nn.log_softmax(logits, axis=-1))
@@ -960,13 +1027,17 @@ class InferenceEngine:
             stops[i, :len(ids)] = ids
             if ctx_valid is not None:
                 ctx[i] = ctx_valid
+        samp = [self._resolve_sampling(req) for _, req, *_ in rows]
         self.state = admit_decode_state(
             self.state,
             jnp.asarray([slot for slot, *_ in rows], jnp.int32),
             jnp.asarray([last for _, _, last, *_ in rows], jnp.int32),
             jnp.asarray([pos for _, _, _, pos, *_ in rows], jnp.int32),
-            jnp.asarray([req.sampling.temperature for _, req, *_ in rows],
-                        jnp.float32),
+            jnp.asarray([s[0] for s in samp], jnp.float32),
+            jnp.asarray([s[1] for s in samp], jnp.float32),
+            jnp.asarray([s[2] for s in samp], jnp.int32),
+            jnp.asarray([s[3] for s in samp], jnp.float32),
+            jnp.asarray(np.stack([req.sample_key for _, req, *_ in rows])),
             jnp.asarray(ctx),
             jnp.asarray([req.sampling.max_tokens - req.num_generated
                          for _, req, *_ in rows], jnp.int32),
@@ -1141,6 +1212,12 @@ class InferenceEngine:
             raise ValueError(
                 f"top_logprobs={req.sampling.top_logprobs} out of range "
                 f"[0, max_top_logprobs={self.max_top_logprobs}]")
+        # sampler hardening (mirrors the top_logprobs check): out-of-range
+        # top_p/top_k/min_p/seed raise here — i.e. at EngineClient.submit —
+        # before the request can reach a decode slot
+        validate_sampling_params(req.sampling.top_p, req.sampling.top_k,
+                                 req.sampling.min_p, req.sampling.seed)
+        self._assign_sample_key(req)
         req.status = RequestStatus.QUEUED
         self.scheduler.add(req)
 

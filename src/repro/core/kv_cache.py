@@ -10,12 +10,17 @@ indices change, plus one device-side scatter per admission *wave*: an
 admission of k prefills lands in the batch cache with a single compiled
 multi-slot insert instead of k full-cache updates).
 
-:class:`DecodeState` holds everything the decode loop needs per slot —
-last sampled token, absolute position, temperature, media-context liveness,
-remaining token budget, stop-token table, the live/frozen mask, and the
-sampling RNG key — as one device pytree, so the engine's ``decode_block``
-can run K decode+sample iterations under ``lax.scan`` without the host
-re-uploading state between tokens."""
+:class:`DecodeState` holds everything the decode loop needs per slot — last
+sampled token, absolute position, the full per-request sampler state
+(temperature, top-p, top-k, min-p, and the request's base PRNG key), media
+-context liveness, remaining token budget, stop-token table, and the
+live/frozen mask — as one device pytree, so the engine's ``decode_block`` can
+run K decode+sample iterations under ``lax.scan`` without the host
+re-uploading state between tokens.  Sampler RNG is stateless per token
+(``fold_in(sample_key, position)`` — see :mod:`repro.core.sampling`), so the
+state carries base keys, not a split chain.
+"""
+
 from __future__ import annotations
 
 import functools
@@ -41,42 +46,64 @@ class DecodeState(NamedTuple):
     padded with -1 (never a valid token id); ``active`` is the on-device
     finished-mask — a slot freezes when it samples a stop token or exhausts
     its budget, and stays frozen (masked cache writes, no position advance)
-    until the host re-admits into the slot."""
-    last_token: jax.Array        # [B] int32 — input to the next decode step
-    positions: jax.Array         # [B] int32 — absolute position of last_token
-    temps: jax.Array             # [B] float32 — 0 = greedy
-    ctx_valid: jax.Array         # [B, T] bool — media context liveness
-    budget: jax.Array            # [B] int32 — tokens left before LENGTH stop
-    stop_tokens: jax.Array       # [B, S] int32 — per-slot stop ids, -1 pad
-    active: jax.Array            # [B] bool — False: slot frozen/empty
-    rng: jax.Array               # PRNG key, split once per decode step
+    until the host re-admits into the slot.  ``sample_key`` is the request's
+    *base* PRNG key; the decode block folds the token position into it per
+    step, so one slot's stream never depends on its neighbours or on K."""
+
+    last_token: jax.Array  # [B] int32 — input to the next decode step
+    positions: jax.Array  # [B] int32 — absolute position of last_token
+    temps: jax.Array  # [B] float32 — 0 = greedy
+    top_p: jax.Array  # [B] float32 — 1 = off
+    top_k: jax.Array  # [B] int32 — 0 = off
+    min_p: jax.Array  # [B] float32 — 0 = off
+    sample_key: jax.Array  # [B, 2] uint32 — per-request base PRNG key
+    ctx_valid: jax.Array  # [B, T] bool — media context liveness
+    budget: jax.Array  # [B] int32 — tokens left before LENGTH stop
+    stop_tokens: jax.Array  # [B, S] int32 — per-slot stop ids, -1 pad
+    active: jax.Array  # [B] bool — False: slot frozen/empty
 
 
-def init_decode_state(max_batch: int, ctx_len: int, max_stop: int,
-                      rng: jax.Array) -> DecodeState:
+def init_decode_state(max_batch: int, ctx_len: int, max_stop: int) -> DecodeState:
     return DecodeState(
         last_token=jnp.zeros((max_batch,), jnp.int32),
         positions=jnp.zeros((max_batch,), jnp.int32),
         temps=jnp.zeros((max_batch,), jnp.float32),
+        top_p=jnp.ones((max_batch,), jnp.float32),
+        top_k=jnp.zeros((max_batch,), jnp.int32),
+        min_p=jnp.zeros((max_batch,), jnp.float32),
+        sample_key=jnp.zeros((max_batch, 2), jnp.uint32),
         ctx_valid=jnp.zeros((max_batch, max(ctx_len, 1)), bool),
         budget=jnp.zeros((max_batch,), jnp.int32),
         stop_tokens=jnp.full((max_batch, max_stop), -1, jnp.int32),
         active=jnp.zeros((max_batch,), bool),
-        rng=rng,
     )
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def admit_decode_state(state: DecodeState, slots: jax.Array,
-                       last_token: jax.Array, positions: jax.Array,
-                       temps: jax.Array, ctx_valid: jax.Array,
-                       budget: jax.Array, stop_tokens: jax.Array,
-                       active: jax.Array) -> DecodeState:
+def admit_decode_state(
+    state: DecodeState,
+    slots: jax.Array,
+    last_token: jax.Array,
+    positions: jax.Array,
+    temps: jax.Array,
+    top_p: jax.Array,
+    top_k: jax.Array,
+    min_p: jax.Array,
+    sample_key: jax.Array,
+    ctx_valid: jax.Array,
+    budget: jax.Array,
+    stop_tokens: jax.Array,
+    active: jax.Array,
+) -> DecodeState:
     """Scatter one admission wave (k slots) into the decode state."""
     return state._replace(
         last_token=state.last_token.at[slots].set(last_token),
         positions=state.positions.at[slots].set(positions),
         temps=state.temps.at[slots].set(temps),
+        top_p=state.top_p.at[slots].set(top_p),
+        top_k=state.top_k.at[slots].set(top_k),
+        min_p=state.min_p.at[slots].set(min_p),
+        sample_key=state.sample_key.at[slots].set(sample_key),
         ctx_valid=state.ctx_valid.at[slots].set(ctx_valid),
         budget=state.budget.at[slots].set(budget),
         stop_tokens=state.stop_tokens.at[slots].set(stop_tokens),
@@ -84,8 +111,7 @@ def admit_decode_state(state: DecodeState, slots: jax.Array,
     )
 
 
-def select_cache_slots(active: jax.Array, positions: jax.Array,
-                       new_cache, old_cache):
+def select_cache_slots(active: jax.Array, positions: jax.Array, new_cache, old_cache):
     """Per-slot select between an updated and the previous decode cache.
 
     Frozen slots (``active == False``) keep their old cache bit-for-bit, so
@@ -104,32 +130,36 @@ def select_cache_slots(active: jax.Array, positions: jax.Array,
     bidx = jnp.arange(b)
 
     def sel(name: str, n, o, stacked: bool):
-        if n is o:                       # decode pass-through (e.g. xk/xv)
+        if n is o:  # decode pass-through (e.g. xk/xv)
             return n
-        if name in ("k", "v"):           # single ring cell written per slot
+        if name in ("k", "v"):  # single ring cell written per slot
             sc = n.shape[2] if stacked else n.shape[1]
             idx = positions % sc
-            if stacked:                  # [L, B, S, ...]
+            if stacked:  # [L, B, S, ...]
                 mask = active.reshape((1, -1) + (1,) * (n.ndim - 3))
                 cell = jnp.where(mask, n[:, bidx, idx], o[:, bidx, idx])
                 return n.at[:, bidx, idx].set(cell)
             mask = active.reshape((-1,) + (1,) * (n.ndim - 2))
             cell = jnp.where(mask, n[bidx, idx], o[bidx, idx])
             return n.at[bidx, idx].set(cell)
-        if stacked:                      # recurrent state: full slot select
-            return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)),
-                             n, o)
+        if stacked:  # recurrent state: full slot select
+            return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o)
         return jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
 
-    out = {"prefix": [{name: sel(name, nc[name], oc[name], False)
-                       for name in nc}
-                      for nc, oc in zip(new_cache["prefix"],
-                                        old_cache["prefix"])]}
-    out["block"] = ({pos: {name: sel(name, sub[name],
-                                     old_cache["block"][pos][name], True)
-                           for name in sub}
-                     for pos, sub in new_cache["block"].items()}
-                    if old_cache.get("block") is not None else None)
+    out = {
+        "prefix": [
+            {name: sel(name, nc[name], oc[name], False) for name in nc}
+            for nc, oc in zip(new_cache["prefix"], old_cache["prefix"])
+        ]
+    }
+    out["block"] = (
+        {
+            pos: {name: sel(name, sub[name], old_cache["block"][pos][name], True) for name in sub}
+            for pos, sub in new_cache["block"].items()
+        }
+        if old_cache.get("block") is not None
+        else None
+    )
     return out
 
 
@@ -141,21 +171,24 @@ def _insert_slots(batch_cache, single_caches, slots: jax.Array):
     concatenated on the batch axis and written with a single gather/scatter
     per leaf — an admission wave of k prefills costs one cache update, not k.
     """
-    def ins_prefix(full, *ones):                  # batch axis 0
+
+    def ins_prefix(full, *ones):  # batch axis 0
         many = jnp.concatenate([o.astype(full.dtype) for o in ones], axis=0)
         return full.at[slots].set(many)
 
-    def ins_block(full, *ones):                   # [L, B, ...]: batch axis 1
+    def ins_block(full, *ones):  # [L, B, ...]: batch axis 1
         many = jnp.concatenate([o.astype(full.dtype) for o in ones], axis=1)
         return full.at[:, slots].set(many)
 
     out = dict(batch_cache)
-    out["prefix"] = [jax.tree.map(ins_prefix, bp, *[s["prefix"][i]
-                                                    for s in single_caches])
-                     for i, bp in enumerate(batch_cache["prefix"])]
+    out["prefix"] = [
+        jax.tree.map(ins_prefix, bp, *[s["prefix"][i] for s in single_caches])
+        for i, bp in enumerate(batch_cache["prefix"])
+    ]
     if batch_cache.get("block") is not None:
-        out["block"] = jax.tree.map(ins_block, batch_cache["block"],
-                                    *[s["block"] for s in single_caches])
+        out["block"] = jax.tree.map(
+            ins_block, batch_cache["block"], *[s["block"] for s in single_caches]
+        )
     return out
 
 
@@ -167,14 +200,19 @@ def concat_cache_rows(singles: Sequence[Any]):
     passes; the structure mirrors :func:`_insert_slots` (prefix leaves batch
     on axis 0, stacked block leaves on axis 1)."""
     first = singles[0]
-    out = {"prefix": [
-        jax.tree.map(lambda *ones: jnp.concatenate(ones, axis=0),
-                     *[s["prefix"][i] for s in singles])
-        for i in range(len(first["prefix"]))
-    ]}
-    out["block"] = (jax.tree.map(lambda *ones: jnp.concatenate(ones, axis=1),
-                                 *[s["block"] for s in singles])
-                    if first.get("block") is not None else None)
+    out = {
+        "prefix": [
+            jax.tree.map(
+                lambda *ones: jnp.concatenate(ones, axis=0), *[s["prefix"][i] for s in singles]
+            )
+            for i in range(len(first["prefix"]))
+        ]
+    }
+    out["block"] = (
+        jax.tree.map(lambda *ones: jnp.concatenate(ones, axis=1), *[s["block"] for s in singles])
+        if first.get("block") is not None
+        else None
+    )
     return out
 
 
@@ -182,10 +220,12 @@ def slice_cache_row(cache, row: int):
     """Extract one row of a [k, ...] prefill-output cache as a batch=1
     pytree.  Dispatched eagerly (lazy device slices, no host sync) — the
     engine uses it to hand each prefill-wave row back to its chunk job."""
-    out = {"prefix": [jax.tree.map(lambda a: a[row:row + 1], bp)
-                      for bp in cache["prefix"]]}
-    out["block"] = (jax.tree.map(lambda a: a[:, row:row + 1], cache["block"])
-                    if cache.get("block") is not None else None)
+    out = {"prefix": [jax.tree.map(lambda a: a[row : row + 1], bp) for bp in cache["prefix"]]}
+    out["block"] = (
+        jax.tree.map(lambda a: a[:, row : row + 1], cache["block"])
+        if cache.get("block") is not None
+        else None
+    )
     return out
 
 
@@ -197,24 +237,32 @@ def _read_slot(batch_cache, *, slot: int):
     def rd_block(full):
         return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1)
 
-    out = {"prefix": [jax.tree.map(rd_prefix, bp)
-                      for bp in batch_cache["prefix"]]}
-    out["block"] = (jax.tree.map(rd_block, batch_cache["block"])
-                    if batch_cache.get("block") is not None else None)
+    out = {"prefix": [jax.tree.map(rd_prefix, bp) for bp in batch_cache["prefix"]]}
+    out["block"] = (
+        jax.tree.map(rd_block, batch_cache["block"])
+        if batch_cache.get("block") is not None
+        else None
+    )
     return out
 
 
 class SlotKVPool:
     """Fixed-capacity decode cache with slot allocation."""
 
-    def __init__(self, cfg: ModelConfig, max_batch: int, cache_len: int, *,
-                 ctx_len: int = 0, dtype=None):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        max_batch: int,
+        cache_len: int,
+        *,
+        ctx_len: int = 0,
+        dtype=None,
+    ):
         self.cfg = cfg
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.ctx_len = ctx_len
-        self.cache = init_cache(cfg, max_batch, cache_len, ctx_len=ctx_len,
-                                dtype=dtype)
+        self.cache = init_cache(cfg, max_batch, cache_len, ctx_len=ctx_len, dtype=dtype)
         self._free: List[int] = list(range(max_batch))[::-1]
         self._used: Set[int] = set()
 
@@ -245,16 +293,22 @@ class SlotKVPool:
         scatter (retraces per distinct wave size only)."""
         if not slots:
             return
-        self.cache = _insert_slots(self.cache, tuple(single_caches),
-                                   jnp.asarray(list(slots), jnp.int32))
+        self.cache = _insert_slots(
+            self.cache, tuple(single_caches), jnp.asarray(list(slots), jnp.int32)
+        )
 
     def read(self, slot: int):
         """Extract a slot's cache as a batch=1 pytree (for prefix caching)."""
         return _read_slot(self.cache, slot=slot)
 
     def single_cache_zeros(self):
-        return init_cache(self.cfg, 1, self.cache_len, ctx_len=self.ctx_len,
-                          dtype=None if self.cfg.dtype is None else self.cfg.dtype)
+        return init_cache(
+            self.cfg,
+            1,
+            self.cache_len,
+            ctx_len=self.ctx_len,
+            dtype=None if self.cfg.dtype is None else self.cfg.dtype,
+        )
 
     @property
     def nbytes(self) -> int:

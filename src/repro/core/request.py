@@ -1,5 +1,6 @@
 """Request / sequence-state types shared by the scheduler, engine and the
 request-lifecycle client (:mod:`repro.serving.client`)."""
+
 from __future__ import annotations
 
 import itertools
@@ -12,8 +13,8 @@ _req_counter = itertools.count()
 
 
 class FinishReason(str, Enum):
-    STOP = "stop"            # EOS / stop token / stop sequence
-    LENGTH = "length"        # max_tokens reached
+    STOP = "stop"  # EOS / stop token / stop sequence
+    LENGTH = "length"  # max_tokens reached
     ABORT = "abort"
 
 
@@ -24,11 +25,11 @@ class RequestStatus(str, Enum):
     DECODING -> QUEUED on preemption.  ``abort()`` is legal from any state
     and terminal; aborting a FINISHED request is a no-op."""
 
-    QUEUED = "queued"            # pending admission (incl. speculative jobs)
-    PREFILLING = "prefilling"    # slot bound, prompt chunks in flight
-    DECODING = "decoding"        # live decode slot, tokens streaming
-    FINISHED = "finished"        # stop / length — terminal
-    ABORTED = "aborted"          # cancelled — terminal
+    QUEUED = "queued"  # pending admission (incl. speculative jobs)
+    PREFILLING = "prefilling"  # slot bound, prompt chunks in flight
+    DECODING = "decoding"  # live decode slot, tokens streaming
+    FINISHED = "finished"  # stop / length — terminal
+    ABORTED = "aborted"  # cancelled — terminal
 
 
 class PromptTooLongError(ValueError):
@@ -38,9 +39,22 @@ class PromptTooLongError(ValueError):
 
 @dataclass
 class SamplingParams:
-    temperature: float = 0.0          # 0 = greedy
-    top_k: int = 0                    # 0 = off
-    top_p: float = 1.0                # 1 = off
+    """Per-request sampling parameters.
+
+    ``top_p`` / ``top_k`` / ``min_p`` default to ``None`` = "use the engine's
+    default" (the engine knobs became per-request fallbacks when sampler state
+    moved into the device-resident :class:`~repro.core.kv_cache.DecodeState`);
+    explicit values are validated at ``engine.add_request`` (hence at
+    ``EngineClient.submit``): ``top_p`` ∈ (0, 1], ``top_k`` >= 0 (0 = off),
+    ``min_p`` ∈ [0, 1), ``seed`` >= 0.  A ``seed`` pins the request's PRNG key
+    stream (``fold_in(PRNGKey(seed), position)`` per token — see
+    :mod:`repro.core.sampling`), so seeded requests replay identically across
+    runs, across batch compositions, and across preemption/resume."""
+
+    temperature: float = 0.0  # 0 = greedy
+    top_k: Optional[int] = None  # None = engine default; 0 = off
+    top_p: Optional[float] = None  # None = engine default; 1 = off
+    min_p: Optional[float] = None  # None = engine default; 0 = off
     max_tokens: int = 64
     stop_token_ids: tuple = ()
     # stop *sequences* (strings) are enforced host-side at block emit:
@@ -85,18 +99,23 @@ class Request:
     # per-token logprob data, populated only when sampling.logprobs: one
     # (logprob, top_logprobs) pair per emitted token, where top_logprobs is
     # a list of (token_id, logprob) pairs (len == sampling.top_logprobs)
-    output_logprobs: List[Tuple[float, List[Tuple[int, float]]]] = \
-        field(default_factory=list)
+    output_logprobs: List[Tuple[float, List[Tuple[int, float]]]] = field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     prefill_time: Optional[float] = None
-    cached_prefix_len: int = 0        # tokens served from the prefix cache
+    cached_prefix_len: int = 0  # tokens served from the prefix cache
     vision_cache_hits: int = 0
     vision_cache_misses: int = 0
     # media-set digest computed once during admission; reused at retire for
     # the prefix-cache salt (avoids re-decoding + re-hashing every frame)
     media_set_digest: Optional[str] = None
+    # per-request base PRNG key ([2] uint32), assigned once at add_request:
+    # PRNGKey(sampling.seed) for seeded requests, a split of the engine's
+    # request-key chain otherwise.  Living on the request (not the slot), it
+    # survives preemption/re-admission, so the stateless per-token fold_in
+    # reproduces the exact key stream on resume.
+    sample_key: Optional[Any] = None
     # times this request was evicted from a decode slot by a more urgent
     # request (scheduler preemption); bounds re-eviction churn
     preempt_count: int = 0
@@ -144,6 +163,7 @@ class Request:
 @dataclass
 class StreamEvent:
     """One emission from the engine: a freshly decoded token (or final)."""
+
     request_id: int
     token: Optional[int]
     text: str = ""
@@ -162,7 +182,10 @@ class GenerationRequest:
     One ``GenerationRequest`` maps to ``n`` engine :class:`Request`\\ s (the
     OpenAI ``n`` fan-out: one handle, n decode slots, prompt prefills shared
     through the prefix cache).  ``prompt`` is either raw text (encoded with
-    the engine's tokenizer at submit time) or pre-tokenised ids."""
+    the engine's tokenizer at submit time) or pre-tokenised ids.  All ``n``
+    choices share one :class:`SamplingParams`; with an explicit ``seed`` the
+    choices are therefore identical (seeded replay is a per-request property,
+    like greedy fan-out) — omit ``seed`` for per-choice randomness."""
 
     prompt: Union[str, List[int]]
     sampling: SamplingParams = field(default_factory=SamplingParams)
@@ -178,17 +201,19 @@ class GenerationRequest:
         """Expand into ``n`` engine requests (choice index in metadata)."""
         if self.n < 1:
             raise ValueError(f"n must be >= 1, got {self.n}")
-        tokens = (tokenizer.encode(self.prompt)
-                  if isinstance(self.prompt, str) else list(self.prompt))
+        tokens = self.prompt if not isinstance(self.prompt, str) else tokenizer.encode(self.prompt)
         out = []
         for i in range(self.n):
-            out.append(Request(
-                prompt_tokens=list(tokens),
-                sampling=self.sampling,
-                images=list(self.images),
-                video_frames=list(self.video_frames),
-                audio=self.audio,
-                priority=self.priority,
-                deadline_ms=self.deadline_ms,
-                metadata={**self.metadata, "choice_index": i}))
+            out.append(
+                Request(
+                    prompt_tokens=list(tokens),
+                    sampling=self.sampling,
+                    images=list(self.images),
+                    video_frames=list(self.video_frames),
+                    audio=self.audio,
+                    priority=self.priority,
+                    deadline_ms=self.deadline_ms,
+                    metadata={**self.metadata, "choice_index": i},
+                )
+            )
         return out

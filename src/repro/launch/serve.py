@@ -28,6 +28,15 @@ def main() -> None:
     ap.add_argument("--no-content-cache", action="store_true")
     ap.add_argument("--max-decode-block", type=int, default=8,
                     help="decode tokens per host sync (1 = per-token loop)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="default nucleus mass for requests that omit "
+                         "'top_p' (per-request values win; 1 = off)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="default top-k cutoff for requests that omit "
+                         "'top_k' (per-request values win; 0 = off)")
+    ap.add_argument("--min-p", type=float, default=0.0,
+                    help="default min-p mass floor for requests that omit "
+                         "'min_p' (per-request values win; 0 = off)")
     ap.add_argument("--prefill-chunk", type=int, default=512,
                     help="prompt tokens prefilled per engine step "
                          "(0 = monolithic prefill; smaller = flatter TTFT "
@@ -65,6 +74,7 @@ def main() -> None:
         seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
         enable_content_cache=not args.no_content_cache,
         max_decode_block=args.max_decode_block,
+        top_p=args.top_p, top_k=args.top_k, min_p=args.min_p,
         prefill_chunk=args.prefill_chunk,
         max_prefill_buckets=args.max_prefill_buckets,
         sched_policy=args.sched_policy,

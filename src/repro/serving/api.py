@@ -26,12 +26,16 @@ from a dropped SSE connection propagates into true engine cancellation).
 """
 from __future__ import annotations
 
+import hashlib
 import time
 import uuid
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
+import jax
+
 from repro.core.engine import InferenceEngine
 from repro.core.request import GenerationRequest, PromptTooLongError, SamplingParams
+from repro.core.sampling import SamplingParamError, validate_sampling_params
 from repro.serving.client import EngineClient, FinishEvent, RequestHandle, TokenEvent
 
 #: OpenAI caps `stop` at 4 sequences; we mirror it so error behaviour matches
@@ -81,6 +85,14 @@ def _as_float(body: Dict[str, Any], key: str, default: float) -> float:
     if isinstance(val, bool) or not isinstance(val, (int, float)):
         raise OpenAIError(f"'{key}' must be a number", param=key)
     return float(val)
+
+
+def _opt_int(body: Dict[str, Any], key: str) -> Optional[int]:
+    return None if body.get(key) is None else _as_int(body, key, 0)
+
+
+def _opt_float(body: Dict[str, Any], key: str) -> Optional[float]:
+    return None if body.get(key) is None else _as_float(body, key, 0.0)
 
 
 def _parse_stop(body: Dict[str, Any]) -> Tuple[str, ...]:
@@ -158,6 +170,28 @@ class OpenAIServer:
         self.client = client
         self.engine = client.engine
         self.model_name = model_name
+        # OpenAI-style determinism echo: a request carrying a `seed` replays
+        # bit-identically as long as this fingerprint is unchanged — it
+        # hashes everything seeded replay depends on (model identity +
+        # weight seed + the compiled decode shape + the jax build + the
+        # engine-level sampler fallbacks a request may inherit).
+        eng = self.engine
+        ident = ":".join(
+            str(x)
+            for x in (
+                model_name,
+                eng.cfg.name,
+                eng.seed,
+                eng.scheduler.max_batch,
+                eng.pool.cache_len,
+                eng.top_p,
+                eng.top_k,
+                eng.min_p,
+                jax.__version__,
+                jax.default_backend(),
+            )
+        )
+        self.system_fingerprint = "fp_" + hashlib.sha256(ident.encode()).hexdigest()[:10]
 
     # ------------------------------------------------------------------ #
     # request decoding
@@ -181,12 +215,30 @@ class OpenAIServer:
         n = _as_int(body, "n", 1)
         if not 1 <= n <= MAX_N:
             raise OpenAIError(f"'n' must be between 1 and {MAX_N}", param="n")
+        # per-request sampler params (None = engine default): OpenAI `top_p`
+        # and `seed`, plus the `top_k`/`min_p` extensions.  Types are checked
+        # here; the range bounds live in one place
+        # (core/sampling.validate_sampling_params — also raised again at
+        # EngineClient.submit, mirroring the top_logprobs hardening) and map
+        # into the structured envelope with the offending param named.
+        top_p = _opt_float(body, "top_p")
+        top_k = _opt_int(body, "top_k")
+        min_p = _opt_float(body, "min_p")
+        seed = _opt_int(body, "seed")
+        try:
+            validate_sampling_params(top_p, top_k, min_p, seed)
+        except SamplingParamError as e:
+            raise OpenAIError(str(e), param=e.param) from e
         sampling = SamplingParams(
             temperature=_as_float(body, "temperature", 0.0),
+            top_p=top_p,
+            top_k=top_k,
+            min_p=min_p,
             max_tokens=_as_int(body, "max_tokens", 64),
             stop_sequences=_parse_stop(body),
             logprobs=logprobs,
             top_logprobs=top_logprobs,
+            seed=seed,
         )
         if sampling.max_tokens < 1:
             raise OpenAIError("'max_tokens' must be >= 1", param="max_tokens")
@@ -313,6 +365,7 @@ class OpenAIServer:
             "object": "chat.completion",
             "created": int(time.time()),
             "model": self.model_name,
+            "system_fingerprint": self.system_fingerprint,
             "choices": choices,
             "usage": result.usage(),
         }
@@ -332,6 +385,7 @@ class OpenAIServer:
                 "object": "chat.completion.chunk",
                 "created": created,
                 "model": self.model_name,
+                "system_fingerprint": self.system_fingerprint,
                 "choices": [
                     {
                         "index": index,
@@ -447,6 +501,7 @@ class OpenAIServer:
             "object": "text_completion",
             "created": int(time.time()),
             "model": self.model_name,
+            "system_fingerprint": self.system_fingerprint,
             "choices": choices,
             "usage": usage,
         }
@@ -464,6 +519,7 @@ class OpenAIServer:
                 "object": "text_completion",
                 "created": created,
                 "model": self.model_name,
+                "system_fingerprint": self.system_fingerprint,
                 "choices": [
                     {
                         "index": index,

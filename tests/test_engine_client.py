@@ -221,6 +221,27 @@ def test_abort_preempted_request_releases_snapshot(cfg):
 # --------------------------------------------------------------------------- #
 # abort after finish: no-op
 # --------------------------------------------------------------------------- #
+def test_submit_rejects_out_of_range_sampler_params(cfg):
+    """Sampler hardening at the client boundary (mirrors the top_logprobs
+    PR 4 hardening): out-of-range top_p/top_k/min_p/seed raise ValueError
+    at submit, before anything is enqueued, and leak no engine state."""
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=128)
+    with EngineClient(eng) as client:
+        for bad in (dict(top_p=0.0), dict(top_p=2.0), dict(top_k=-1),
+                    dict(min_p=1.0), dict(seed=-1)):
+            with pytest.raises(ValueError):
+                client.submit(GenerationRequest(
+                    prompt="x",
+                    sampling=SamplingParams(max_tokens=2, **bad)))
+        assert not eng.scheduler.has_work
+        # a valid seeded nucleus request still flows end to end
+        ok = client.submit(GenerationRequest(
+            prompt="x", sampling=SamplingParams(max_tokens=3,
+                                                temperature=0.8, top_p=0.9,
+                                                seed=11)))
+        assert len(ok.result(timeout=120).choices[0].tokens) == 3
+
+
 def test_abort_after_finish_is_noop(cfg):
     eng = InferenceEngine(cfg, max_batch=1, cache_len=128)
     done = _req("quick", max_tokens=2)

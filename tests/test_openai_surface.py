@@ -180,6 +180,54 @@ def test_usage_chunk_matches_blocking_usage(server):
     assert all(c["usage"] is None for c in chunks[:-1])
 
 
+def test_out_of_range_sampler_params_rejected(server):
+    """Codec-side sampler hardening: every out-of-range top_p/top_k/min_p/
+    seed gets the structured envelope with the offending param named."""
+    cases = [({"top_p": 0.0}, "top_p"), ({"top_p": 1.01}, "top_p"),
+             ({"top_k": -1}, "top_k"), ({"min_p": 1.0}, "min_p"),
+             ({"min_p": -0.5}, "min_p"), ({"seed": -1}, "seed"),
+             ({"seed": 1.5}, "seed"), ({"top_k": "a"}, "top_k")]
+    for extra, param in cases:
+        status, body = _request_json(server, {
+            "method": "POST", "path": "/v1/chat/completions",
+            "request": {"messages": [{"role": "user", "content": "x"}],
+                        "max_tokens": 2, **extra},
+        })
+        assert status == 400, (extra, body)
+        assert body["error"]["param"] == param
+
+
+def test_seeded_requests_replay_with_stable_fingerprint(server):
+    """`seed` + unchanged `system_fingerprint` ⇒ identical completions —
+    the OpenAI determinism contract, backed by per-request device-resident
+    PRNG key streams."""
+    req = {"messages": [{"role": "user", "content": "determinism"}],
+           "max_tokens": 8, "temperature": 1.0, "top_p": 0.8, "seed": 123,
+           "logprobs": True}
+
+    def tokens(body):
+        # toy-vocab ids above 255 decode to empty text (and empty bytes), so
+        # compare the per-token logprob floats — a bit-exact fingerprint of
+        # the sampled id sequence
+        return [e["logprob"]
+                for e in body["choices"][0]["logprobs"]["content"]]
+
+    _, a = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    _, b = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    assert a["system_fingerprint"] == b["system_fingerprint"]
+    assert a["system_fingerprint"].startswith("fp_")
+    assert tokens(a) == tokens(b)
+    # an unseeded stochastic request is NOT replayed (fresh per-request key)
+    del req["seed"]
+    _, c = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    _, d = _request_json(server, {
+        "method": "POST", "path": "/v1/chat/completions", "request": req})
+    assert tokens(c) != tokens(d)
+
+
 def test_negative_top_logprobs_rejected(server):
     status, body = _request_json(server, {
         "method": "POST", "path": "/v1/chat/completions",

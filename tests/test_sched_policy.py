@@ -209,6 +209,35 @@ def test_engine_side_snapshots_bounded_by_pool_size(cfg):
     assert eng.scheduler.stats.resumed == 1
 
 
+def test_seeded_sampling_replays_across_preemption(cfg):
+    """A *stochastic* seeded request evicted mid-decode resumes its exact
+    sampled stream: the per-token key is fold_in(base, position), so the
+    restored snapshot (positions included) reproduces the draw chain — no
+    split-chain state to lose with the slot."""
+    def scenario(policy, preemption):
+        eng = InferenceEngine(cfg, max_batch=1, cache_len=256,
+                              sched_policy=policy, preemption=preemption)
+        batch = Request(prompt_tokens=TOK.encode("long seeded batch " * 2),
+                        sampling=SamplingParams(max_tokens=24,
+                                                temperature=0.9, top_p=0.9,
+                                                seed=1234))
+        eng.add_request(batch)
+        for _ in range(4):
+            eng.step()
+        urgent = _req("urgent interactive!", max_tokens=6, deadline_ms=1.0)
+        eng.add_request(urgent)
+        eng.run()
+        return batch, urgent, eng
+
+    b1, u1, _ = scenario("fifo", False)
+    b2, u2, eng = scenario("edf", True)
+    assert eng.scheduler.stats.preemptions >= 1
+    assert eng.scheduler.stats.resumed >= 1
+    assert len(set(b1.output_tokens)) > 1      # actually stochastic
+    assert b1.output_tokens == b2.output_tokens
+    assert u1.output_tokens == u2.output_tokens
+
+
 def test_fifo_never_preempts_even_when_enabled(cfg):
     b, u, eng = _preempt_scenario(cfg, policy="fifo", preemption=True,
                                   prefix_cache=True)
@@ -421,3 +450,74 @@ def test_validate_rejects_malformed_payloads():
     assert validate.validate_registration() == []
     declared = validate.declared_artifacts()
     assert {"decode_loop", "prefill_overlap", "sched_policy"} <= set(declared)
+
+
+def test_validate_directory_coverage_is_total():
+    """Every benchmarks/*.py is infra, a registered BENCH artifact, or an
+    explicitly-reasoned exemption — the validation step covers the whole
+    directory, so a new untracked benchmark fails CI."""
+    from pathlib import Path
+
+    from benchmarks import validate
+
+    assert validate.validate_directory_coverage() == []
+    modules = {p.stem for p in Path(validate.__file__).parent.glob("*.py")}
+    covered = (validate.INFRA_MODULES | set(validate.EXEMPT)
+               | set(validate.declared_artifacts()))
+    assert modules <= covered
+    assert all(reason for reason in validate.EXEMPT.values())
+
+
+def test_validate_baseline_throughput_gate(tmp_path):
+    """--baseline mode: >tolerance aggregate-throughput regression fails,
+    within-tolerance and speedups pass, mismatched variants fail."""
+    from benchmarks import validate
+
+    def payload(scale, variants=("a", "b")):
+        return {"name": "x", "schema_version": 1,
+                "machine": {"platform": "p", "python": "3", "jax": "j",
+                            "backend": "cpu", "device": "cpu"},
+                "variants": list(variants),
+                "rows": [{"variant": v, "tok_s": t * scale}
+                         for v, t in zip(variants, (100.0, 400.0))]}
+
+    def write(name, **kw):
+        p = tmp_path / name
+        p.write_text(json.dumps(payload(**kw)))
+        return p
+
+    base = write("base.json", scale=1.0)
+    assert validate.validate_baseline(write("same.json", scale=1.0),
+                                      base, 0.15) == []
+    assert validate.validate_baseline(write("fast.json", scale=1.3),
+                                      base, 0.15) == []
+    assert validate.validate_baseline(write("ok.json", scale=0.90),
+                                      base, 0.15) == []
+    errs = validate.validate_baseline(write("slow.json", scale=0.80),
+                                      base, 0.15)
+    assert errs and "regression" in errs[0]
+    errs = validate.validate_baseline(
+        write("drift.json", scale=1.0, variants=("a", "c")), base, 0.15)
+    assert errs and "variant sets differ" in errs[0]
+    # a dropped or collapsed cell must fail, never be silently excluded
+    dropped = payload(1.0)
+    dropped["rows"] = dropped["rows"][:1]
+    p = tmp_path / "dropped.json"
+    p.write_text(json.dumps(dropped))
+    errs = validate.validate_baseline(p, base, 0.15)
+    assert errs and "row counts differ" in errs[0]
+    zeroed = payload(1.0)
+    zeroed["rows"][1]["tok_s"] = 0.0
+    p = tmp_path / "zeroed.json"
+    p.write_text(json.dumps(zeroed))
+    errs = validate.validate_baseline(p, base, 0.15)
+    assert errs and "positive numeric 'tok_s'" in errs[0]
+    # a regression measured on different hardware (gate keys mismatch)
+    # warns instead of failing — the gate arms once baselines match
+    other = payload(0.5)
+    other["machine"]["cpu_count"] = 64
+    p = tmp_path / "other_host.json"
+    p.write_text(json.dumps(other))
+    assert validate.validate_baseline(p, base, 0.15) == []
+    agg = validate.aggregate_throughput(payload(1.0))
+    assert abs(agg - 200.0) < 1e-9        # geomean of 100 and 400
