@@ -1,0 +1,463 @@
+"""Trace-driven overload benchmark: goodput, shed rate, timeout rate, and
+per-tenant fairness under bursty multi-tenant load (PR 6 acceptance gate).
+
+The serving comparisons behind the paper's continuous-batching headline
+all assume offered load <= capacity.  Production traffic does not: arrivals
+are bursty (on/off-modulated Poisson), tenants are skewed (one bulk client
+submits 3x everyone else), lengths are mixed, and clients hang up
+mid-decode.  This suite replays one such *deterministic* trace against the
+serving stack (EngineClient + AdmissionController, serving/client.py +
+core/admission.py) at calibrated offered loads:
+
+  * ``noadmit_1x``    — no admission control, offered load ~= capacity:
+                        the PR 4 client, the goodput baseline
+  * ``admit_1x``      — admission control on at the same load: the
+                        overhead check (goodput should be within ~10% of
+                        the baseline — the controller must not tax the
+                        un-overloaded path)
+  * ``admit_2x``      — 2x capacity: the overload case.  Goodput should
+                        *hold* (not collapse), excess arrivals get typed
+                        429/503/timeout outcomes (never hangs), and
+                        weighted-fair release keeps Jain's fairness index
+                        over per-tenant goodput high even though one
+                        tenant submits 60% of the traffic
+  * ``admit_2x_chaos``— the same overload with deterministic fault
+                        injection (core/faults.py) at the engine's
+                        prefill/decode/codec/pool sites: the engine loop
+                        must survive, survivors finish normally, and the
+                        typed-outcome account still balances
+
+Capacity is calibrated on the same engine/workload mix right before the
+variants run (back-to-back saturated batch, requests/s), so offered-load
+multiples track the host instead of a hardcoded rate.
+
+Metrics per variant: goodput (completion tokens/s of *successfully
+finished* requests — the gate metric, emitted as ``tok_s``), shed / timeout
+/ abort / failure counts and rates, interactive TTFT p50/p95, Jain's index
+over per-tenant goodput normalised by the weighted max-min fair allocation
+given each tenant's demand (``_fair_alloc``), and the full typed-outcome
+account (every offered request ends as exactly one of finished / shed /
+timeout / aborted / failed — asserted, so a silent hang fails the bench).
+
+Emits ``BENCH_load_trace.json`` (shared schema — benchmarks/validate.py).
+
+  PYTHONPATH=src python -m benchmarks.load_trace [--smoke]
+  PYTHONPATH=src python -m benchmarks.run --only load_trace
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import TOK, bench_result, emit
+from benchmarks.decode_loop import micro_model
+from repro.core.admission import (AdmissionController, AdmissionError,
+                                  TenantConfig, jain_index)
+from repro.core.engine import InferenceEngine
+from repro.core.faults import FaultInjector
+from repro.core.request import Request, SamplingParams
+from repro.serving.client import EngineClient
+
+MAX_BATCH = 8
+CACHE_LEN = 256
+PREFILL_CHUNK = 64
+DURATION_S = 8.0
+CAL_REQUESTS = 48          # saturated back-to-back batch for calibration
+ABORT_FRAC = 0.08          # clients that hang up 50-150ms after submitting
+INTER_PROMPT, INTER_TOKENS = 24, 6
+BATCH_PROMPT, BATCH_TOKENS = 96, 20
+OUT = Path("BENCH_load_trace.json")
+
+#: tenant -> (fair-share weight, arrival probability).  "bulk" submits 60%
+#: of the traffic at weight 1 — the skew the fair queue must absorb.
+TENANTS: Dict[str, Tuple[float, float]] = {
+    "free": (1.0, 0.2),
+    "pro": (2.0, 0.2),
+    "bulk": (1.0, 0.6),
+}
+
+#: on/off burst modulation of the Poisson arrivals; factors are chosen so
+#: the time-weighted mean rate stays at the calibrated base rate
+ON_MEAN_S, OFF_MEAN_S = 0.6, 0.3
+ON_FACTOR, OFF_FACTOR = 1.4, 0.2
+
+#: chaos variant fault rates (deterministic, seeded — core/faults.py)
+CHAOS_RATES = {"prefill": 0.05, "decode": 0.05, "codec": 0.02, "pool": 0.05}
+
+VARIANTS = [
+    # (tag, offered-load multiple, admission?, chaos?)
+    ("noadmit_1x", 1.0, False, False),
+    ("admit_1x", 1.0, True, False),
+    ("admit_2x", 2.0, True, False),
+    ("admit_2x_chaos", 2.0, True, True),
+]
+
+SMOKE = dict(duration_s=2.0, cal_requests=24, inter_prompt=16, inter_tokens=4,
+             batch_prompt=48, batch_tokens=8, cache_len=128, prefill_chunk=32)
+
+
+@dataclass
+class TraceItem:
+    """One arrival in the deterministic trace (times relative to t=0)."""
+
+    t: float
+    tenant: str
+    interactive: bool
+    abort_after: Optional[float]    # seconds after submit, None = stays
+    req: Optional[Request] = None   # bound at submit time
+
+
+def build_trace(seed: int, duration_s: float, rate_rps: float) -> List[TraceItem]:
+    """Bursty multi-tenant arrival trace: on/off-modulated Poisson at a
+    time-weighted mean of ``rate_rps``, tenant-skewed per TENANTS, 50/50
+    interactive/batch mix, ABORT_FRAC of arrivals hanging up mid-flight."""
+    rng = np.random.default_rng(seed)
+    names = list(TENANTS)
+    probs = np.array([TENANTS[n][1] for n in names])
+    items: List[TraceItem] = []
+    t, phase_end, on = 0.0, 0.0, False
+    while t < duration_s:
+        if t >= phase_end:
+            on = not on
+            phase_end = t + rng.exponential(ON_MEAN_S if on else OFF_MEAN_S)
+        rate = rate_rps * (ON_FACTOR if on else OFF_FACTOR)
+        t += rng.exponential(1.0 / max(rate, 1e-3))
+        if t >= duration_s:
+            break
+        items.append(TraceItem(
+            t=t,
+            tenant=names[rng.choice(len(names), p=probs)],
+            interactive=bool(rng.random() < 0.5),
+            abort_after=(0.05 + 0.1 * rng.random()
+                         if rng.random() < ABORT_FRAC else None),
+        ))
+    return items
+
+
+def _make_request(item: TraceItem, i: int, knobs: dict) -> Request:
+    if item.interactive:
+        plen, toks = knobs["inter_prompt"], knobs["inter_tokens"]
+        body = f"chat {i} " + "hi " * plen
+        return Request(prompt_tokens=TOK.encode(body)[:plen],
+                       sampling=SamplingParams(max_tokens=toks),
+                       priority=5, deadline_ms=500.0, tenant=item.tenant)
+    plen, toks = knobs["batch_prompt"], knobs["batch_tokens"]
+    body = f"bulk {i} " + "payload " * plen
+    return Request(prompt_tokens=TOK.encode(body)[:plen],
+                   sampling=SamplingParams(max_tokens=toks),
+                   tenant=item.tenant)
+
+
+def _mixed_requests(n: int, knobs: dict) -> List[Request]:
+    items = [TraceItem(t=0.0, tenant="free", interactive=(i % 2 == 0),
+                       abort_after=None) for i in range(n)]
+    return [_make_request(it, i, knobs) for i, it in enumerate(items)]
+
+
+def calibrate_rps(engine: InferenceEngine, knobs: dict) -> float:
+    """Requests/s the serving stack sustains on the trace's workload mix
+    when saturated (all arrivals at t=0, continuous batching keeps the
+    slots full) — the 1x offered load.  Calibrating through the client
+    rather than ``engine.generate`` matters: the sync path waits for the
+    whole batch's tail, underestimating capacity by 2x+."""
+    client = EngineClient(engine)
+    reqs = _mixed_requests(knobs["cal_requests"], knobs)
+    t0 = time.monotonic()
+    handles = [client.submit(r) for r in reqs]
+    for h in handles:
+        h.result(timeout=60.0)
+    wall = time.monotonic() - t0
+    client.stop()
+    return len(reqs) / wall
+
+
+def _probe_once(engine: InferenceEngine, rate: float, knobs: dict) -> float:
+    """Served requests/s inside the arrival window of one short trace
+    replay at offered ``rate`` — the real submit loop, which shares the
+    interpreter with the engine thread (the closed-loop calibration
+    excludes it and overestimates).  Arrivals are uniformly spaced, not
+    bursty: a 1.5s window of on/off-modulated arrivals has wildly variable
+    *realised* rate, and capacity estimated from it swings 2-3x run to
+    run."""
+    probe_s = min(1.5, knobs["duration_s"] / 2)
+    n = max(1, int(rate * probe_s))
+    names = list(TENANTS)
+    trace = [TraceItem(t=(i + 0.5) * probe_s / n, tenant=names[i % len(names)],
+                       interactive=(i % 2 == 0), abort_after=None)
+             for i in range(n)]
+    client = EngineClient(engine)
+    t0 = time.monotonic()
+    handles = []
+    for i, item in enumerate(trace):
+        delay = t0 + item.t - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        req = _make_request(item, i, knobs)
+        item.req = req
+        handles.append((client.submit(req), req))
+    window = time.monotonic() - t0
+    # count only arrivals from the first 75% of the window (each then has
+    # >= 0.25*window to finish): the raw count penalises late arrivals
+    # that no capacity could have completed, biasing the estimate low
+    cutoff = 0.75 * window
+    served = sum(1 for it in trace[:len(handles)]
+                 if it.t <= cutoff and it.req is not None
+                 and it.req.is_finished)
+    for h, _ in handles:
+        if not h.finished:
+            h.abort(wait=True, timeout=10.0)
+    client.stop()
+    return max(served, 1) / cutoff
+
+
+def probe_capacity(engine: InferenceEngine, rate_hint: float,
+                   knobs: dict) -> float:
+    """Highest sustainable service rate: geometric sweep of trace replays
+    from well below the closed-loop hint upward until offered load visibly
+    outruns service (past that point measured throughput *collapses* under
+    unbounded queueing — planning costs grow with the backlog — which is
+    the very failure mode the admission controller exists to prevent, and
+    exactly why a single saturated probe cannot measure capacity)."""
+    rate = max(4.0, rate_hint / 8)
+    best = 0.0
+    while rate <= rate_hint * 1.01:
+        served = _probe_once(engine, rate, knobs)
+        best = max(best, served)
+        if served < 0.9 * rate:
+            break
+        rate *= 1.6
+    # the probe's 25% completion slack lets arrivals finish while backlog
+    # grows, so the sweep can overshoot true capacity by up to 4/3; derate
+    # so "1x" is genuinely sustainable under the bursty main trace
+    return 0.7 * best
+
+
+def _fair_alloc(total: float, demands: Dict[str, float],
+                weights: Dict[str, float]) -> Dict[str, float]:
+    """Weighted max-min fair (water-filling) allocation of ``total``
+    service among tenants with demand caps: each round splits the
+    remaining service by weight, tenants whose leftover demand fits their
+    share are frozen at their demand, and the rest iterate.  This is the
+    reference the fairness gate compares achieved goodput against — a
+    demand-limited tenant served in full is *not* a fairness victim, and a
+    backlogged tenant's ideal is its weight share of what remains."""
+    alloc = {n: 0.0 for n in demands}
+    active = {n for n in demands if demands[n] > 0}
+    remaining = min(total, sum(demands.values()))
+    while active and remaining > 1e-9:
+        share = remaining / sum(weights[n] for n in active)
+        sat = [n for n in active
+               if demands[n] - alloc[n] <= share * weights[n] + 1e-9]
+        if not sat:
+            for n in active:
+                alloc[n] += share * weights[n]
+            break
+        for n in sat:
+            remaining -= demands[n] - alloc[n]
+            alloc[n] = demands[n]
+            active.discard(n)
+    return alloc
+
+
+def _run_variant(tag: str, engine: InferenceEngine, trace: List[TraceItem],
+                 admission: Optional[AdmissionController],
+                 faults: Optional[FaultInjector], knobs: dict) -> dict:
+    engine.faults = faults
+    client = EngineClient(engine, admission=admission)
+    shed_rate_limited = shed_overload = 0
+    live: List[Tuple[object, TraceItem]] = []       # (handle, item)
+    pending_aborts: List[Tuple[float, object]] = []  # (due, handle)
+    t0 = time.monotonic()
+    for i, item in enumerate(trace):
+        due = t0 + item.t
+        while True:
+            now = time.monotonic()
+            fired = [(d, h) for d, h in pending_aborts if d <= now]
+            pending_aborts = [(d, h) for d, h in pending_aborts if d > now]
+            for _, h in fired:
+                h.abort(wait=False)
+            if now >= due:
+                break
+            time.sleep(min(due - now, 0.02))
+        req = _make_request(item, i, knobs)
+        item.req = req
+        try:
+            handle = client.submit(req)
+        except AdmissionError as e:
+            if e.status == 429:
+                shed_rate_limited += 1
+            else:
+                shed_overload += 1
+            continue
+        live.append((handle, item))
+        if item.abort_after is not None:
+            pending_aborts.append((due + item.abort_after, handle))
+    for due, h in sorted(pending_aborts):
+        time.sleep(max(0.0, due - time.monotonic()))
+        h.abort(wait=False)
+    # wait out the tail: queued work either finishes, times out, or (in the
+    # bench, never) hangs past the drain budget and is force-aborted below
+    deadline = time.monotonic() + knobs["drain_wait_s"]
+    for handle, _ in live:
+        handle._done.wait(max(0.0, deadline - time.monotonic()))
+    stragglers = sum(1 for h, _ in live if not h.finished)
+    for handle, _ in live:
+        if not handle.finished:
+            handle.abort(wait=True, timeout=5.0)
+    wall = time.monotonic() - t0
+    loop_alive = client.alive
+    client.stop()
+
+    # typed-outcome account: every submitted request ended exactly one way
+    finished = timeouts = aborted = failed = 0
+    good_tokens = 0
+    tenant_good: Dict[str, int] = {name: 0 for name in TENANTS}
+    ttfts: List[float] = []
+    for _, item in live:
+        r = item.req
+        reason = r.finish_reason.value if r.finish_reason else "missing"
+        if reason in ("stop", "length"):
+            finished += 1
+            good_tokens += r.num_generated
+            tenant_good[item.tenant] += r.num_generated
+            if item.interactive and r.ttft is not None:
+                ttfts.append(r.ttft)
+        elif reason == "timeout":
+            timeouts += 1
+        elif reason == "abort":
+            aborted += 1
+        else:
+            failed += 1
+    offered = len(trace)
+    shed = shed_rate_limited + shed_overload
+    accounted = finished + timeouts + aborted + failed + shed
+    assert accounted == offered, (
+        f"{tag}: typed-outcome account does not balance "
+        f"({accounted} != {offered} offered) — a request hung")
+    assert loop_alive, f"{tag}: engine loop died"
+    # fairness vs the weighted max-min ideal: normalise each tenant's
+    # achieved goodput by what a perfectly fair allocator would have given
+    # it (its weight share of total service, capped at its own demand)
+    demand = {n: 0.0 for n in TENANTS}
+    for it in trace:
+        demand[it.tenant] += it.req.sampling.max_tokens
+    ideal = _fair_alloc(float(good_tokens), demand,
+                        {n: TENANTS[n][0] for n in TENANTS})
+    shares = [tenant_good[n] / ideal[n] for n in TENANTS if ideal[n] > 0]
+    ttft = np.array(ttfts) if ttfts else np.array([0.0])
+    row = {
+        "variant": tag,
+        "offered_x": next(x for t, x, *_ in VARIANTS if t == tag),
+        "admission": admission is not None,
+        "chaos": faults is not None,
+        "offered": offered,
+        "finished": finished,
+        "shed_rate_limited": shed_rate_limited,
+        "shed_overload": shed_overload,
+        "timeouts": timeouts,
+        "aborted": aborted,
+        "failed": failed,
+        "stragglers_force_aborted": stragglers,
+        "tok_s": good_tokens / wall,              # goodput — the gate metric
+        "goodput_tok_s": good_tokens / wall,
+        "shed_frac": shed / offered,
+        "timeout_frac": timeouts / offered,
+        "jain_fairness": jain_index(shares),
+        "tenant_goodput_tokens": dict(tenant_good),
+        "tenant_demand_tokens": {n: int(v) for n, v in demand.items()},
+        "tenant_fair_alloc_tokens": {n: int(v) for n, v in ideal.items()},
+        "inter_ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "inter_ttft_p95_ms": float(np.percentile(ttft, 95) * 1e3),
+        "wall_s": wall,
+    }
+    if faults is not None:
+        row["faults_fired"] = sum(v["fired"] for v in faults.snapshot().values())
+    engine.faults = None
+    return row
+
+
+def _admission(rate_rps: float, knobs: dict) -> AdmissionController:
+    """Production-shaped controller scaled to the calibrated capacity:
+    per-tenant rps caps at 3x the tenant's weight share (inert at 1x,
+    429s the bulk tenant's excess at 2x), queue-wait timeout as the
+    primary excess disposal, and shedding only once the estimated wait
+    exceeds that timeout (queued work that would expire anyway) — early
+    shedding would keep the queue empty and the fair release order moot."""
+    timeout = min(2.5, knobs["duration_s"] / 3)
+    total_w = sum(w for w, _ in TENANTS.values())
+    tenants = {}
+    for name, (w, _p) in TENANTS.items():
+        cap = 3.0 * rate_rps * w / total_w
+        tenants[name] = TenantConfig(
+            weight=w, rps=cap, burst_requests=max(8.0, cap * timeout))
+    return AdmissionController(
+        tenants=tenants,
+        max_queue_depth=max(8, int(2 * rate_rps * timeout)),
+        queue_timeout_s=timeout,
+        shed_wait_s=timeout,
+    )
+
+
+def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
+    knobs = dict(SMOKE) if smoke else dict(
+        duration_s=DURATION_S, cal_requests=CAL_REQUESTS,
+        inter_prompt=INTER_PROMPT, inter_tokens=INTER_TOKENS,
+        batch_prompt=BATCH_PROMPT, batch_tokens=BATCH_TOKENS,
+        cache_len=CACHE_LEN, prefill_chunk=PREFILL_CHUNK)
+    cfg, params = micro_model()
+    engine = InferenceEngine(
+        cfg, params=params, max_batch=MAX_BATCH, cache_len=knobs["cache_len"],
+        prefill_chunk=knobs["prefill_chunk"], speculative_fill=True,
+        enable_prefix_cache=False, enable_content_cache=False)
+    engine.generate(_mixed_requests(2 * MAX_BATCH, knobs))  # compile
+    calibrate_rps(engine, knobs)   # client-path shapes (K-collapse blocks)
+    rate_hint = calibrate_rps(engine, knobs)
+    rate_rps = probe_capacity(engine, rate_hint, knobs)
+    knobs["drain_wait_s"] = min(2.5, knobs["duration_s"] / 3) + 2.0
+    print(f"# calibrated capacity ~{rate_rps:.1f} req/s on the trace mix "
+          f"(closed-loop hint {rate_hint:.1f})")
+    rows = []
+    for tag, load_x, with_admission, with_chaos in VARIANTS:
+        trace = build_trace(seed=42, duration_s=knobs["duration_s"],
+                            rate_rps=rate_rps * load_x)
+        admission = _admission(rate_rps, knobs) if with_admission else None
+        faults = FaultInjector(seed=0, rates=CHAOS_RATES) if with_chaos else None
+        row = _run_variant(tag, engine, trace, admission, faults, knobs)
+        rows.append(row)
+        emit(f"load_trace/{tag}", 1e6 / max(row["tok_s"], 1e-6),
+             f"goodput={row['tok_s']:.1f}tok_s "
+             f"shed={row['shed_frac']:.0%} timeout={row['timeout_frac']:.0%} "
+             f"jain={row['jain_fairness']:.2f} "
+             f"ttft_p95={row['inter_ttft_p95_ms']:.0f}ms "
+             f"outcomes(f/t/a/e)={row['finished']}/{row['timeouts']}/"
+             f"{row['aborted']}/{row['failed']}")
+    by = {r["variant"]: r for r in rows}
+    ratio = by["admit_1x"]["tok_s"] / max(by["noadmit_1x"]["tok_s"], 1e-9)
+    # >1.0 is common: admission bounds the engine-side pending queue, whose
+    # per-step planning cost is O(backlog) — protection is itself a win
+    print(f"# goodput ratio admit_1x/noadmit_1x: {ratio:.2f} (gate: >= 0.9) "
+          f"| jain@2x={by['admit_2x']['jain_fairness']:.2f} (gate: >= 0.8)")
+    result = bench_result(
+        "load_trace", [v[0] for v in VARIANTS], rows,
+        arch=cfg.name, smoke=smoke, calibrated_rps=rate_rps,
+        abort_frac=ABORT_FRAC, chaos_rates=CHAOS_RATES,
+        tenants={n: {"weight": w, "arrival_p": p}
+                 for n, (w, p) in TENANTS.items()},
+        **knobs)
+    path = out or OUT
+    path.write_text(json.dumps(result, indent=2))
+    print(f"# wrote {path}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace for the CI chaos job")
+    run(smoke=ap.parse_args().smoke)

@@ -10,10 +10,11 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (decode_loop, fig2_concurrency, prefill_overlap,
-                        sched_policy, table1_throughput, table2_mllm_cache,
-                        table3_video, table4_ablation, table5_resolution,
-                        table6_video_frames, table7_text_prefix)
+from benchmarks import (decode_loop, fig2_concurrency, load_trace,
+                        prefill_overlap, sched_policy, table1_throughput,
+                        table2_mllm_cache, table3_video, table4_ablation,
+                        table5_resolution, table6_video_frames,
+                        table7_text_prefix)
 from benchmarks.common import ROWS
 
 SUITES = [
@@ -21,6 +22,7 @@ SUITES = [
     ("decode_loop", decode_loop.run),
     ("prefill_overlap", prefill_overlap.run),
     ("sched_policy", sched_policy.run),
+    ("load_trace", load_trace.run),
     ("fig2", fig2_concurrency.run),
     ("table2", table2_mllm_cache.run),
     ("table3", table3_video.run),

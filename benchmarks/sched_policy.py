@@ -12,9 +12,17 @@ This suite pins both sides of that trade for the policy subsystem:
   * ``fifo_abort``  — FIFO + speculative filling under *abort churn*: a
                       fraction of the batch requests is cancelled mid-flight
                       (the EngineClient disconnect scenario); tracks the
-                      slot-reclaim latency (abort -> freed capacity re-admits
-                      a pending request) and the aggregate-throughput cost
-                      of cancellation
+                      aggregate-throughput cost of cancellation plus the
+                      slot-reclaim latency (abort request -> slot freed,
+                      with the threaded client's block-boundary timing)
+                      from a dedicated long-decode probe episode
+  * ``fifo_abort_hint`` — the same churn and probe with
+                      ``engine.reclaim_hint`` installed (as EngineClient
+                      does): the decode block collapses to K=1 while an
+                      abort waits at the boundary, so a cancelled slot is
+                      freed within ~1 decode step instead of riding out a
+                      full K-token block — run() asserts the reclaim
+                      latency drops
   * ``priority``    — priority ordering + speculative filling
   * ``edf``         — earliest-deadline-first + speculative filling
   * ``edf_preempt`` — EDF + slot preemption (urgent requests evict the
@@ -27,9 +35,14 @@ outputs, no deadline) swamp the engine first; after a few engine steps
 deadline, high priority) arrive behind them.  Under FIFO the interactives
 strand behind the batch backlog; deadline/priority policies reorder
 admission and the chunk queue, and preemption frees slots immediately.
-In the abort variant, one queued victim is cancelled per engine step once
-the interactives have arrived — mimicking clients that hang up while their
-request decodes.
+In the abort variants, one victim is cancelled per engine step once the
+interactives have arrived — mimicking clients that hang up while their
+request decodes.  The reclaim-latency numbers come from a separate probe
+episode with *no* pending backlog: while requests are pending the engine
+already collapses its decode block to K=1 and the boundary an abort waits
+for is one token away regardless; with empty queues the engine runs full
+K-token blocks and the reclaim hint is what keeps cancellation latency
+flat (see ``_reclaim_probe``).
 
 Metrics per variant: interactive TTFT p50/p95 and e2e p95, aggregate and
 batch-class tokens/s, rows-per-wave, deadline miss count, preemption /
@@ -74,13 +87,14 @@ OUT = Path("BENCH_sched_policy.json")
 ABORT_FRAC = 0.25
 
 VARIANTS = [
-    # (tag, policy, preemption, speculative_fill, abort_frac)
-    ("fifo_nospec", "fifo", False, False, 0.0),
-    ("fifo", "fifo", False, True, 0.0),
-    ("fifo_abort", "fifo", False, True, ABORT_FRAC),
-    ("priority", "priority", False, True, 0.0),
-    ("edf", "edf", False, True, 0.0),
-    ("edf_preempt", "edf", True, True, 0.0),
+    # (tag, policy, preemption, speculative_fill, abort_frac, reclaim_hint)
+    ("fifo_nospec", "fifo", False, False, 0.0, False),
+    ("fifo", "fifo", False, True, 0.0, False),
+    ("fifo_abort", "fifo", False, True, ABORT_FRAC, False),
+    ("fifo_abort_hint", "fifo", False, True, ABORT_FRAC, True),
+    ("priority", "priority", False, True, 0.0, False),
+    ("edf", "edf", False, True, 0.0, False),
+    ("edf_preempt", "edf", True, True, 0.0, False),
 ]
 
 SMOKE = dict(concurrency=[4], batch_prompt=48, batch_tokens=12,
@@ -131,9 +145,9 @@ def _episode(eng: InferenceEngine, knobs: dict, conc: int,
 
     With ``abort_frac > 0``, that fraction of the batch requests is
     cancelled mid-flight (one per engine step once the interactives have
-    arrived).  Slot-reclaim latency is measured from the ``engine.abort``
-    call to the first admission that lands *after* it — i.e. until the
-    cancelled request's capacity is demonstrably serving someone else."""
+    arrived) — the churn cost shows up in the aggregate throughput.
+    Reclaim *latency* is measured separately by :func:`_reclaim_probe`,
+    which controls the decode-block size the abort has to ride out."""
     batch = _batch_requests(2 * conc, knobs["batch_prompt"],
                             knobs["batch_tokens"])
     t0 = time.monotonic()
@@ -149,37 +163,20 @@ def _episode(eng: InferenceEngine, knobs: dict, conc: int,
     if abort_frac > 0:
         stride = max(1, round(1.0 / abort_frac))
         victims = list(batch[::stride])
-    reclaims: List[float] = []
-    open_reclaims: List[dict] = []
     aborted = 0
     while eng.scheduler.has_work:
         while victims and victims[0].is_finished:
             victims.pop(0)
         if victims:
-            victim = victims.pop(0)
-            mark = {"t": time.monotonic(),
-                    "admitted": eng.scheduler.stats.admitted}
-            eng.abort(victim.request_id)
+            eng.abort(victims.pop(0).request_id)
             aborted += 1
-            open_reclaims.append(mark)
         eng.step()
-        if open_reclaims:
-            now = time.monotonic()
-            admitted = eng.scheduler.stats.admitted
-            still = []
-            for m in open_reclaims:
-                if admitted > m["admitted"]:
-                    reclaims.append(now - m["t"])
-                else:
-                    still.append(m)
-            open_reclaims = still
     wall = time.monotonic() - t0
     toks = sum(r.num_generated for r in batch + inter)
     batch_toks = sum(r.num_generated for r in batch)
     ttfts = np.array([r.ttft for r in inter])
     e2es = np.array([r.finish_time - r.arrival_time for r in inter])
     missed = sum(1 for r in inter if r.missed_deadline)
-    reclaim = np.array(reclaims) if reclaims else np.array([0.0])
     return {
         "wall_s": wall, "tok_s": toks / wall, "batch_tok_s": batch_toks / wall,
         "interactive_ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
@@ -187,9 +184,50 @@ def _episode(eng: InferenceEngine, knobs: dict, conc: int,
         "interactive_e2e_p95_ms": float(np.percentile(e2es, 95) * 1e3),
         "deadline_missed": missed,
         "aborted_inflight": aborted,
-        "slot_reclaim_p50_ms": float(np.percentile(reclaim, 50) * 1e3),
-        "slot_reclaim_p95_ms": float(np.percentile(reclaim, 95) * 1e3),
     }
+
+
+def _reclaim_probe(eng: InferenceEngine, knobs: dict, conc: int,
+                   use_hint: bool) -> List[float]:
+    """Abort-to-slot-free latency with the threaded client's timing: the
+    abort is *requested* at one block boundary and *applied* at the next,
+    riding out whatever decode block the engine runs in between.
+
+    The probe decodes ``conc`` long pure-batch slots (every budget spans
+    many full blocks), so without the hint the in-between block is a full
+    ``max_decode_block``; with ``use_hint`` the engine sees
+    ``reclaim_hint`` (as EngineClient installs it) and collapses that
+    block to K=1 — the latency drop run() asserts on."""
+    reqs = _batch_requests(conc, knobs["batch_prompt"],
+                           8 * eng.max_decode_block)
+    for r in reqs:
+        eng.add_request(r)
+    sched = eng.scheduler
+    while sched.pending or sched.chunk_queue:   # admit + prefill everyone
+        eng.step()
+    queued: List[dict] = []
+    eng.reclaim_hint = (lambda: bool(queued)) if use_hint else None
+    reclaims: List[float] = []
+    doomed: set = set()
+    try:
+        while sched.has_work:
+            if queued:                          # boundary reached: apply
+                m = queued.pop()
+                if not m["victim"].is_finished:
+                    eng.abort(m["victim"].request_id)
+                    reclaims.append(time.monotonic() - m["t"])
+            live = [r for r in sched.active.values()
+                    if not r.is_finished and r.request_id not in doomed]
+            if (not queued and live
+                    and sched.plan_decode_block(eng.max_decode_block) > 1):
+                victim = max(live, key=lambda r:
+                             r.sampling.max_tokens - r.num_generated)
+                doomed.add(victim.request_id)
+                queued.append({"victim": victim, "t": time.monotonic()})
+            eng.step()
+    finally:
+        eng.reclaim_hint = None
+    return reclaims
 
 
 _STAT_DELTAS = ("prefill_waves", "prefill_chunks", "spec_chunks",
@@ -206,14 +244,16 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
     whichever one it happened to land on, so the best-of comparison stays
     apples-to-apples."""
     engines = {}
-    for tag, policy, preempt, spec, abort_frac in VARIANTS:
+    for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
         eng = _engine(policy, preempt, spec, conc, knobs["cache_len"],
                       knobs["prefill_chunk"], params)
-        _episode(eng, knobs, conc, abort_frac)     # warmup (compiles)
+        _episode(eng, knobs, conc, abort_frac)         # warmup (compiles)
+        if abort_frac > 0:
+            _reclaim_probe(eng, knobs, conc, hint)     # compiles probe shapes
         engines[tag] = eng
     best: dict = {}
     for _ in range(knobs["repeats"]):
-        for tag, policy, preempt, spec, abort_frac in VARIANTS:
+        for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
             eng = engines[tag]
             before = {k: getattr(eng.scheduler.stats, k)
                       for k in _STAT_DELTAS}
@@ -223,6 +263,7 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
             row.update({
                 "variant": tag, "policy": policy, "preemption": preempt,
                 "speculative_fill": spec, "abort_frac": abort_frac,
+                "reclaim_hint": hint,
                 "concurrency": conc, "requests": 3 * conc,
                 "rows_per_wave": (delta["prefill_chunks"]
                                   / max(delta["prefill_waves"], 1)),
@@ -230,6 +271,16 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
             })
             if tag not in best or row["tok_s"] > best[tag]["tok_s"]:
                 best[tag] = row
+    for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
+        reclaims = np.array([0.0])
+        if abort_frac > 0:
+            samples = _reclaim_probe(engines[tag], knobs, conc, hint)
+            assert samples, f"reclaim probe produced no aborts for {tag}"
+            reclaims = np.array(samples)
+        best[tag]["slot_reclaim_p50_ms"] = float(
+            np.percentile(reclaims, 50) * 1e3)
+        best[tag]["slot_reclaim_p95_ms"] = float(
+            np.percentile(reclaims, 95) * 1e3)
     return [best[tag] for tag, *_ in VARIANTS]
 
 
@@ -251,6 +302,15 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
                  f"preempt={row['preemptions']} miss={row['deadline_missed']} "
                  f"abort={row['aborted_inflight']} "
                  f"reclaim_p95={row['slot_reclaim_p95_ms']:.1f}ms")
+        by = {r["variant"]: r for r in rows if r["concurrency"] == conc}
+        plain, hinted = by["fifo_abort"], by["fifo_abort_hint"]
+        # the reclaim hint collapses the block an abort waits out to K=1,
+        # so cancellation latency must drop vs riding a full K-token block
+        assert (hinted["slot_reclaim_p50_ms"]
+                < plain["slot_reclaim_p50_ms"]), (
+            f"reclaim hint did not cut abort->slot-free latency at c{conc}: "
+            f"{hinted['slot_reclaim_p50_ms']:.1f}ms !< "
+            f"{plain['slot_reclaim_p50_ms']:.1f}ms")
     result = bench_result(
         "sched_policy", [v[0] for v in VARIANTS], rows,
         arch=params[0].name, smoke=smoke, deadline_ms=DEADLINE_MS,

@@ -97,7 +97,7 @@ import functools
 import logging
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +107,7 @@ from repro.configs import ModelConfig
 from repro.core.content_cache import (ContentCache, CrossKVEntry,
                                       EmbeddingEntry, content_hash,
                                       media_set_digest)
+from repro.core.faults import FaultInjector
 from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
                                  concat_cache_rows, init_decode_state,
                                  select_cache_slots, slice_cache_row,
@@ -213,6 +214,8 @@ class InferenceEngine:
         max_preemptions: int = 2,
         speculative_fill: bool = True,
         max_spec_jobs: Optional[int] = None,
+        aging_s: Optional[float] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -267,7 +270,18 @@ class InferenceEngine:
 
         self.pool = SlotKVPool(cfg, max_batch, cache_len, ctx_len=self.ctx_len)
         self.scheduler = ContinuousBatchingScheduler(max_batch,
-                                                     policy=sched_policy)
+                                                     policy=sched_policy,
+                                                     aging_s=aging_s)
+        # deterministic fault injection (chaos harness — core/faults.py);
+        # None = all hooks inert.  Fault-boundary terminal events that arise
+        # deep inside helpers buffer here and drain at the end of step()
+        self.faults = faults
+        self._fault_events: List[StreamEvent] = []
+        self._fault_tick = 0                 # step() invocations (incl. idle)
+        # installed by EngineClient: returns True while an abort/reclaim is
+        # queued at the block boundary, so plan_decode_block collapses K and
+        # the reclaim lands after at most one device step instead of K
+        self.reclaim_hint: Optional[Callable[[], bool]] = None
         self.prefix_cache = (TextPrefixCache(prefix_block_size,
                                              cache_max_bytes)
                              if enable_prefix_cache else None)
@@ -554,6 +568,10 @@ class InferenceEngine:
         adopting a speculative job per request), then — with a preemptive
         policy — evict the least urgent live slot for each strictly more
         urgent pending request."""
+        # freeze the anti-starvation aging clock once per planning pass, so
+        # policy keys are static while this pass runs (the preemption loop's
+        # termination argument needs per-request keys that don't move)
+        self.scheduler.policy.tick(time.monotonic())
         self._admit_into_free_slots()
         if (self.preemption and self.scheduler.policy.preemptive
                 and self.scheduler.pending and not self.pool.num_free):
@@ -562,13 +580,25 @@ class InferenceEngine:
     def _admit_into_free_slots(self) -> None:
         while (self.pool.num_free and self.scheduler.pending
                and self.scheduler.num_active < self.scheduler.max_batch):
+            head = self.scheduler.peek_pending()
+            if (self.faults is not None and head is not None
+                    and self.faults.fires("pool", head.request_id,
+                                          self._fault_tick)):
+                # transient slot-allocation failure: the request stays
+                # pending and is retried next step (keyed by step tick, so
+                # the retry draws fresh) — never dropped, never wedged
+                break
             slot = self.pool.allocate()
             admitted = self.scheduler.admit([slot])
             if not admitted:
                 self.pool.free(slot)
                 break
             _, req = admitted[0]
-            self._bind_slot(slot, req)
+            try:
+                self._bind_slot(slot, req)
+            except Exception as e:  # per-request fault boundary (prefill)
+                self._fault_events.extend(self._fail_request(
+                    req.request_id, f"prefill open failed: {e}"))
 
     @staticmethod
     def _salt(req: Request) -> bytes:
@@ -714,6 +744,9 @@ class InferenceEngine:
     def _open_prefill(self, slot: Optional[int], req: Request,
                       tokens: Optional[List[int]] = None) -> _PrefillJob:
         t0 = time.monotonic()
+        if self.faults is not None:
+            self.faults.check("prefill", req.request_id,
+                              detail=f"request {req.request_id}")
         tokens = list(req.prompt_tokens if tokens is None else tokens)
         assert tokens, "empty prompt"
         if slot is not None:
@@ -795,8 +828,28 @@ class InferenceEngine:
 
         completed: List[Tuple[_PrefillJob, jax.Array]] = []
         for (bucket, cross_cached), rows in groups.items():
-            completed.extend(self._run_wave_group(bucket, cross_cached, rows))
+            try:
+                completed.extend(
+                    self._run_wave_group(bucket, cross_cached, rows))
+            except Exception as e:  # wave-group fault boundary
+                self._fail_wave(rows, e)
         return completed
+
+    def _fail_wave(self, rows: List[Tuple[_PrefillJob, int]],
+                   exc: Exception) -> None:
+        """One batched prefill pass blew up: fail the slot-bound requests
+        riding it (their partial caches are unrecoverable) with typed ERROR
+        events, and drop the wave's speculative rows back to pending — the
+        speculated work was optional, so those requests are untouched and
+        simply prefill again later.  Other wave groups and every decode slot
+        are unaffected."""
+        log.warning("prefill wave group failed (%d rows): %s", len(rows), exc)
+        for job, _ in rows:
+            if job.slot is not None:
+                self._fault_events.extend(self._fail_request(
+                    job.req.request_id, f"prefill wave failed: {exc}"))
+            else:
+                self._spec_jobs.pop(job.req.request_id, None)
 
     def _backfill_groups(
             self, groups: Dict[Tuple[int, bool],
@@ -824,7 +877,12 @@ class InferenceEngine:
                     waiting.remove(job)
                 elif fresh and len(self._spec_jobs) < self.max_spec_jobs:
                     req = fresh.pop(0)
-                    cand = self._open_prefill(None, req)
+                    try:
+                        cand = self._open_prefill(None, req)
+                    except Exception as e:  # per-request fault boundary
+                        self._fault_events.extend(self._fail_request(
+                            req.request_id, f"prefill open failed: {e}"))
+                        continue
                     self._spec_jobs[req.request_id] = cand
                     self.scheduler.stats.spec_jobs += 1
                     if cand.cross_cached != cross_cached:
@@ -1002,8 +1060,12 @@ class InferenceEngine:
                     self._stopchk[a.req.request_id] = StopSequenceChecker(
                         list(a.req.sampling.stop_sequences))
             a.req.status = RequestStatus.DECODING
-            events.extend(self._emit_token(a.slot, a.req, a.first_token,
-                                           a.logprob, a.top_logprobs))
+            try:
+                events.extend(self._emit_token(a.slot, a.req, a.first_token,
+                                               a.logprob, a.top_logprobs))
+            except Exception as e:  # per-request fault boundary (codec)
+                self._fault_events.extend(self._fail_request(
+                    a.req.request_id, f"codec failure: {e}"))
 
         self._admit_rows_to_state(
             [(a.slot, a.req, a.first_token, a.seq_len, a.ctx_valid,
@@ -1055,6 +1117,12 @@ class InferenceEngine:
         stop-sequence filtering (text that could still become a match is
         held back; a completed match truncates and finishes the request),
         logprob attachment, and the finish checks."""
+        if self.faults is not None:
+            # keyed by (request, position): the same token of the same
+            # request fails in every replay, nothing else does
+            self.faults.check("codec", req.request_id, req.num_generated,
+                              detail=f"request {req.request_id} "
+                                     f"token {token}")
         text = self._streamers[req.request_id].push_token(token)
         chk = self._stopchk.get(req.request_id)
         stopped = False
@@ -1155,6 +1223,21 @@ class InferenceEngine:
         which applies aborts at the next block boundary.  Returns the final
         ABORT event (empty list if the request is unknown or already
         finished — abort-after-finish is a no-op)."""
+        return self._terminate(request_id, FinishReason.ABORT)
+
+    def _fail_request(self, request_id: int, detail: str
+                      ) -> List[StreamEvent]:
+        """The per-request fault boundary: fail ONE request with a typed
+        ERROR finish event wherever it currently lives, leaving every other
+        request untouched — survivors continue bit-identically (asserted by
+        tests/test_faults.py).  Cleanup is exactly :meth:`abort`'s
+        propagation map; only the terminal reason/status differ.  The
+        engine loop never dies for a request-scoped failure."""
+        log.warning("request %d failed: %s", request_id, detail)
+        return self._terminate(request_id, FinishReason.ERROR, detail)
+
+    def _terminate(self, request_id: int, reason: FinishReason,
+                   detail: Optional[str] = None) -> List[StreamEvent]:
         req: Optional[Request] = None
         slot = next((s for s, r in self.scheduler.active.items()
                      if r.request_id == request_id), None)
@@ -1179,19 +1262,88 @@ class InferenceEngine:
             # drop the preemption snapshot from the byte budget
             self.prefix_cache.take_exact(
                 req.prompt_tokens + req.output_tokens, salt=self._salt(req))
-        req.finish_reason = FinishReason.ABORT
+        req.finish_reason = reason
         req.finish_time = time.monotonic()
-        req.status = RequestStatus.ABORTED
+        if reason is FinishReason.ABORT:
+            req.status = RequestStatus.ABORTED
+            self.scheduler.stats.aborted += 1
+        else:
+            req.status = RequestStatus.FAILED
+            req.error = detail
+            self.scheduler.stats.failed += 1
         self._streamers.pop(request_id, None)
         self._stopchk.pop(request_id, None)
-        self.scheduler.stats.aborted += 1
         return [StreamEvent(request_id, None, "", finished=True,
-                            finish_reason=FinishReason.ABORT)]
+                            finish_reason=reason)]
+
+    def _recover_decode_block(self, exc: Exception) -> None:
+        """Catastrophic decode-block failure — the compiled block itself
+        threw, not a per-request fault.  The block donates the KV pool's
+        cache and the decode state, so both device buffers must be assumed
+        gone: every live request fails with a typed ERROR event (their KV
+        rows are unrecoverable), the buffers are rebuilt from scratch, and
+        pending / mid-prefill requests — whose partial caches ride outside
+        the pool on their jobs — are preserved and continue.  The engine
+        loop survives."""
+        log.error("decode block failed: %s — failing %d live request(s) "
+                  "and rebuilding device buffers", exc,
+                  len(self._live_slots))
+        # fresh decode state first: the failure paths below touch it
+        # (_deactivate_slot), and the donated one may already be invalid
+        self.state = init_decode_state(self.pool.max_batch, self.ctx_len,
+                                       self.max_stop_tokens)
+        for slot in sorted(self._live_slots):
+            req = self.scheduler.active.get(slot)
+            if req is not None:
+                self._fault_events.extend(self._fail_request(
+                    req.request_id, f"decode block failed: {exc}"))
+        # rebuild the pool's device cache; slot bookkeeping carries over
+        # (slots still owned by mid-prefill requests stay marked used —
+        # their wave commit scatters into the fresh buffers)
+        fresh = SlotKVPool(self.cfg, self.pool.max_batch,
+                           self.pool.cache_len, ctx_len=self.ctx_len)
+        fresh._free = list(self.pool._free)
+        fresh._used = set(self.pool._used)
+        self.pool = fresh
+
+    def drain_snapshot(self) -> List[StreamEvent]:
+        """Graceful-drain cutoff (EngineClient.drain timeout): publish every
+        live decode slot's exact sequence to the prefix cache — the same
+        exact-sequence entry a preemption eviction writes, so a warm
+        restart resumes the work instead of redoing it — then abort
+        everything still in flight.  Every open request gets its terminal
+        ABORT event; no client hangs across shutdown."""
+        events: List[StreamEvent] = []
+        if self.prefix_cache is not None:
+            for slot in sorted(self._live_slots):
+                req = self.scheduler.active[slot]
+                single = self.pool.read(slot)
+                self.prefix_cache.insert_exact(
+                    req.prompt_tokens + req.output_tokens,
+                    {"cache": single}, tree_bytes(single),
+                    salt=self._salt(req))
+        open_ids = [r.request_id for r in self.scheduler.active.values()]
+        open_ids += [r.request_id
+                     for r in self.scheduler.pending_in_order()]
+        open_ids += list(self._spec_jobs)
+        for rid in dict.fromkeys(open_ids):
+            events.extend(self.abort(rid))
+        events.extend(self._fault_events)
+        self._fault_events.clear()
+        return events
 
     # ------------------------------------------------------------------ #
     # public API
     # ------------------------------------------------------------------ #
-    def add_request(self, req: Request) -> None:
+    def validate_request(self, req: Request) -> None:
+        """Validate + normalise a request without enqueueing it: prompt
+        -length policy (truncate or raise), stop-token / stop-sequence /
+        logprob / sampler checks, and base-PRNG-key binding.  Idempotent.
+        ``add_request`` calls this; the admission-queue path
+        (:class:`~repro.serving.client.EngineClient` with an
+        ``AdmissionController``) calls it at submit time so invalid
+        requests raise to the caller instead of failing later on the
+        engine loop."""
         n = len(req.prompt_tokens)
         if not self.cfg.sliding_window and n > self.pool.cache_len:
             if not self.truncate_long_prompts:
@@ -1218,6 +1370,9 @@ class InferenceEngine:
         validate_sampling_params(req.sampling.top_p, req.sampling.top_k,
                                  req.sampling.min_p, req.sampling.seed)
         self._assign_sample_key(req)
+
+    def add_request(self, req: Request) -> None:
+        self.validate_request(req)
         req.status = RequestStatus.QUEUED
         self.scheduler.add(req)
 
@@ -1230,24 +1385,37 @@ class InferenceEngine:
         host-sync window instead of stalling the decode loop.
         """
         events: List[StreamEvent] = []
+        self._fault_tick += 1
+        if (self.faults is not None
+                and self.faults.fires("slow_step", self._fault_tick)):
+            # injected wedged step (drives the EngineClient watchdog)
+            time.sleep(self.faults.slow_step_s)
 
         # 1. bind pending requests to slots; open prefill jobs
         self._plan_admissions()
 
         # 2. dispatch one compiled block of K decode steps (no host block
-        # yet); K collapses to 1 while requests or chunks wait
+        # yet); K collapses to 1 while requests, chunks, or — via the
+        # client-installed reclaim hint — aborts wait at the boundary
         block_plan = None
         if self._live_slots:
-            num_steps = self.scheduler.plan_decode_block(self.max_decode_block)
+            num_steps = self.scheduler.plan_decode_block(
+                self.max_decode_block,
+                reclaim_queued=bool(self.reclaim_hint is not None
+                                    and self.reclaim_hint()))
             want_lp = any(r.sampling.logprobs
                           for s, r in self.scheduler.active.items()
                           if s in self._live_slots)
-            cache, state, toks, lps = self._decode_block_fn(
-                self.params, self.pool.cache, self.state,
-                num_steps=num_steps, want_logprobs=want_lp)
-            self.pool.cache = cache
-            self.state = state
-            block_plan = (num_steps, toks, lps)
+            try:
+                cache, state, toks, lps = self._decode_block_fn(
+                    self.params, self.pool.cache, self.state,
+                    num_steps=num_steps, want_logprobs=want_lp)
+            except Exception as e:  # catastrophic block failure
+                self._recover_decode_block(e)
+            else:
+                self.pool.cache = cache
+                self.state = state
+                block_plan = (num_steps, toks, lps)
 
         # 3. dispatch the prefill wave behind the in-flight decode block
         completed = self._dispatch_prefill_wave()
@@ -1275,6 +1443,19 @@ class InferenceEngine:
                         # but the host hasn't (belt and braces — the two
                         # conditions are equivalent by construction)
                         continue
+                    if tok >= self.cfg.vocab_size or (
+                            self.faults is not None
+                            and self.faults.fires("decode", req.request_id,
+                                                  req.num_generated)):
+                        # corrupt sampled token (the NaN-in-logits scenario,
+                        # or its injected stand-in): fail this request only;
+                        # neighbour slots are independent (per-slot RNG,
+                        # masked cache writes) and continue bit-identically
+                        self._fault_events.extend(self._fail_request(
+                            req.request_id,
+                            f"corrupt token {tok} at position "
+                            f"{req.num_generated}"))
+                        continue
                     req.output_tokens.append(tok)
                     self.scheduler.stats.tokens_generated += 1
                     logprob = top = None
@@ -1283,15 +1464,32 @@ class InferenceEngine:
                         ntop = req.sampling.top_logprobs
                         top = list(zip(lp_i[k, slot, :ntop].tolist(),
                                        lp_v[k, slot, :ntop].tolist()))
-                    events.extend(
-                        self._emit_token(slot, req, tok, logprob, top))
+                    try:
+                        events.extend(
+                            self._emit_token(slot, req, tok, logprob, top))
+                    except Exception as e:  # per-request boundary (codec)
+                        self._fault_events.extend(self._fail_request(
+                            req.request_id, f"codec failure: {e}"))
 
         # 5. land finished prefills (next block picks the new slots up);
         # speculative jobs whose slot arrived this step commit in the same
         # batched call, their staged logits standing in for a wave row
         ready = [(j, j.logits) for j in self._ready_jobs]
         self._ready_jobs.clear()
-        events.extend(self._commit_jobs(ready + completed))
+        try:
+            events.extend(self._commit_jobs(ready + completed))
+        except Exception as e:  # commit-wave fault boundary
+            log.warning("admission commit failed (%d jobs): %s",
+                        len(ready) + len(completed), e)
+            for job, _ in ready + completed:
+                self._fault_events.extend(self._fail_request(
+                    job.req.request_id, f"admission commit failed: {e}"))
+
+        # drain terminal events raised at interior fault boundaries (every
+        # failed request surfaces exactly one typed ERROR event)
+        if self._fault_events:
+            events.extend(self._fault_events)
+            self._fault_events.clear()
         return events
 
     def run(self) -> List[StreamEvent]:

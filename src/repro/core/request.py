@@ -16,6 +16,11 @@ class FinishReason(str, Enum):
     STOP = "stop"  # EOS / stop token / stop sequence
     LENGTH = "length"  # max_tokens reached
     ABORT = "abort"
+    # overload/fault terminals (PR 6): a request expired in the admission
+    # queue, or blew up in prefill/decode/codec and was failed in isolation
+    # (survivors continue) — both are typed events, never hangs
+    TIMEOUT = "timeout"  # queue-wait timeout at admission
+    ERROR = "error"  # per-request fault (see core/faults.py taxonomy)
 
 
 class RequestStatus(str, Enum):
@@ -30,6 +35,7 @@ class RequestStatus(str, Enum):
     DECODING = "decoding"  # live decode slot, tokens streaming
     FINISHED = "finished"  # stop / length — terminal
     ABORTED = "aborted"  # cancelled — terminal
+    FAILED = "failed"  # timeout / per-request fault — terminal
 
 
 class PromptTooLongError(ValueError):
@@ -88,6 +94,10 @@ class Request:
     # slot preemption — see core/scheduler.py.
     priority: int = 0
     deadline_ms: Optional[float] = None
+    # admission-control tenant (per-tenant rate limits + fair-share
+    # queueing — core/admission.py); the OpenAI ``user`` field or the
+    # ``x-tenant`` header map here
+    tenant: str = "default"
 
     # -- filled in by the engine --------------------------------------- #
     status: RequestStatus = RequestStatus.QUEUED
@@ -119,6 +129,10 @@ class Request:
     # times this request was evicted from a decode slot by a more urgent
     # request (scheduler preemption); bounds re-eviction churn
     preempt_count: int = 0
+    # human-readable failure detail when finish_reason is ERROR/TIMEOUT
+    # (carried on the terminal StreamEvent's text is user output, so the
+    # diagnostic lives here instead)
+    error: Optional[str] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -195,6 +209,7 @@ class GenerationRequest:
     audio: Optional[Any] = None
     priority: int = 0
     deadline_ms: Optional[float] = None
+    tenant: str = "default"
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     def to_requests(self, tokenizer) -> List["Request"]:
@@ -213,6 +228,7 @@ class GenerationRequest:
                     audio=self.audio,
                     priority=self.priority,
                     deadline_ms=self.deadline_ms,
+                    tenant=self.tenant,
                     metadata={**self.metadata, "choice_index": i},
                 )
             )

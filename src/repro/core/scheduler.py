@@ -41,13 +41,39 @@ from repro.core.request import Request
 # --------------------------------------------------------------------------- #
 class SchedulingPolicy:
     """Total order over requests: ``key(a) < key(b)`` means a is more
-    urgent.  Keys must be static per request (computed from admission-time
-    fields only) so preemption decisions cannot oscillate."""
+    urgent.  Keys must be static per request *within one planning pass* so
+    preemption decisions cannot oscillate: anti-starvation aging uses a
+    clock frozen by :meth:`tick` (called once per engine step), never a
+    live ``time.monotonic()`` read inside ``key``."""
 
     name = "base"
     #: whether an urgent pending request may evict an active slot (the
     #: engine additionally gates this behind its ``preemption`` knob)
     preemptive = False
+    #: lazy anti-starvation aging quantum in seconds (0 = off): every
+    #: ``aging_s`` of queue wait adds one effective priority level, so a
+    #: deadline-less batch request under sustained interactive load
+    #: eventually outranks fresh arrivals (worst-case wait is bounded by
+    #: ``aging_s * priority_gap`` — pinned in tests/test_sched_policy.py)
+    aging_s: float = 0.0
+
+    def __init__(self, aging_s: Optional[float] = None):
+        if aging_s is not None:
+            self.aging_s = aging_s
+        # frozen planning clock: -inf until the first tick, so aging is a
+        # no-op for callers that never tick (pure-ordering tests, seeds)
+        self._now = -math.inf
+
+    def tick(self, now: float) -> None:
+        """Freeze the aging clock for the next planning pass."""
+        self._now = now
+
+    def _age_boost(self, req: Request) -> int:
+        """Whole priority levels gained by queue wait (lazy: derived from
+        the frozen clock at key time — nothing is stored per request)."""
+        if self.aging_s <= 0 or self._now == -math.inf:
+            return 0
+        return max(0, int((self._now - req.arrival_time) / self.aging_s))
 
     def key(self, req: Request) -> Tuple:
         raise NotImplementedError
@@ -59,7 +85,8 @@ class SchedulingPolicy:
 class FIFOPolicy(SchedulingPolicy):
     """Strict arrival order (the seed behaviour).  Never preempts: an
     earlier arrival is by definition at least as urgent as anything that
-    could ask for its slot."""
+    could ask for its slot.  Aging is meaningless under FIFO (arrival
+    order already is the age order)."""
 
     name = "fifo"
     preemptive = False
@@ -69,42 +96,66 @@ class FIFOPolicy(SchedulingPolicy):
 
 
 class PriorityPolicy(SchedulingPolicy):
-    """Higher ``Request.priority`` first; FIFO within a priority level."""
+    """Higher ``Request.priority`` first; FIFO within a priority level.
+    With aging on (default one level per ``aging_s=30``), a long-waiting
+    low-priority request climbs one level per quantum waited, so sustained
+    high-priority load cannot starve it forever: a priority-0 request
+    outranks fresh priority-p arrivals after at most ``p * aging_s``."""
 
     name = "priority"
     preemptive = True
+    aging_s = 30.0
 
     def key(self, req: Request) -> Tuple:
-        return (-req.priority, req.arrival_time, req.request_id)
+        return (-(req.priority + self._age_boost(req)), req.arrival_time,
+                req.request_id)
 
 
 class EDFPolicy(SchedulingPolicy):
-    """Earliest-deadline-first.  Deadline-less requests sort behind every
-    deadline (``+inf``) and fall back to priority, then arrival order."""
+    """Earliest-deadline-first.  Deadline-less requests used to sort at
+    ``+inf`` (behind every deadline — unbounded starvation under sustained
+    deadline load); they now carry a *virtual deadline* of
+    ``arrival + aging_horizon_s``, so a batch request that has waited
+    close to the horizon sorts ahead of fresh tight-deadline arrivals.
+    The worst-case wait bound is therefore ``aging_horizon_s`` plus one
+    admission round.  Ties fall back to (aged) priority, then arrival."""
 
     name = "edf"
     preemptive = True
+    aging_s = 30.0
+    #: virtual deadline for deadline-less requests, seconds after arrival
+    #: (math.inf restores the pre-aging sort-behind-everything behaviour)
+    aging_horizon_s = 60.0
+
+    def __init__(self, aging_s: Optional[float] = None,
+                 aging_horizon_s: Optional[float] = None):
+        super().__init__(aging_s)
+        if aging_horizon_s is not None:
+            self.aging_horizon_s = aging_horizon_s
 
     def key(self, req: Request) -> Tuple:
         d = req.deadline_at
-        return (math.inf if d is None else d, -req.priority,
+        if d is None:
+            d = req.arrival_time + self.aging_horizon_s
+        return (d, -(req.priority + self._age_boost(req)),
                 req.arrival_time, req.request_id)
 
 
 POLICIES = {p.name: p for p in (FIFOPolicy, PriorityPolicy, EDFPolicy)}
 
 
-def make_policy(policy: Union[str, SchedulingPolicy, None]
-                ) -> SchedulingPolicy:
-    if policy is None:
-        return FIFOPolicy()
+def make_policy(policy: Union[str, SchedulingPolicy, None],
+                aging_s: Optional[float] = None) -> SchedulingPolicy:
     if isinstance(policy, SchedulingPolicy):
         return policy
+    if policy is None:
+        return FIFOPolicy()
     try:
-        return POLICIES[policy]()
+        cls = POLICIES[policy]
     except KeyError:
         raise ValueError(f"unknown scheduling policy {policy!r} "
                          f"(have: {sorted(POLICIES)})") from None
+    return cls(aging_s)
 
 
 # --------------------------------------------------------------------------- #
@@ -133,6 +184,8 @@ class SchedulerStats:
     preemptions: int = 0         # active slots evicted for urgent requests
     resumed: int = 0             # evicted requests resumed from a snapshot
     aborted: int = 0             # requests cancelled before finishing
+    failed: int = 0              # requests failed by per-request fault
+                                 # isolation (prefill/decode/codec errors)
 
     @property
     def host_syncs_per_token(self) -> float:
@@ -152,9 +205,10 @@ _LAT_WINDOW = 512
 
 class ContinuousBatchingScheduler:
     def __init__(self, max_batch: int,
-                 policy: Union[str, SchedulingPolicy, None] = None):
+                 policy: Union[str, SchedulingPolicy, None] = None,
+                 aging_s: Optional[float] = None):
         self.max_batch = max_batch
-        self.policy = make_policy(policy)
+        self.policy = make_policy(policy, aging_s)
         # pending is kept in arrival order; admission selects the policy
         # minimum (O(n) per admit — queues here are tens of requests, and a
         # heap would pessimise the dominant FIFO case for no measurable win)
@@ -299,20 +353,25 @@ class ContinuousBatchingScheduler:
     def has_prefill_work(self) -> bool:
         return bool(self.chunk_queue)
 
-    def plan_decode_block(self, max_block: int) -> int:
+    def plan_decode_block(self, max_block: int,
+                          reclaim_queued: bool = False) -> int:
         """Adaptive decode-block size K (tokens generated per host sync).
 
         K collapses to 1 while requests are waiting on free slots — or while
         prefill chunks are queued — so a retire is noticed (and the slot
         re-admitted) at the next token boundary, and a chunked prompt gets a
         prefill chunk between every pair of decode tokens: admission / TTFT
-        latency never grows with blocking.  Otherwise K is bounded by the
-        smallest remaining token budget across active slots (finished slots
-        would just burn masked decode steps) and by ``max_block``, rounded
-        down to a power of two so the engine compiles at most
-        log2(max_block)+1 block variants."""
+        latency never grows with blocking.  ``reclaim_queued`` collapses K
+        the same way while an abort or a preemption reclaim is waiting to
+        be applied (the EngineClient installs this hint — see
+        ``InferenceEngine.reclaim_hint``): a cancelled slot is then freed
+        within ~1 decode step instead of riding out a full block.
+        Otherwise K is bounded by the smallest remaining token budget
+        across active slots (finished slots would just burn masked decode
+        steps) and by ``max_block``, rounded down to a power of two so the
+        engine compiles at most log2(max_block)+1 block variants."""
         if max_block <= 1 or self.pending or self.chunk_queue \
-                or not self.active:
+                or reclaim_queued or not self.active:
             return 1
         rem = min(r.sampling.max_tokens - r.num_generated
                   for r in self.active.values())
@@ -401,6 +460,8 @@ class ContinuousBatchingScheduler:
             "preemptions": s.preemptions,
             "resumed": s.resumed,
             "aborted": s.aborted,
+            "failed": s.failed,
+            "aging_s": self.policy.aging_s,
             "latency_by_class": self.latency_by_class(),
         }
 

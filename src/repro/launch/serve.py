@@ -7,13 +7,31 @@ batching engine.
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
+import threading
 import time
 
 from repro.configs import get_config
+from repro.core.admission import AdmissionController, TenantConfig
 from repro.core.engine import InferenceEngine
+from repro.core.faults import FaultInjector, parse_fault_rates
 from repro.serving.api import OpenAIServer
 from repro.serving.client import EngineClient
 from repro.serving.server import ApiServer
+
+
+def parse_tenant_spec(spec: str) -> tuple:
+    """``name=weight[:rps[:tps]]`` → (name, TenantConfig)."""
+    if "=" not in spec:
+        raise ValueError(f"tenant spec {spec!r} must look like "
+                         "name=weight[:rps[:tps]]")
+    name, _, rest = spec.partition("=")
+    parts = rest.split(":")
+    weight = float(parts[0]) if parts[0] else 1.0
+    rps = float(parts[1]) if len(parts) > 1 and parts[1] else 0.0
+    tps = float(parts[2]) if len(parts) > 2 and parts[2] else 0.0
+    return name.strip(), TenantConfig(weight=weight, rps=rps, tps=tps)
 
 
 def main() -> None:
@@ -63,12 +81,60 @@ def main() -> None:
                     help="disable speculative wave filling (backfilling "
                          "prefill-wave padding rows with chunks of "
                          "not-yet-admitted pending requests)")
+    # -- overload protection (PR 6; DESIGN_overload_and_faults.md) ------- #
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable admission control entirely (no rate "
+                         "limits, no fair queue, no shedding — the "
+                         "engine's unbounded pending queue)")
+    ap.add_argument("--max-queue-depth", type=int, default=256,
+                    help="hard bound on waiting requests; beyond it every "
+                         "submit gets a structured 503 + Retry-After")
+    ap.add_argument("--queue-timeout", type=float, default=30.0,
+                    help="seconds a request may wait for admission before "
+                         "it expires with a typed 'timeout' finish "
+                         "(0 = never)")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="queue depth where batch-class shedding starts "
+                         "(default max-queue-depth/2)")
+    ap.add_argument("--shed-wait", type=float, default=10.0,
+                    help="estimated queue wait (s) that triggers "
+                         "batch-class shedding; 2x sheds everything "
+                         "(0 = depth thresholds only)")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="NAME=WEIGHT[:RPS[:TPS]]",
+                    help="per-tenant fair-share weight and rate limits "
+                         "(repeatable); requests select a tenant via the "
+                         "OpenAI 'user' field or x-tenant header")
+    ap.add_argument("--aging-s", type=float, default=None,
+                    help="anti-starvation aging horizon for priority/edf "
+                         "policies: a request's effective priority rises "
+                         "one level per aging-s seconds waited "
+                         "(default: policy-specific; 0 disables)")
+    ap.add_argument("--watchdog-timeout", type=float, default=60.0,
+                    help="flip /readyz and log loudly when one engine "
+                         "step wedges longer than this (0 = no watchdog)")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="graceful-drain budget on SIGTERM / /admin/drain: "
+                         "in-flight work gets this long to finish before "
+                         "live slots are snapshotted and aborted")
+    ap.add_argument("--fault-rate", action="append", default=[],
+                    metavar="SITE=P",
+                    help="chaos harness: deterministic fault injection "
+                         "rate per site (prefill/decode/codec/slow_step/"
+                         "pool; repeatable) — see core/faults.py")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault injector")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     print(f"loading {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
+    faults = None
+    rates = parse_fault_rates(args.fault_rate)
+    if rates:
+        faults = FaultInjector(seed=args.fault_seed, rates=rates)
+        print(f"chaos: fault injection active {rates} (seed {args.fault_seed})")
     engine = InferenceEngine(
         cfg, max_batch=args.max_batch, cache_len=args.cache_len,
         seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
@@ -80,15 +146,45 @@ def main() -> None:
         sched_policy=args.sched_policy,
         preemption=args.preemption,
         max_preemptions=args.max_preemptions,
-        speculative_fill=not args.no_spec_fill)
-    client = EngineClient(engine)
+        speculative_fill=not args.no_spec_fill,
+        aging_s=args.aging_s,
+        faults=faults)
+    admission = None
+    if not args.no_admission:
+        admission = AdmissionController(
+            tenants=dict(parse_tenant_spec(s) for s in args.tenant),
+            max_queue_depth=args.max_queue_depth,
+            queue_timeout_s=args.queue_timeout,
+            shed_queue_depth=args.shed_queue_depth,
+            shed_wait_s=args.shed_wait)
+    client = EngineClient(
+        engine, admission=admission,
+        watchdog_timeout_s=(args.watchdog_timeout
+                            if args.watchdog_timeout > 0 else None))
     server = ApiServer(OpenAIServer(client, cfg.name), port=args.port)
     server.start()
     print(f"listening on http://127.0.0.1:{server.port} "
-          "(chat + completions + models; stats: /stats)")
+          "(chat + completions + models; stats: /stats; health: /healthz "
+          "/readyz; drain: POST /admin/drain or SIGTERM)")
+
+    # SIGTERM → graceful drain: stop admitting, finish in-flight work
+    # (bounded by --drain-timeout), snapshot + abort the rest, exit 0
+    drained = threading.Event()
+
+    def _sigterm(_sig, _frm):
+        print(f"SIGTERM: draining (timeout {args.drain_timeout:g}s)...")
+        threading.Thread(
+            target=lambda: (client.drain(timeout=args.drain_timeout),
+                            drained.set()),
+            daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _sigterm)
     try:
-        while True:
-            time.sleep(3600)
+        while not drained.wait(timeout=1.0):
+            pass
+        print("drain complete; exiting")
+        server.stop()
+        sys.exit(0)
     except KeyboardInterrupt:
         server.stop()
         client.stop()

@@ -27,12 +27,14 @@ from a dropped SSE connection propagates into true engine cancellation).
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 import uuid
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 
+from repro.core.admission import AdmissionError
 from repro.core.engine import InferenceEngine
 from repro.core.request import GenerationRequest, PromptTooLongError, SamplingParams
 from repro.core.sampling import SamplingParamError, validate_sampling_params
@@ -54,6 +56,7 @@ class OpenAIError(Exception):
         param: Optional[str] = None,
         code: Optional[str] = None,
         status: int = 400,
+        retry_after: Optional[float] = None,
     ):
         super().__init__(message)
         self.message = message
@@ -61,6 +64,9 @@ class OpenAIError(Exception):
         self.param = param
         self.code = code
         self.status = status
+        # seconds until retrying makes sense (429/503 responses); the HTTP
+        # wrapper emits it as a ``Retry-After`` header
+        self.retry_after = retry_after
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -250,6 +256,12 @@ class OpenAIServer:
         deadline_ms = body.get("deadline_ms")
         if deadline_ms is not None:
             deadline_ms = _as_float(body, "deadline_ms", 0.0)
+        # admission-control tenant: the OpenAI ``user`` field (the HTTP
+        # wrapper also maps an ``x-tenant`` header here) keys per-tenant
+        # rate limits and the fair-share queue
+        user = body.get("user")
+        if user is not None and not isinstance(user, str):
+            raise OpenAIError("'user' must be a string", param="user")
         return GenerationRequest(
             prompt=prompt,
             sampling=sampling,
@@ -257,6 +269,7 @@ class OpenAIServer:
             images=list(images or []),
             priority=priority,
             deadline_ms=deadline_ms,
+            tenant=user or "default",
         )
 
     def _decode_chat(self, body: Dict[str, Any]) -> GenerationRequest:
@@ -295,10 +308,30 @@ class OpenAIServer:
     def _submit(self, greq: GenerationRequest) -> RequestHandle:
         try:
             return self.client.submit(greq)
+        except AdmissionError as e:
+            # overload rejection: structured 429/503 + Retry-After (never a
+            # hang, never a bare 500) — see core/admission.py
+            raise OpenAIError(
+                str(e),
+                etype=("rate_limit_error" if e.status == 429
+                       else "overloaded_error"),
+                code=e.code, status=e.status, retry_after=e.retry_after,
+            ) from e
         except PromptTooLongError as e:
             raise OpenAIError(str(e), code="context_length_exceeded") from e
         except ValueError as e:
             raise OpenAIError(str(e)) from e
+        except RuntimeError as e:
+            # drain completed / loop stopped but the socket is still open
+            # (the window between drain finishing and process exit): a 503
+            # envelope, not an unhandled 500
+            raise OpenAIError(
+                "server is shutting down; retry against another replica",
+                etype="overloaded_error",
+                code="shutting_down",
+                status=503,
+                retry_after=1.0,
+            ) from e
 
     # ------------------------------------------------------------------ #
     # response encoding
@@ -597,9 +630,13 @@ class OpenAIServer:
         counters, scheduling-policy counters (speculative fill, preemptions,
         per-class TTFT/e2e latency percentiles and deadline misses), abort
         counts, and the engine's knobs — the signals the prefill/decode
-        overlap and cancellation work are judged by in production."""
+        overlap and cancellation work are judged by in production.  With
+        overload protection attached (PR 6) the payload also carries the
+        admission snapshot (degradation level, queue depth, est. wait,
+        per-tenant shed/timeout/release counters), watchdog state, and the
+        fault-injection counters when a chaos run is active."""
         eng = self.engine
-        out = eng.scheduler.snapshot()
+        out = dict(self.client.stats())
         out.update(
             {
                 "model": self.model_name,
@@ -622,6 +659,45 @@ class OpenAIServer:
                 "misses": eng.prefix_cache.stats.misses,
             }
         return out
+
+    # ------------------------------------------------------------------ #
+    # health / readiness / drain (the operational surface)
+    # ------------------------------------------------------------------ #
+    def healthz(self) -> Tuple[Dict[str, Any], int]:
+        """Liveness: 200 while the engine loop thread is alive, 503 once it
+        has died (the fault boundaries make that effectively unreachable,
+        which is the point of probing it)."""
+        ok = self.client.alive
+        return {"status": "ok" if ok else "dead", "ok": ok}, (200 if ok else 503)
+
+    def readyz(self) -> Tuple[Dict[str, Any], int]:
+        """Readiness: 200 while the server should receive traffic; 503
+        while draining, wedged past the watchdog, or shedding all new
+        work — load balancers route away before clients see 503 bodies."""
+        ok = self.client.ready
+        out: Dict[str, Any] = {
+            "status": "ok" if ok else "not_ready",
+            "ok": ok,
+            "draining": self.client.draining,
+        }
+        if self.client._admission is not None:
+            snap = self.client._admission.snapshot()
+            out["level"] = snap["level_name"]
+            out["queue_depth"] = snap["queue_depth"]
+        return out, (200 if ok else 503)
+
+    def drain(self, timeout_s: float = 30.0) -> Dict[str, Any]:
+        """Initiate graceful drain (``POST /admin/drain``): returns
+        immediately; the drain (stop admitting → finish in-flight →
+        snapshot + abort leftovers at the deadline) proceeds on a
+        background thread.  Idempotent."""
+        already = self.client.draining
+        if not already:
+            threading.Thread(target=self.client.drain,
+                             kwargs={"timeout": timeout_s},
+                             daemon=True).start()
+        return {"status": "draining", "already_draining": already,
+                "timeout_s": timeout_s}
 
     def batch(self, bodies: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
         """Serve many chat requests concurrently (continuous batching)."""

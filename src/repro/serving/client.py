@@ -35,11 +35,15 @@ are thin codecs over this client — they never touch engine internals.
 from __future__ import annotations
 
 import asyncio
+import logging
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple, Union
 
+from repro.core.admission import (LEVEL_SHED_ALL, AdmissionController,
+                                  Overloaded)
 from repro.core.engine import InferenceEngine
 from repro.core.request import (
     FinishReason,
@@ -49,6 +53,8 @@ from repro.core.request import (
     StreamEvent,
 )
 
+log = logging.getLogger("repro.client")
+
 # lifecycle progress order used to aggregate a handle's per-choice states
 _PROGRESS = {
     RequestStatus.QUEUED: 0,
@@ -56,6 +62,7 @@ _PROGRESS = {
     RequestStatus.DECODING: 2,
     RequestStatus.FINISHED: 3,
     RequestStatus.ABORTED: 3,
+    RequestStatus.FAILED: 3,
 }
 
 
@@ -76,7 +83,7 @@ class FinishEvent:
     (incomplete UTF-8 bytes / unmatched stop-sequence prefix)."""
 
     index: int
-    finish_reason: str            # "stop" | "length" | "abort"
+    finish_reason: str    # "stop" | "length" | "abort" | "timeout" | "error"
     text: str = ""
 
 
@@ -177,6 +184,8 @@ class RequestHandle:
             return min(running, key=lambda s: _PROGRESS[s])
         if RequestStatus.ABORTED in states:
             return RequestStatus.ABORTED
+        if RequestStatus.FAILED in states:
+            return RequestStatus.FAILED
         return RequestStatus.FINISHED
 
     @property
@@ -253,17 +262,61 @@ class RequestHandle:
 
 
 class EngineClient:
-    """Thread-safe request-lifecycle front end that owns the engine."""
+    """Thread-safe request-lifecycle front end that owns the engine.
 
-    def __init__(self, engine: InferenceEngine, *, auto_start: bool = True):
+    Overload protection (PR 6, see DESIGN_overload_and_faults.md): with an
+    :class:`AdmissionController` attached, ``submit`` goes through it —
+    rate-limited / shed requests raise the typed 429/503
+    :class:`~repro.core.admission.AdmissionError` to the caller, admitted
+    ones wait in the fair queue and are *released* into the engine by the
+    loop thread at block boundaries (queue-wait expirations surface as
+    typed ``timeout`` finish events, never hangs).  A ``watchdog_timeout_s``
+    arms a sidecar thread that flips readiness when one ``engine.step()``
+    wedges; :meth:`drain` implements graceful shutdown.  The loop thread
+    itself never dies: engine-internal failures are contained per-request
+    at the engine's fault boundaries, and anything escaping them is logged
+    and survived here."""
+
+    def __init__(self, engine: InferenceEngine, *,
+                 admission: Optional[AdmissionController] = None,
+                 watchdog_timeout_s: Optional[float] = None,
+                 auto_start: bool = True):
         self.engine = engine
+        self._admission = admission
         self._cv = threading.Condition()
         self._handles: Dict[int, RequestHandle] = {}
         self._aborts: List[int] = []
         self._stop = False
         self._thread: Optional[threading.Thread] = None
+        # graceful-drain state machine: _draining stops new admissions,
+        # _drain_cutoff triggers the snapshot-and-abort path, _drained
+        # signals the caller that the loop is empty and parked
+        self._draining = False
+        self._drain_cutoff = False
+        self._drained = threading.Event()
+        # watchdog: _step_started is (re)stamped around every loop body;
+        # the sidecar thread flips _wedged when one body overruns
+        self.watchdog_timeout_s = watchdog_timeout_s
+        self._step_started: Optional[float] = None
+        self._wedged = False
+        self._watchdog_trips = 0
+        self._watchdog_thread: Optional[threading.Thread] = None
+        self._loop_errors = 0
+        # collapse the decode block to K=1 while an abort waits at the
+        # boundary, so its slot is reclaimed after one device step
+        engine.reclaim_hint = lambda: bool(self._aborts)
+        # default KV/capacity headroom probe for the degradation ladder:
+        # fraction of (decode slots + one engine-queue's worth) still free
+        if admission is not None and admission.headroom_fn is None:
+            admission.headroom_fn = self._headroom
         if auto_start:
             self.start()
+
+    def _headroom(self) -> float:
+        sched = self.engine.scheduler
+        cap = max(1, 2 * sched.max_batch)
+        used = sched.num_active + len(sched.pending)
+        return max(0.0, 1.0 - used / cap)
 
     # ------------------------------------------------------------------ #
     def start(self) -> None:
@@ -271,11 +324,18 @@ class EngineClient:
             return
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+        if self.watchdog_timeout_s is not None and self._watchdog_thread is None:
+            self._watchdog_thread = threading.Thread(target=self._watchdog_run,
+                                                     daemon=True)
+            self._watchdog_thread.start()
 
     def submit(self, request: Union[GenerationRequest, Request]) -> RequestHandle:
         """Validate + enqueue; returns the lifecycle handle immediately.
         Invalid requests (prompt too long, bad stop sequences, ...) raise
-        here, before anything is enqueued."""
+        here, before anything is enqueued.  With admission control
+        attached, rate-limited / shed requests raise the typed
+        :class:`~repro.core.admission.AdmissionError` (429/503 +
+        Retry-After) instead of queueing."""
         if isinstance(request, Request):
             reqs = [request]
         else:
@@ -284,15 +344,32 @@ class EngineClient:
         with self._cv:
             if self._stop:
                 raise RuntimeError("EngineClient is stopped")
+            if self._draining and self._admission is None:
+                raise Overloaded("server is draining; retry against "
+                                 "another replica", retry_after=1.0,
+                                 code="draining")
             admitted: List[Request] = []
             try:
-                for r in reqs:
-                    self.engine.add_request(r)
-                    admitted.append(r)
+                if self._admission is not None:
+                    # validation errors must raise here (not later on the
+                    # loop thread), so validate before admission queues it
+                    for r in reqs:
+                        self.engine.validate_request(r)
+                    for r in reqs:
+                        self._admission.submit(r)
+                        admitted.append(r)
+                else:
+                    for r in reqs:
+                        self.engine.add_request(r)
+                        admitted.append(r)
             except BaseException:
                 # roll back the partial fan-out so no orphan choice decodes
-                for r in admitted:
-                    self._aborts.append(r.request_id)
+                if self._admission is not None:
+                    for r in admitted:
+                        self._admission.drop(r.request_id)
+                else:
+                    for r in admitted:
+                        self._aborts.append(r.request_id)
                 self._cv.notify()
                 raise
             for r in reqs:
@@ -305,7 +382,37 @@ class EngineClient:
         return self.submit(request).result()
 
     def stats(self) -> Dict[str, object]:
-        return self.engine.scheduler.snapshot()
+        out = dict(self.engine.scheduler.snapshot())
+        out["draining"] = self._draining
+        out["loop_errors"] = self._loop_errors
+        out["watchdog"] = {
+            "timeout_s": self.watchdog_timeout_s,
+            "wedged": self._wedged,
+            "trips": self._watchdog_trips,
+        }
+        if self._admission is not None:
+            out["admission"] = self._admission.snapshot()
+        if self.engine.faults is not None:
+            out["faults"] = self.engine.faults.snapshot()
+        return out
+
+    # -- health / readiness (the /healthz and /readyz payloads) --------- #
+    @property
+    def alive(self) -> bool:
+        """Liveness: the loop thread exists and has not died."""
+        return self._thread is not None and self._thread.is_alive()
+
+    @property
+    def ready(self) -> bool:
+        """Readiness: alive, not wedged past the watchdog, not draining,
+        and not shedding all traffic — load balancers stop routing here
+        before the server falls over."""
+        if not self.alive or self._wedged or self._draining:
+            return False
+        if (self._admission is not None
+                and self._admission.level >= LEVEL_SHED_ALL):
+            return False
+        return True
 
     # ------------------------------------------------------------------ #
     def _request_abort(self, request_ids: List[int]) -> None:
@@ -317,23 +424,65 @@ class EngineClient:
         out, self._aborts = self._aborts, []
         return out
 
+    def _has_work_locked(self) -> bool:
+        if self.engine.scheduler.has_work:
+            return True
+        return (self._admission is not None
+                and self._admission.queue_depth > 0)
+
     def _run(self) -> None:
         engine = self.engine
         while True:
             with self._cv:
-                while not engine.scheduler.has_work and not self._aborts and not self._stop:
+                while (not self._has_work_locked() and not self._aborts
+                       and not self._stop and not self._drain_cutoff
+                       and not self._draining):
                     self._cv.wait(timeout=0.5)
                 if self._stop:
                     self._shutdown_locked()
+                    self._drained.set()
                     return
+                if (self._draining and not self._drain_cutoff
+                        and not self._has_work_locked() and not self._aborts):
+                    # drain complete: everything in flight finished and the
+                    # admission queue is empty — park and signal drain()
+                    self._drained.set()
+                    self._cv.wait(timeout=0.5)
+                    continue
+                cutoff, self._drain_cutoff = self._drain_cutoff, False
                 aborts = self._drain_aborts_locked()
             events: List[StreamEvent] = []
-            # aborts land at the block boundary, before the next admission
-            # plan — the freed slot is reusable in this very step
-            for rid in aborts:
-                events.extend(engine.abort(rid))
-            if engine.scheduler.has_work:
-                events.extend(engine.step())
+            self._step_started = time.monotonic()
+            try:
+                # aborts land at the block boundary, before the next
+                # admission plan — the freed slot is reusable in this very
+                # step; a request still waiting at admission is dropped
+                # there instead
+                for rid in aborts:
+                    dropped = (self._admission.drop(rid)
+                               if self._admission is not None else None)
+                    if dropped is not None:
+                        events.extend(self._finish_unstarted(
+                            dropped, FinishReason.ABORT,
+                            RequestStatus.ABORTED))
+                    else:
+                        events.extend(engine.abort(rid))
+                if self._admission is not None:
+                    events.extend(self._admission_round())
+                if cutoff:
+                    events.extend(self._drain_cutoff_events())
+                elif engine.scheduler.has_work:
+                    events.extend(engine.step())
+            except Exception:
+                # last-resort fault isolation: request-scoped failures are
+                # already contained at the engine's own boundaries (typed
+                # ERROR events); anything reaching here is a harness bug —
+                # log it and keep the loop alive (liveness over silence)
+                log.exception("engine loop error (loop survives)")
+                self._loop_errors += 1
+                time.sleep(0.05)        # no hot spin on persistent failure
+            finally:
+                self._step_started = None
             with self._cv:
                 for ev in events:
                     handle = self._handles.get(ev.request_id)
@@ -341,6 +490,110 @@ class EngineClient:
                         handle._on_event(ev)
                         if ev.finished:
                             del self._handles[ev.request_id]
+                if cutoff:
+                    self._drained.set()
+            if cutoff:
+                return
+
+    @staticmethod
+    def _finish_unstarted(req: Request, reason: FinishReason,
+                          status: RequestStatus,
+                          error: Optional[str] = None) -> List[StreamEvent]:
+        """Terminal event for a request that never reached the engine
+        (still in the admission queue): queue-wait timeout, abort-before
+        -release, or drain cutoff."""
+        req.finish_reason = reason
+        req.status = status
+        req.finish_time = time.monotonic()
+        req.error = error
+        return [StreamEvent(req.request_id, None, "", finished=True,
+                            finish_reason=reason)]
+
+    def _admission_round(self) -> List[StreamEvent]:
+        """One fair-release round: expire overdue waiters (typed ``timeout``
+        finish events) and release up to the engine's queue headroom in
+        weighted-fair order."""
+        sched = self.engine.scheduler
+        capacity = max(0, sched.max_batch - len(sched.pending))
+        ready, expired = self._admission.poll(capacity)
+        events: List[StreamEvent] = []
+        for req in expired:
+            events.extend(self._finish_unstarted(
+                req, FinishReason.TIMEOUT, RequestStatus.FAILED,
+                error=(f"queue-wait timeout after "
+                       f"{self._admission.queue_timeout_s:g}s")))
+        for req in ready:
+            try:
+                self.engine.add_request(req)
+            except Exception as e:   # pre-validated, so effectively dead code
+                events.extend(self._finish_unstarted(
+                    req, FinishReason.ERROR, RequestStatus.FAILED,
+                    error=str(e)))
+        return events
+
+    def _drain_cutoff_events(self) -> List[StreamEvent]:
+        """Drain timeout hit: snapshot + abort everything still in the
+        engine, and terminate whatever is still waiting at admission."""
+        events = list(self.engine.drain_snapshot())
+        if self._admission is not None:
+            ready, expired = self._admission.poll(1 << 30)
+            for req in expired:
+                events.extend(self._finish_unstarted(
+                    req, FinishReason.TIMEOUT, RequestStatus.FAILED,
+                    error="queue-wait timeout at drain"))
+            for req in ready:
+                events.extend(self._finish_unstarted(
+                    req, FinishReason.ABORT, RequestStatus.ABORTED))
+        return events
+
+    def _watchdog_run(self) -> None:
+        """Sidecar thread: detect a wedged ``engine.step()`` (a single loop
+        body overrunning ``watchdog_timeout_s``).  A Python thread cannot
+        be safely killed, so the watchdog's contract is *visibility*: flip
+        readiness (load balancers route away), log loudly, and recover
+        automatically when the step completes."""
+        timeout = self.watchdog_timeout_s
+        interval = max(0.005, min(0.5, timeout / 4))
+        while not self._stop:
+            t0 = self._step_started
+            if t0 is not None and time.monotonic() - t0 > timeout:
+                if not self._wedged:
+                    self._wedged = True
+                    self._watchdog_trips += 1
+                    log.error(
+                        "engine step wedged for > %.3fs (watchdog): "
+                        "readiness flips until the step completes", timeout)
+            else:
+                self._wedged = False
+            time.sleep(interval)
+
+    def drain(self, timeout: Optional[float] = 30.0) -> bool:
+        """Graceful drain (SIGTERM / ``POST /admin/drain``): stop admitting
+        new work (``submit`` 503s with code ``draining``, ``/readyz``
+        flips), let in-flight requests finish, then stop the loop.  If they
+        have not finished within ``timeout`` seconds, every live slot is
+        snapshotted to the prefix cache (exact-sequence entries — a warm
+        restart resumes the work) and every open request is terminated with
+        its typed event, so no client hangs across shutdown.  Returns True
+        when the drain completed without the cutoff.  Idempotent."""
+        with self._cv:
+            if not self._draining:
+                self._draining = True
+                if self._admission is not None:
+                    self._admission.start_drain()
+            self._cv.notify_all()
+        finished = self._drained.wait(timeout)
+        if not finished:
+            with self._cv:
+                self._drain_cutoff = True
+                self._cv.notify_all()
+            self._drained.wait(10.0)
+        self.stop()
+        return finished
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
 
     def _shutdown_locked(self) -> None:
         """Terminate every in-flight consumer with an ABORT finish event

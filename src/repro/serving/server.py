@@ -2,9 +2,17 @@
 
 Routes: ``POST /v1/chat/completions`` and ``POST /v1/completions`` (with
 ``"stream": true`` -> SSE; bodies may carry the scheduling extensions
-``priority`` and ``deadline_ms``), ``GET /v1/models`` and ``GET /stats``
-(scheduler queue depth / oldest wait / admission-pipeline counters /
-per-class latency percentiles / abort counts).
+``priority`` and ``deadline_ms``, the OpenAI ``user`` field or an
+``x-tenant`` header selects the admission-control tenant), ``GET
+/v1/models`` and ``GET /stats`` (scheduler queue depth / oldest wait /
+admission + overload + fault counters / per-class latency percentiles /
+abort counts), ``GET /healthz`` (liveness), ``GET /readyz`` (readiness —
+503 while draining / wedged / shedding), and ``POST /admin/drain``
+(graceful drain; returns immediately).
+
+Overload rejections (per-tenant rate limits, bounded queue, degradation
+ladder — core/admission.py) surface as structured 429/503 envelopes with
+a ``Retry-After`` header, never hangs.
 
 Every error — bad JSON, unknown route, invalid request, engine rejection —
 is the structured OpenAI envelope ``{"error": {message, type, param,
@@ -32,16 +40,22 @@ def make_handler(api: OpenAIServer):
         def log_message(self, *a):  # quiet
             pass
 
-        def _send_json(self, obj, code=200):
+        def _send_json(self, obj, code=200, headers=None):
             body = json.dumps(obj).encode()
             self.send_response(code)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
 
         def _send_error(self, err: OpenAIError):
-            self._send_json(err.to_dict(), err.status)
+            headers = {}
+            if err.retry_after is not None:
+                # overload rejections carry the bucket/queue-derived hint
+                headers["Retry-After"] = str(max(1, int(err.retry_after + 0.5)))
+            self._send_json(err.to_dict(), err.status, headers)
 
         def _not_found(self):
             self._send_error(
@@ -55,6 +69,12 @@ def make_handler(api: OpenAIServer):
                 # queue depth / oldest wait / admission + abort counters —
                 # the production view of overlap and cancellation behaviour
                 self._send_json(api.stats())
+            elif self.path == "/healthz":
+                payload, code = api.healthz()
+                self._send_json(payload, code)
+            elif self.path == "/readyz":
+                payload, code = api.readyz()
+                self._send_json(payload, code)
             else:
                 self._not_found()
 
@@ -90,6 +110,14 @@ def make_handler(api: OpenAIServer):
                 chunks.close()
 
         def do_POST(self):
+            if self.path == "/admin/drain":
+                try:
+                    body = self._read_body()
+                    timeout = float(body.get("timeout_s", 30.0))
+                    self._send_json(api.drain(timeout), 202)
+                except OpenAIError as e:
+                    self._send_error(e)
+                return
             routes = {
                 "/v1/chat/completions": (
                     api.chat_completion,
@@ -104,6 +132,11 @@ def make_handler(api: OpenAIServer):
             blocking, streaming = route
             try:
                 body = self._read_body()
+                # the x-tenant header maps to the OpenAI `user` field (the
+                # admission-control tenant key); an explicit body field wins
+                tenant = self.headers.get("x-tenant")
+                if tenant and "user" not in body:
+                    body["user"] = tenant
                 if body.get("stream"):
                     self._stream_sse(streaming(body))
                 else:

@@ -1,0 +1,260 @@
+"""Chaos harness: deterministic fault injection (core/faults.py) and the
+engine/client fault-isolation contract.
+
+Pins the PR 6 robustness guarantees: every injected failure is request-
+scoped (one typed ERROR finish; neighbour slots continue *bit-identically*
+to a fault-free run), transient pool faults retry instead of dropping
+work, a catastrophic decode-block failure rebuilds device buffers without
+killing the loop, wedged steps trip the client watchdog's readiness flip,
+and graceful drain stops admission while finishing in-flight work.
+"""
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.faults import (SITES, FaultInjector, InjectedFault,
+                               parse_fault_rates)
+from repro.core.request import FinishReason, Request, SamplingParams
+from repro.serving.client import EngineClient
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def _reqs(n, base_id, max_tokens=6):
+    """Requests with pinned ids so (seed, site, request_id) fault draws —
+    and therefore which requests fail — do not depend on how many requests
+    earlier tests happened to allocate from the global id counter."""
+    return [Request(prompt_tokens=TOK.encode(f"chaos prompt {i} " + "pad " * i),
+                    sampling=SamplingParams(max_tokens=max_tokens),
+                    request_id=base_id + i)
+            for i in range(n)]
+
+
+def _engine(cfg, faults=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("cache_len", 128)
+    kw.setdefault("enable_prefix_cache", False)
+    kw.setdefault("enable_content_cache", False)
+    return InferenceEngine(cfg, faults=faults, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# the injector itself
+# --------------------------------------------------------------------------- #
+def test_injector_is_deterministic_and_replayable():
+    a = FaultInjector(seed=7, rates={"decode": 0.5})
+    b = FaultInjector(seed=7, rates={"decode": 0.5})
+    draws = [(rid, pos) for rid in range(20) for pos in range(5)]
+    assert ([a.fires("decode", r, p) for r, p in draws]
+            == [b.fires("decode", r, p) for r, p in draws])
+    fired = sum(1 for r, p in draws if b.fires("decode", r, p))
+    assert 0 < fired < len(draws)           # ~50% rate actually branches
+    c = FaultInjector(seed=8, rates={"decode": 0.5})
+    assert ([a.fires("decode", r, p) for r, p in draws]
+            != [c.fires("decode", r, p) for r, p in draws])  # seed matters
+
+
+def test_injector_validates_sites_and_rates():
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"nonsense": 0.5})
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"decode": 1.5})
+    assert parse_fault_rates(["decode=0.05", "pool = 0.2"]) == {
+        "decode": 0.05, "pool": 0.2}
+    with pytest.raises(ValueError):
+        parse_fault_rates(["decode:0.05"])
+    inert = FaultInjector()
+    assert not inert.active
+    assert not inert.fires("decode", 1, 2)
+    with pytest.raises(InjectedFault):
+        FaultInjector(rates={"prefill": 1.0}).check("prefill", 1)
+
+
+def test_injector_snapshot_counts_fired_and_checked():
+    inj = FaultInjector(seed=0, rates={"prefill": 1.0, "decode": 0.0})
+    inj.fires("prefill", 1)
+    inj.fires("prefill", 2)
+    snap = inj.snapshot()
+    assert snap["prefill"] == {"fired": 2, "checked": 2}
+    assert set(snap) <= set(SITES)
+
+
+# --------------------------------------------------------------------------- #
+# request-scoped fault isolation + survivor bit-exactness
+# --------------------------------------------------------------------------- #
+def _finished_ok(req):
+    return req.finish_reason in (FinishReason.STOP, FinishReason.LENGTH)
+
+
+@pytest.mark.parametrize("site,err_match", [
+    ("prefill", "prefill"),
+    ("decode", "corrupt token"),
+    ("codec", "codec failure"),
+])
+def test_survivors_bit_identical_to_fault_free_run(cfg, site, err_match):
+    """A chaos run at each request-scoped site fails *some* requests with
+    a typed ERROR and leaves every survivor's greedy output token-for-token
+    identical to a clean run — the per-request fault boundary never leaks
+    into neighbour slots of the same compiled block/wave."""
+    base = 910_000 + 1000 * SITES.index(site)
+    clean = _engine(cfg)
+    baseline = {r.request_id: list(r.output_tokens)
+                for r in clean.generate(_reqs(6, base))}
+    assert all(baseline.values())
+
+    chaotic = _engine(cfg, faults=FaultInjector(seed=3, rates={site: 0.25}))
+    out = chaotic.generate(_reqs(6, base))
+    failed = [r for r in out if r.finish_reason == FinishReason.ERROR]
+    survivors = [r for r in out if _finished_ok(r)]
+    assert failed and survivors, (
+        f"seed/rate must split the batch, got {len(failed)} failed "
+        f"/ {len(survivors)} survived")    # deterministic: ids are pinned
+    for r in failed:
+        assert err_match in (r.error or "")
+    for r in survivors:
+        assert r.output_tokens == baseline[r.request_id], (
+            f"survivor {r.request_id} diverged next to a {site} fault")
+    assert chaotic.faults.snapshot()[site]["fired"] == len(failed)
+    # the loop survives chaos: the same engine serves clean traffic after
+    chaotic.faults = None
+    again = chaotic.generate(_reqs(2, base + 500))
+    assert all(_finished_ok(r) for r in again)
+
+
+def test_pool_fault_is_transient_never_drops_work(cfg):
+    """Slot-allocation faults leave the request pending and retry next
+    step: with a 50% pool fault rate every request still finishes."""
+    eng = _engine(cfg, faults=FaultInjector(seed=1, rates={"pool": 0.5}))
+    out = eng.generate(_reqs(6, 920_000))
+    assert all(_finished_ok(r) for r in out)
+    assert eng.faults.snapshot()["pool"]["fired"] > 0
+
+
+def test_decode_block_failure_rebuilds_and_loop_survives(cfg):
+    """A *catastrophic* block failure (the compiled fn itself throws, e.g.
+    a device OOM) fails the live slots with typed ERRORs, rebuilds the
+    donated device buffers, and keeps serving: pending requests survive
+    and a follow-up batch runs clean on the same engine."""
+    eng = _engine(cfg, max_batch=2)
+    reqs = _reqs(4, 930_000)                # 2 live + 2 pending at the boom
+    for r in reqs:
+        eng.add_request(r)
+    while not eng._live_slots:              # prefill until slots decode
+        eng.step()
+    real = eng._decode_block_fn
+    state = {"armed": True}
+
+    def exploding(*a, **kw):
+        if state["armed"]:
+            state["armed"] = False
+            raise RuntimeError("injected device OOM")
+        return real(*a, **kw)
+
+    eng._decode_block_fn = exploding
+    while eng.scheduler.has_work:
+        eng.step()
+    errored = [r for r in reqs if r.finish_reason == FinishReason.ERROR]
+    finished = [r for r in reqs if _finished_ok(r)]
+    assert errored, "live slots must fail typed when the block dies"
+    assert finished, "pending requests must survive the rebuild"
+    for r in errored:
+        assert "decode block failed" in (r.error or "")
+    after = eng.generate(_reqs(2, 930_500))
+    assert all(_finished_ok(r) for r in after)
+
+
+# --------------------------------------------------------------------------- #
+# client-level: watchdog + graceful drain under faults
+# --------------------------------------------------------------------------- #
+def _greq(text, max_tokens=4):
+    return Request(prompt_tokens=TOK.encode(text),
+                   sampling=SamplingParams(max_tokens=max_tokens))
+
+
+def test_slow_step_trips_watchdog_readiness(cfg):
+    """An injected wedged step (slow_step site) flips ``ready`` via the
+    watchdog while the step overruns, and recovers once steps complete."""
+    inj = FaultInjector(seed=0, rates={"slow_step": 1.0}, slow_step_s=0.25)
+    eng = _engine(cfg, faults=inj)
+    client = EngineClient(eng, watchdog_timeout_s=0.05)
+    try:
+        h = client.submit(_greq("wedge me", max_tokens=8))
+        saw_unready = False
+        deadline = time.monotonic() + 10.0
+        while not h.finished and time.monotonic() < deadline:
+            if client.alive and not client.ready:
+                saw_unready = True
+            time.sleep(0.005)
+        assert h.finished, "request never finished under slow steps"
+        assert saw_unready, "watchdog never flipped readiness"
+        assert client.stats()["watchdog"]["trips"] >= 1
+        eng.faults = None                   # steps fast again -> recovers
+        client.submit(_greq("fast again")).result(timeout=10.0)
+        assert client.ready
+    finally:
+        eng.faults = None
+        client.stop()
+
+
+def test_drain_finishes_in_flight_and_rejects_new_work(cfg):
+    import threading
+
+    from repro.core.admission import AdmissionController, Overloaded
+    eng = _engine(cfg)
+    client = EngineClient(eng, admission=AdmissionController())
+    h = client.submit(_greq("finish me before the lights go out",
+                            max_tokens=32))
+    outcome = {}
+    t = threading.Thread(
+        target=lambda: outcome.setdefault("clean", client.drain(timeout=30.0)))
+    t.start()
+    while not client.draining:              # flag flips before the wait
+        time.sleep(0.001)
+    assert not client.ready
+    with pytest.raises(Overloaded) as ei:   # drain window: typed 503
+        client.submit(_greq("too late"))
+    assert ei.value.code == "draining"
+    t.join(timeout=60.0)
+    assert outcome["clean"], "drain hit the cutoff instead of finishing"
+    assert h.result(timeout=10.0).choices[0].finish_reason in ("stop",
+                                                               "length")
+    assert not client.alive                 # loop stopped after the drain
+    with pytest.raises(RuntimeError):       # post-drain: client is stopped
+        client.submit(_greq("way too late"))
+    # through the codec the stopped client is still a 503 envelope, not an
+    # unhandled 500 (the socket outlives the drain until process exit)
+    from repro.serving.api import OpenAIError, OpenAIServer
+    with pytest.raises(OpenAIError) as codec_err:
+        OpenAIServer(client, "toy").chat_completion(
+            {"messages": [{"role": "user", "content": "x"}], "max_tokens": 2})
+    assert codec_err.value.status == 503
+    assert codec_err.value.code == "shutting_down"
+
+
+def test_chaos_churn_under_client_is_fully_accounted(cfg):
+    """End-to-end mini chaos run through the client: mixed fault sites at
+    high rates, every submitted request ends in exactly one typed state,
+    and the loop stays alive throughout."""
+    inj = FaultInjector(seed=5, rates={"prefill": 0.15, "decode": 0.1,
+                                       "codec": 0.1, "pool": 0.2})
+    eng = _engine(cfg, faults=inj)
+    client = EngineClient(eng)
+    try:
+        handles = [client.submit(_greq(f"churn {i} " + "x " * i))
+                   for i in range(12)]
+        results = [h.result(timeout=30.0) for h in handles]
+        assert client.alive
+        reasons = {c.finish_reason for r in results for c in r.choices}
+        assert reasons <= {"stop", "length", "error"}
+        assert None not in reasons
+    finally:
+        eng.faults = None
+        client.stop()
