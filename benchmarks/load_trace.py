@@ -26,6 +26,17 @@ core/admission.py) at calibrated offered loads:
                         prefill/decode/codec/pool sites: the engine loop
                         must survive, survivors finish normally, and the
                         typed-outcome account still balances
+  * ``admit_2x_chaos_paged`` — the chaos overload against the *paged* KV
+                        engine (PR 7, DESIGN_paged_kv.md).  Capacity and
+                        the admission thresholds are recalibrated on the
+                        paged engine, whose KV-headroom probe reads real
+                        page occupancy (EngineClient._headroom →
+                        PagedKVPool.page_occupancy) instead of slot
+                        counts.  Afterwards every request the shed
+                        decisions let through is replayed on the same
+                        engine, fault-free: the replay must be
+                        **bit-identical** — shedding and paging may choose
+                        *who* gets served, never change *what* they get
 
 Capacity is calibrated on the same engine/workload mix right before the
 variants run (back-to-back saturated batch, requests/s), so offered-load
@@ -95,7 +106,13 @@ VARIANTS = [
     ("admit_1x", 1.0, True, False),
     ("admit_2x", 2.0, True, False),
     ("admit_2x_chaos", 2.0, True, True),
+    ("admit_2x_chaos_paged", 2.0, True, True),
 ]
+
+#: served requests replayed fault-free after the paged chaos variant for
+#: the bit-identity assertion (capped to bound bench wall time; the cap is
+#: logged so a short replay never reads as full coverage)
+REPLAY_CAP = 12
 
 SMOKE = dict(duration_s=2.0, cal_requests=24, inter_prompt=16, inter_tokens=4,
              batch_prompt=48, batch_tokens=8, cache_len=128, prefill_chunk=32)
@@ -381,6 +398,33 @@ def _run_variant(tag: str, engine: InferenceEngine, trace: List[TraceItem],
     return row
 
 
+def _replay_served(engine: InferenceEngine, trace: List[TraceItem]) -> dict:
+    """Chaos-replay assertion (PR 7, DESIGN_paged_kv.md): every request the
+    shed decisions let through and the chaos run finished is replayed
+    fault-free on the same paged engine — greedy outputs must come back
+    **bit-identical**.  Shedding under paging decides *who* gets served; it
+    must never change *what* the survivors get (COW sharing, page-pressure
+    preemption and arena recovery all preserve greedy numerics)."""
+    served = [it.req for it in trace
+              if it.req is not None and it.req.finish_reason is not None
+              and it.req.finish_reason.value in ("stop", "length")
+              and it.req.output_tokens]
+    sample = served[:REPLAY_CAP]
+    if len(served) > len(sample):
+        print(f"# replaying {len(sample)}/{len(served)} served requests "
+              "(REPLAY_CAP bounds bench wall time)")
+    fresh = [Request(prompt_tokens=list(r.prompt_tokens),
+                     sampling=SamplingParams(max_tokens=r.sampling.max_tokens))
+             for r in sample]
+    engine.generate(fresh)
+    for orig, rep in zip(sample, fresh):
+        assert rep.output_tokens == orig.output_tokens, (
+            f"request {orig.request_id} not bit-identical on fault-free "
+            "replay under paging — shed/chaos leaked into surviving work")
+    return {"replayed": len(sample), "served_finished": len(served),
+            "replay_bit_identical": True}
+
+
 def _admission(rate_rps: float, knobs: dict) -> AdmissionController:
     """Production-shaped controller scaled to the calibrated capacity:
     per-tenant rps caps at 3x the tenant's weight share (inert at 1x,
@@ -422,12 +466,39 @@ def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
     print(f"# calibrated capacity ~{rate_rps:.1f} req/s on the trace mix "
           f"(closed-loop hint {rate_hint:.1f})")
     rows = []
+    engine_paged, rate_paged = None, 0.0
     for tag, load_x, with_admission, with_chaos in VARIANTS:
+        eng, rate = engine, rate_rps
+        if tag.endswith("_paged"):
+            if engine_paged is None:
+                # the paged engine gets its own calibration: its capacity
+                # differs from the dense ring's, and through EngineClient
+                # the admission controller's KV-headroom probe reads real
+                # page occupancy (PagedKVPool.page_occupancy) instead of
+                # slot counts — thresholds must track that engine
+                engine_paged = InferenceEngine(
+                    cfg, params=params, max_batch=MAX_BATCH,
+                    cache_len=knobs["cache_len"],
+                    prefill_chunk=knobs["prefill_chunk"],
+                    speculative_fill=True, enable_prefix_cache=False,
+                    enable_content_cache=False,
+                    kv_layout="paged", kv_page_size=16)
+                engine_paged.generate(_mixed_requests(2 * MAX_BATCH, knobs))
+                calibrate_rps(engine_paged, knobs)   # client-path shapes
+                hint = calibrate_rps(engine_paged, knobs)
+                rate_paged = probe_capacity(engine_paged, hint, knobs)
+                print(f"# paged engine capacity ~{rate_paged:.1f} req/s "
+                      "(admission headroom reads page occupancy)")
+            eng, rate = engine_paged, rate_paged
         trace = build_trace(seed=42, duration_s=knobs["duration_s"],
-                            rate_rps=rate_rps * load_x)
-        admission = _admission(rate_rps, knobs) if with_admission else None
+                            rate_rps=rate * load_x)
+        admission = _admission(rate, knobs) if with_admission else None
         faults = FaultInjector(seed=0, rates=CHAOS_RATES) if with_chaos else None
-        row = _run_variant(tag, engine, trace, admission, faults, knobs)
+        row = _run_variant(tag, eng, trace, admission, faults, knobs)
+        if tag.endswith("_paged"):
+            row.update(_replay_served(eng, trace))
+            row["page_occupancy"] = eng.pool.page_occupancy()
+            row["kv_layout"] = "paged"
         rows.append(row)
         emit(f"load_trace/{tag}", 1e6 / max(row["tok_s"], 1e-6),
              f"goodput={row['tok_s']:.1f}tok_s "

@@ -1,0 +1,233 @@
+"""Paged-KV benchmark: concurrency at a fixed KV byte budget and COW
+prefix-hit admission (PR 7 acceptance gate — DESIGN_paged_kv.md).
+
+Two claims ride on the paged pool, and this suite measures both:
+
+* **Capacity** — the dense pool reserves ``cache_len`` KV cells per slot
+  whether or not a request uses them, so the slot count at a fixed KV byte
+  budget is budget / (cache_len * cell_bytes).  The paged pool allocates
+  16-token pages on demand, so short requests cost only the pages they
+  touch and the same bytes hold many more *live* slots.  Variants ``dense``
+  / ``paged`` / ``paged_int8`` run the same short-request workload against
+  the same KV byte budget; the gate asserts the paged pool sustains
+  **>= 2x** the dense pool's peak concurrent slots (measured from
+  ``scheduler.stats.peak_batch``, not computed from the config).  int8
+  pages (absmax/127 per (position, kv-head) + f32 scales) stretch the same
+  bytes ~``cell_bytes / (1 + 4/hd)``-fold further — reported as pages.
+
+* **COW admission** — a prefix-cache hit under paging admits by *mapping*
+  the cached pages into the new slot's table (refcount bump), while the
+  dense pool materialises a full cache-row copy.  ``admit_dense`` /
+  ``admit_paged_cow`` time the admission of a request sharing a long
+  cached prefix; the zero-copy claim is asserted on the allocator counters
+  (``full_copies == 0`` and fresh allocations bounded by the divergence
+  tail), never on timing.
+
+Emits ``BENCH_paged_kv.json`` (shared schema — benchmarks/validate.py).
+
+  PYTHONPATH=src python -m benchmarks.paged_kv [--smoke]
+  PYTHONPATH=src python -m benchmarks.run --only paged_kv
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+from benchmarks.common import TOK, bench_result, emit, get_params
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.paged_kv import PagedKVPool
+from repro.core.request import Request, SamplingParams
+
+ARCH = "qwen3-0.6b-toy"
+CACHE_LEN = 256
+PAGE_SIZE = 16
+DENSE_SLOTS = 4           # the fixed KV byte budget == this many dense slots
+PAGED_MAX_BATCH = 32      # slot-struct ceiling; pages are the real limit
+N_REQUESTS = 32
+PROMPT_LEN = 24           # short requests: ~2 pages live vs 16 reserved dense
+MAX_TOKENS = 8
+PREFIX_LEN = 192          # shared prefix for the COW admission measurement
+ADMIT_TRIALS = 5
+OUT = Path("BENCH_paged_kv.json")
+
+SMOKE = dict(cache_len=128, dense_slots=2, paged_max_batch=8, n_requests=8,
+             prompt_len=16, max_tokens=4, prefix_len=96, admit_trials=3)
+
+
+def _reqs(n: int, prompt_len: int, max_tokens: int):
+    out = []
+    for i in range(n):
+        body = f"paged bench req {i} " + "x" * prompt_len
+        out.append(Request(prompt_tokens=TOK.encode(body)[:prompt_len],
+                           sampling=SamplingParams(max_tokens=max_tokens)))
+    return out
+
+
+def _capacity_engine(cfg, variant: str, knobs: dict,
+                     budget_pages: int) -> InferenceEngine:
+    """Same KV byte budget for every variant: ``dense`` gets the slot count
+    the budget affords; paged variants get an arena holding exactly the
+    budget's bytes worth of pages (fp pages for ``paged``, smaller int8
+    pages for ``paged_int8``) and a generous slot-struct ceiling."""
+    common = dict(cache_len=knobs["cache_len"], enable_prefix_cache=False,
+                  enable_content_cache=False)
+    if variant == "dense":
+        return InferenceEngine(cfg, params=get_params(cfg),
+                               max_batch=knobs["dense_slots"], **common)
+    kv_dtype = "int8" if variant == "paged_int8" else "fp"
+    # probe at the engine's slot ceiling: ``reserved`` (trash cells +
+    # scratch) scales with max_batch and comes out of num_pages, so sizing
+    # it at max_batch=1 would shave real pages off the budget
+    probe = PagedKVPool(cfg, max_batch=knobs["paged_max_batch"],
+                        cache_len=knobs["cache_len"],
+                        page_size=PAGE_SIZE, kv_dtype=kv_dtype)
+    budget_bytes = budget_pages * _fp_page_bytes(cfg, knobs)
+    num_pages = probe.reserved + max(1, budget_bytes // probe.page_bytes)
+    return InferenceEngine(cfg, params=get_params(cfg),
+                           max_batch=knobs["paged_max_batch"],
+                           kv_layout="paged", kv_page_size=PAGE_SIZE,
+                           kv_num_pages=num_pages, kv_dtype=kv_dtype,
+                           **common)
+
+
+def _fp_page_bytes(cfg, knobs: dict) -> int:
+    probe = PagedKVPool(cfg, max_batch=1, cache_len=knobs["cache_len"],
+                        page_size=PAGE_SIZE, kv_dtype="fp")
+    return probe.page_bytes
+
+
+def _run_capacity(cfg, variant: str, knobs: dict) -> dict:
+    budget_pages = knobs["dense_slots"] * (knobs["cache_len"] // PAGE_SIZE)
+    eng = _capacity_engine(cfg, variant, knobs, budget_pages)
+    eng.generate(_reqs(2, knobs["prompt_len"], 2))       # compile
+    reqs = _reqs(knobs["n_requests"], knobs["prompt_len"],
+                 knobs["max_tokens"])
+    t0 = time.monotonic()
+    eng.generate(reqs)
+    wall = time.monotonic() - t0
+    toks = sum(r.num_generated for r in reqs)
+    assert toks == knobs["n_requests"] * knobs["max_tokens"], (
+        f"{variant}: requests failed under the page budget")
+    row = {
+        "variant": variant,
+        "kv_budget_bytes": budget_pages * _fp_page_bytes(cfg, knobs),
+        "peak_slots": eng.scheduler.stats.peak_batch,
+        "tok_s": toks / wall,
+        "requests": len(reqs),
+        "wall_s": wall,
+    }
+    if variant != "dense":
+        row["num_pages"] = eng.pool.num_pages - eng.pool.reserved
+        row["page_bytes"] = eng.pool.page_bytes
+        row["full_copies"] = eng.pool.stats.full_copies
+        assert eng.pool.stats.full_copies == 0
+    return row
+
+
+def _run_admission(cfg, variant: str, knobs: dict) -> dict:
+    """Median wall time of admitting (and decoding one token for) a request
+    whose first ``prefix_len`` tokens are already cached — the dense path
+    copies a full cache row, the paged path maps pages copy-on-write."""
+    paged = variant == "admit_paged_cow"
+    kw = (dict(kv_layout="paged", kv_page_size=PAGE_SIZE) if paged else {})
+    eng = InferenceEngine(cfg, params=get_params(cfg), max_batch=2,
+                          cache_len=knobs["cache_len"],
+                          enable_content_cache=False, **kw)
+    prefix = TOK.encode("shared " * knobs["prefix_len"])[:knobs["prefix_len"]]
+
+    def req(tag: str) -> Request:
+        return Request(prompt_tokens=prefix + TOK.encode(tag),
+                       sampling=SamplingParams(max_tokens=1))
+
+    eng.generate([req("prime")])                 # publish the prefix
+    eng.generate([req("warm")])                  # compile the resumed bucket
+    allocs_before = eng.pool.stats.allocs if paged else 0
+    times = []
+    hits = []
+    for i in range(knobs["admit_trials"]):
+        r = req(f"tail {i}!")
+        t0 = time.monotonic()
+        eng.generate([r])
+        times.append(time.monotonic() - t0)
+        hits.append(r.cached_prefix_len)
+    times.sort()
+    median = times[len(times) // 2]
+    assert min(hits) >= PAGE_SIZE, "prefix cache never hit — bench is void"
+    row = {
+        "variant": variant,
+        "admit_ms": median * 1e3,
+        "tok_s": min(hits) / median,     # admitted prefix tokens per second
+        "cached_prefix_len": min(hits),
+        "trials": knobs["admit_trials"],
+    }
+    if paged:
+        fresh = eng.pool.stats.allocs - allocs_before
+        tail_pages = -(-(len(prefix) + 8 - min(hits)) // PAGE_SIZE) + 1
+        assert eng.pool.stats.full_copies == 0, "COW admission copied!"
+        assert fresh <= knobs["admit_trials"] * tail_pages, (
+            f"COW admission allocated {fresh} fresh pages over "
+            f"{knobs['admit_trials']} trials — sharing is not happening")
+        row["fresh_pages_per_admit"] = fresh / knobs["admit_trials"]
+        row["full_copies"] = eng.pool.stats.full_copies
+        row["cow_splits"] = eng.pool.stats.cow_splits
+    return row
+
+
+def run(smoke: bool = False, out: Optional[Path] = None) -> dict:
+    knobs = dict(SMOKE) if smoke else dict(
+        cache_len=CACHE_LEN, dense_slots=DENSE_SLOTS,
+        paged_max_batch=PAGED_MAX_BATCH, n_requests=N_REQUESTS,
+        prompt_len=PROMPT_LEN, max_tokens=MAX_TOKENS,
+        prefix_len=PREFIX_LEN, admit_trials=ADMIT_TRIALS)
+    cfg = get_config(ARCH)
+    rows = []
+    for variant in ("dense", "paged", "paged_int8"):
+        row = _run_capacity(cfg, variant, knobs)
+        rows.append(row)
+        emit(f"paged_kv/{variant}", 1e6 / max(row["tok_s"], 1e-9),
+             f"peak_slots={row['peak_slots']} "
+             f"agg={row['tok_s']:.1f}tok_s "
+             f"kv_budget={row['kv_budget_bytes'] / 1e6:.1f}MB")
+    by = {r["variant"]: r for r in rows}
+    ratio = by["paged"]["peak_slots"] / max(by["dense"]["peak_slots"], 1)
+    assert ratio >= 2.0, (
+        f"paged pool sustained only {ratio:.1f}x the dense slot count at "
+        f"the same KV byte budget (gate: >= 2x)")
+    print(f"# concurrency at fixed KV bytes: dense "
+          f"{by['dense']['peak_slots']} slots, paged "
+          f"{by['paged']['peak_slots']} slots ({ratio:.1f}x, gate >= 2x), "
+          f"int8 {by['paged_int8']['peak_slots']} slots")
+
+    for variant in ("admit_dense", "admit_paged_cow"):
+        row = _run_admission(cfg, variant, knobs)
+        rows.append(row)
+        emit(f"paged_kv/{variant}", row["admit_ms"] * 1e3,
+             f"admit={row['admit_ms']:.2f}ms "
+             f"hit={row['cached_prefix_len']}tok")
+    by = {r["variant"]: r for r in rows}
+    print(f"# prefix-hit admission: dense copy "
+          f"{by['admit_dense']['admit_ms']:.2f}ms vs COW map "
+          f"{by['admit_paged_cow']['admit_ms']:.2f}ms "
+          f"(fresh pages/admit: "
+          f"{by['admit_paged_cow']['fresh_pages_per_admit']:.1f}, "
+          f"full copies: {by['admit_paged_cow']['full_copies']})")
+
+    result = bench_result(
+        "paged_kv",
+        ["dense", "paged", "paged_int8", "admit_dense", "admit_paged_cow"],
+        rows, arch=ARCH, smoke=smoke, page_size=PAGE_SIZE, **knobs)
+    path = out or OUT
+    path.write_text(json.dumps(result, indent=2))
+    print(f"# wrote {path}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI smoke gate")
+    run(smoke=ap.parse_args().smoke)

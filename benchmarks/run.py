@@ -11,10 +11,10 @@ import argparse
 import time
 
 from benchmarks import (decode_loop, fig2_concurrency, load_trace,
-                        prefill_overlap, sched_policy, table1_throughput,
-                        table2_mllm_cache, table3_video, table4_ablation,
-                        table5_resolution, table6_video_frames,
-                        table7_text_prefix)
+                        paged_kv, prefill_overlap, sched_policy,
+                        table1_throughput, table2_mllm_cache, table3_video,
+                        table4_ablation, table5_resolution,
+                        table6_video_frames, table7_text_prefix)
 from benchmarks.common import ROWS
 
 SUITES = [
@@ -23,6 +23,7 @@ SUITES = [
     ("prefill_overlap", prefill_overlap.run),
     ("sched_policy", sched_policy.run),
     ("load_trace", load_trace.run),
+    ("paged_kv", paged_kv.run),
     ("fig2", fig2_concurrency.run),
     ("table2", table2_mllm_cache.run),
     ("table3", table3_video.run),

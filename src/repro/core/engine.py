@@ -112,6 +112,8 @@ from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
                                  concat_cache_rows, init_decode_state,
                                  select_cache_slots, slice_cache_row,
                                  tree_bytes)
+from repro.core.paged_kv import (PagedKVPool, PagePoolExhausted,
+                                 select_cache_slots_paged)
 from repro.core.prefix_cache import TextPrefixCache
 from repro.core.request import (FinishReason, PromptTooLongError, Request,
                                 RequestStatus, StreamEvent)
@@ -216,6 +218,10 @@ class InferenceEngine:
         max_spec_jobs: Optional[int] = None,
         aging_s: Optional[float] = None,
         faults: Optional[FaultInjector] = None,
+        kv_layout: str = "dense",        # 'dense' ring | 'paged' arena (COW)
+        kv_page_size: int = 16,          # tokens per KV page (paged layout)
+        kv_num_pages: Optional[int] = None,  # arena size; None = full capacity
+        kv_dtype: str = "fp",            # 'fp' | 'int8' (paged layout only)
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -268,7 +274,21 @@ class InferenceEngine:
         else:
             self.ctx_len = 0
 
-        self.pool = SlotKVPool(cfg, max_batch, cache_len, ctx_len=self.ctx_len)
+        assert kv_layout in ("dense", "paged"), kv_layout
+        self._paged = kv_layout == "paged"
+        if self._paged:
+            self.pool: Any = PagedKVPool(
+                cfg, max_batch, cache_len, ctx_len=self.ctx_len,
+                page_size=kv_page_size, num_pages=kv_num_pages,
+                kv_dtype=kv_dtype)
+        else:
+            assert kv_dtype == "fp", "int8 KV requires kv_layout='paged'"
+            self.pool = SlotKVPool(cfg, max_batch, cache_len,
+                                   ctx_len=self.ctx_len)
+        # COW page leases pinned by in-flight prefill jobs (request_id ->
+        # page ids incref'd at prefix-cache lookup); ownership transfers to
+        # the slot at commit, or is released on job failure/termination
+        self._job_leases: Dict[int, List[int]] = {}
         self.scheduler = ContinuousBatchingScheduler(max_batch,
                                                      policy=sched_policy,
                                                      aging_s=aging_s)
@@ -283,7 +303,10 @@ class InferenceEngine:
         # the reclaim lands after at most one device step instead of K
         self.reclaim_hint: Optional[Callable[[], bool]] = None
         self.prefix_cache = (TextPrefixCache(prefix_block_size,
-                                             cache_max_bytes)
+                                             cache_max_bytes,
+                                             on_evict=(self._on_cache_evict
+                                                       if self._paged
+                                                       else None))
                              if enable_prefix_cache else None)
         self.content_cache = (ContentCache(cache_max_bytes,
                                            cache_embeddings=cache_vision_embeddings,
@@ -357,6 +380,7 @@ class InferenceEngine:
         model = self.model
         use_ctx = self.media_kind != "none"
         n_top = self.max_top_logprobs
+        paged = self._paged
 
         @functools.partial(jax.jit,
                            static_argnames=("num_steps", "want_logprobs"),
@@ -368,10 +392,19 @@ class InferenceEngine:
                 out = model.apply(
                     params, st.last_token[:, None], mode="decode",
                     positions=st.positions[:, None], cache=cache,
-                    ctx_valid=st.ctx_valid if use_ctx else None)
-                # frozen slots keep their previous cache bit-for-bit
-                cache = select_cache_slots(st.active, st.positions,
-                                           out.cache, cache)
+                    ctx_valid=st.ctx_valid if use_ctx else None,
+                    page_table=cache["page_table"] if paged else None,
+                    slot_active=st.active if paged else None)
+                # frozen slots keep their previous cache bit-for-bit: the
+                # dense path repairs the written ring cell after the fact,
+                # the paged path already redirected the write to the slot's
+                # reserved trash cell inside attention
+                if paged:
+                    cache = select_cache_slots_paged(st.active, st.positions,
+                                                     out.cache, cache)
+                else:
+                    cache = select_cache_slots(st.active, st.positions,
+                                               out.cache, cache)
                 # stateless per-token keys: the kernel folds the sampled
                 # token's position into each slot's base key (replay-stable
                 # across preemption/resume; independent of batch
@@ -609,6 +642,76 @@ class InferenceEngine:
         return (bytes.fromhex(req.media_set_digest)
                 if req.media_set_digest else b"")
 
+    # ------------------------------------------------------------------ #
+    # paged-KV bookkeeping (no-ops under the dense layout)
+    # ------------------------------------------------------------------ #
+    def _on_cache_evict(self, key: str, value: Any) -> None:
+        """Prefix-cache entry displaced (LRU squeeze, replacement, or forced
+        page-pressure eviction): release the device pages it leased."""
+        if isinstance(value, dict) and value.get("pages"):
+            self.pool.release_pages(value["pages"])
+
+    def _release_lease(self, request_id: int) -> None:
+        pages = self._job_leases.pop(request_id, None)
+        if pages:
+            self.pool.release_pages(pages)
+
+    def _release_snapshot_value(self, value: Any) -> None:
+        """Release a popped exact-sequence snapshot that will NOT be adopted
+        into a slot (terminated request, recovery)."""
+        if self._paged and isinstance(value, dict) and value.get("pages"):
+            self.pool.release_pages(value["pages"])
+
+    def _live_positions(self) -> Dict[int, int]:
+        """slot -> absolute position of its last sampled token (where the
+        next decode step writes KV) for every live slot."""
+        out = {}
+        for slot in self._live_slots:
+            req = self.scheduler.active.get(slot)
+            if req is not None:
+                out[slot] = (len(req.prompt_tokens) + req.num_generated - 1)
+        return out
+
+    def _ensure_paged_capacity(self, k_steps: int) -> None:
+        """Pressure ladder before a decode block: make the pages the block
+        will write exclusively owned (lazy tail allocation + COW splits).
+        On exhaustion, reclaim in escalating order — (1) evict prefix-cache
+        entries (their leases free real pages), (2) preempt the live slot
+        holding the most pages *without* a snapshot (a snapshot would pin
+        the very pages we need), (3) fail the last holdout with a typed
+        error.  Terminates: every rung either frees pages or shrinks the
+        live set."""
+        while not self.pool.ensure_decode_capacity(self._live_positions(),
+                                                   k_steps):
+            if self.prefix_cache is not None and \
+                    self.prefix_cache.evict_lru():
+                continue
+            live = self._live_positions()
+            if not live:
+                return
+            # preemption victims must be exactly rebuildable by re-prefill
+            # (same exemption as _plan_preemptions: a ring-wrapped history
+            # cannot be re-prefilled without leaking future cells)
+            eligible = [s for s in live
+                        if (len(self.scheduler.active[s].prompt_tokens)
+                            + self.scheduler.active[s].num_generated)
+                        <= self.pool.cache_len]
+            if len(live) > 1 and eligible:
+                victim = max(eligible,
+                             key=lambda s: len(self.pool.slot_pages(s)))
+                req = self.scheduler.active[victim]
+                log.warning("KV page pressure: preempting slot %d "
+                            "(request %d, %d pages) without snapshot",
+                            victim, req.request_id,
+                            len(self.pool.slot_pages(victim)))
+                self._evict(victim, snapshot=False)
+                continue
+            slot = max(live, key=lambda s: len(self.pool.slot_pages(s)))
+            req = self.scheduler.active[slot]
+            self._fault_events.extend(self._fail_request(
+                req.request_id,
+                f"KV page pool exhausted ({self.pool.num_pages} pages)"))
+
     def _bind_slot(self, slot: int, req: Request) -> None:
         """Attach an admitted request to its slot: restore an eviction
         snapshot (preempted request), adopt the request's speculative
@@ -666,30 +769,46 @@ class InferenceEngine:
             self._evict(vslot)
             self._admit_into_free_slots()
 
-    def _evict(self, slot: int) -> None:
+    def _evict(self, slot: int, *, snapshot: bool = True) -> None:
         """Evict a live decode slot for a more urgent pending request.
 
-        The slot's cache is snapshotted (a jit'd copy — safe against later
-        pool mutation) and published as an *exact-sequence* prefix-cache
-        entry keyed by prompt+generated history, so the evicted request's
-        work is never discarded: on re-admission the snapshot restores the
-        cache and decode state bit-for-bit (greedy decode continues exactly
-        as if never evicted).  If the prefix cache is disabled the snapshot
-        is held engine-side instead; if the entry is LRU-evicted under byte
-        pressure, resume falls back to re-prefilling the history."""
+        The slot's cache is snapshotted and published as an *exact-sequence*
+        prefix-cache entry keyed by prompt+generated history, so the evicted
+        request's work is never discarded: on re-admission the snapshot
+        restores the cache and decode state bit-for-bit (greedy decode
+        continues exactly as if never evicted).  Dense pools snapshot by
+        jit'd copy; paged pools snapshot by *reference* — the entry increfs
+        the slot's pages (zero copy) and resume adopts them back.  If the
+        prefix cache is disabled the snapshot is held engine-side instead;
+        if the entry is LRU-evicted under byte pressure, resume falls back
+        to re-prefilling the history.  ``snapshot=False`` (page-pressure
+        preemption) skips the snapshot entirely so the victim's pages
+        actually free."""
         req = self.scheduler.active[slot]
-        single = self.pool.read(slot)
         meta: Dict[str, Any] = {
             "cache": None,
             "ctx_valid": (np.asarray(self.state.ctx_valid[slot])
                           if self.media_kind != "none" else None),
         }
-        if self.prefix_cache is not None:
-            self.prefix_cache.insert_exact(
-                req.prompt_tokens + req.output_tokens, {"cache": single},
-                tree_bytes(single), salt=self._salt(req))
+        if self._paged:
+            value = None
+            if snapshot:
+                pages = list(self.pool.slot_pages(slot))
+                value = {"pages": pages, "nonkv": self.pool.read_nonkv(slot),
+                         "len": len(req.prompt_tokens) + req.num_generated}
+                nbytes = (self.pool.pages_nbytes(len(pages))
+                          + tree_bytes(value["nonkv"]))
+                self.pool.incref_pages(pages)
         else:
-            meta["cache"] = single
+            value = {"cache": self.pool.read(slot)}
+            nbytes = tree_bytes(value["cache"])
+        if value is not None:
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert_exact(
+                    req.prompt_tokens + req.output_tokens, value, nbytes,
+                    salt=self._salt(req))
+            else:
+                meta["cache"] = value
         self._evicted[req.request_id] = meta
         req.status = RequestStatus.QUEUED
         if self.prefix_cache is None:
@@ -700,6 +819,7 @@ class InferenceEngine:
             holders = [rid for rid, m in self._evicted.items()
                        if m["cache"] is not None]
             for rid in holders[:-self.pool.max_batch]:
+                self._release_snapshot_value(self._evicted[rid]["cache"])
                 self._evicted[rid]["cache"] = None
         self.scheduler.requeue(slot)
         self.pool.free(slot)
@@ -723,15 +843,18 @@ class InferenceEngine:
         meta = self._evicted.pop(req.request_id, None)
         if meta is None:
             return False
-        single = meta["cache"]
-        if single is None and self.prefix_cache is not None:
+        value = meta["cache"]
+        if value is None and self.prefix_cache is not None:
             value = self.prefix_cache.take_exact(
                 req.prompt_tokens + req.output_tokens, salt=self._salt(req))
-            if value is not None:
-                single = value["cache"]
-        if single is None:
+        if value is None:
             return False
-        self.pool.insert(slot, single)
+        if self._paged and "pages" in value:
+            # zero-copy resume: the snapshot's page refs transfer to the
+            # slot (take_exact popped the entry without firing on_evict)
+            self.pool.adopt(slot, value["pages"], value["nonkv"])
+        else:
+            self.pool.insert(slot, value["cache"])
         self._admit_rows_to_state(
             [(slot, req, req.output_tokens[-1],
               len(req.prompt_tokens) + req.num_generated - 1,
@@ -761,7 +884,24 @@ class InferenceEngine:
             value, matched = self.prefix_cache.lookup(
                 tokens, salt=salt, max_len=len(tokens) - 1)
             if value is not None:
-                single = value["cache"]
+                if "pages" in value:
+                    # paged entry: the dense shadow row resumes the prefill
+                    # pipeline (unchanged, bit-identical), while the entry's
+                    # full pages inside the match are leased COW — pinned
+                    # against LRU eviction until the commit transfers them
+                    # to the slot (zero cache-copy admission)
+                    single = value["dense"]
+                    ps = self.pool.page_size
+                    shared = list(value["pages"][:min(matched // ps,
+                                                      len(value["pages"]))])
+                    if shared:
+                        self.pool.incref_pages(shared)
+                        stale = self._job_leases.pop(req.request_id, None)
+                        if stale:        # re-opened job: drop the old lease
+                            self.pool.release_pages(stale)
+                        self._job_leases[req.request_id] = shared
+                else:
+                    single = value["cache"]
                 req.cached_prefix_len = matched
             else:
                 matched = 0
@@ -850,6 +990,7 @@ class InferenceEngine:
                     job.req.request_id, f"prefill wave failed: {exc}"))
             else:
                 self._spec_jobs.pop(job.req.request_id, None)
+                self._release_lease(job.req.request_id)
 
     def _backfill_groups(
             self, groups: Dict[Tuple[int, bool],
@@ -1046,8 +1187,11 @@ class InferenceEngine:
     def _commit_admissions(self, wave: List[_Admission]) -> List[StreamEvent]:
         """Land an admission wave: one compiled cache scatter, one decode-state
         scatter, then per-request stream/finish bookkeeping."""
-        self.pool.insert_many([a.slot for a in wave],
-                              [a.single_cache for a in wave])
+        if self._paged:
+            self._paged_insert_wave(wave)
+        else:
+            self.pool.insert_many([a.slot for a in wave],
+                                  [a.single_cache for a in wave])
         self._live_slots.update(a.slot for a in wave)
         events: List[StreamEvent] = []
         for a in wave:
@@ -1071,6 +1215,54 @@ class InferenceEngine:
             [(a.slot, a.req, a.first_token, a.seq_len, a.ctx_valid,
               not a.req.is_finished) for a in wave])
         return events
+
+    def _paged_insert_wave(self, wave: List[_Admission]) -> None:
+        """Paged admission: each row's COW-leased prefix pages map into the
+        slot's table with zero copies (the lease's refs transfer), fresh
+        pages are allocated only past the shared prefix, and the dense
+        prefill row scatters into those fresh pages alone.  On arena
+        exhaustion, prefix-cache entries are evicted (freeing their leased
+        pages) and the insert retried; leases are popped only after
+        success, so a failed commit still releases them via _terminate."""
+        slots = [a.slot for a in wave]
+        singles = [a.single_cache for a in wave]
+        consumed = [a.seq_len for a in wave]
+        shared = [self._job_leases.get(a.req.request_id, ())
+                  for a in wave]
+        while True:
+            try:
+                self.pool.insert_many(slots, singles, consumed=consumed,
+                                      shared=shared)
+                break
+            except PagePoolExhausted:
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.evict_lru():
+                    continue
+                raise
+        for a in wave:                  # lease ownership moved to the slot
+            self._job_leases.pop(a.req.request_id, None)
+        # Alg.2 publication at *commit* (the dense pool publishes at retire):
+        # the slot's full prompt pages are shared into the prefix cache now,
+        # so an identical prompt admitted while this one still decodes maps
+        # the same pages COW.  The dense shadow row keeps the prefill
+        # pipeline (chunked resume) dense and bit-identical.  A ring wrap
+        # never corrupts the entry: wrapping writes COW-split first.
+        if self.prefix_cache is None:
+            return
+        ps = self.pool.page_size
+        for a in wave:
+            req = a.req
+            toks = req.prompt_tokens + req.output_tokens[:-1]
+            assert len(toks) == a.seq_len
+            if len(toks) < self.prefix_cache.block_size:
+                continue
+            pub = list(self.pool.slot_pages(a.slot)[:a.seq_len // ps])
+            self.pool.incref_pages(pub)
+            value = {"pages": pub, "dense": a.single_cache, "len": a.seq_len}
+            nbytes = (self.pool.pages_nbytes(len(pub))
+                      + tree_bytes(a.single_cache))
+            self.prefix_cache.insert(toks, value, nbytes,
+                                     salt=self._salt(req))
 
     def _admit_rows_to_state(self, rows: List[Tuple[int, Request, int, int,
                                                     Optional[np.ndarray],
@@ -1193,6 +1385,7 @@ class InferenceEngine:
         wrapped = (len(req.prompt_tokens) + req.num_generated - 1
                    > self.pool.cache_len)
         if publish and self.prefix_cache is not None and not wrapped and \
+                not self._paged and \
                 len(req.prompt_tokens) >= self.prefix_cache.block_size:
             # salt from the digest stashed at admission — no media re-decode
             single = self.pool.read(slot)
@@ -1257,11 +1450,15 @@ class InferenceEngine:
                 req = req or job.req
         if req is None or req.is_finished:
             return []
+        self._release_lease(request_id)
         meta = self._evicted.pop(request_id, None)
-        if meta is not None and self.prefix_cache is not None:
-            # drop the preemption snapshot from the byte budget
-            self.prefix_cache.take_exact(
-                req.prompt_tokens + req.output_tokens, salt=self._salt(req))
+        if meta is not None:
+            # drop the preemption snapshot (byte budget / page leases)
+            self._release_snapshot_value(meta["cache"])
+            if self.prefix_cache is not None:
+                self._release_snapshot_value(self.prefix_cache.take_exact(
+                    req.prompt_tokens + req.output_tokens,
+                    salt=self._salt(req)))
         req.finish_reason = reason
         req.finish_time = time.monotonic()
         if reason is FinishReason.ABORT:
@@ -1300,8 +1497,25 @@ class InferenceEngine:
         # rebuild the pool's device cache; slot bookkeeping carries over
         # (slots still owned by mid-prefill requests stay marked used —
         # their wave commit scatters into the fresh buffers)
-        fresh = SlotKVPool(self.cfg, self.pool.max_batch,
-                           self.pool.cache_len, ctx_len=self.ctx_len)
+        if self._paged:
+            fresh: Any = PagedKVPool(
+                self.cfg, self.pool.max_batch, self.pool.cache_len,
+                ctx_len=self.ctx_len, page_size=self.pool.page_size,
+                num_pages=self.pool.num_pages, kv_dtype=self.pool.kv_dtype)
+            # every page lease died with the arena: prefix-cache entries and
+            # in-flight job leases point into the old allocator, so drop
+            # them without firing release callbacks (clear() is callback
+            # -free by design), and null paged snapshots the same way
+            if self.prefix_cache is not None:
+                self.prefix_cache.clear()
+            self._job_leases.clear()
+            for m in self._evicted.values():
+                if isinstance(m.get("cache"), dict) and \
+                        m["cache"].get("pages"):
+                    m["cache"] = None
+        else:
+            fresh = SlotKVPool(self.cfg, self.pool.max_batch,
+                               self.pool.cache_len, ctx_len=self.ctx_len)
         fresh._free = list(self.pool._free)
         fresh._used = set(self.pool._used)
         self.pool = fresh
@@ -1317,11 +1531,23 @@ class InferenceEngine:
         if self.prefix_cache is not None:
             for slot in sorted(self._live_slots):
                 req = self.scheduler.active[slot]
-                single = self.pool.read(slot)
-                self.prefix_cache.insert_exact(
-                    req.prompt_tokens + req.output_tokens,
-                    {"cache": single}, tree_bytes(single),
-                    salt=self._salt(req))
+                if self._paged:
+                    pages = list(self.pool.slot_pages(slot))
+                    nonkv = self.pool.read_nonkv(slot)
+                    self.pool.incref_pages(pages)
+                    self.prefix_cache.insert_exact(
+                        req.prompt_tokens + req.output_tokens,
+                        {"pages": pages, "nonkv": nonkv,
+                         "len": len(req.prompt_tokens) + req.num_generated},
+                        self.pool.pages_nbytes(len(pages))
+                        + tree_bytes(nonkv),
+                        salt=self._salt(req))
+                else:
+                    single = self.pool.read(slot)
+                    self.prefix_cache.insert_exact(
+                        req.prompt_tokens + req.output_tokens,
+                        {"cache": single}, tree_bytes(single),
+                        salt=self._salt(req))
         open_ids = [r.request_id for r in self.scheduler.active.values()]
         open_ids += [r.request_id
                      for r in self.scheduler.pending_in_order()]
@@ -1406,6 +1632,11 @@ class InferenceEngine:
             want_lp = any(r.sampling.logprobs
                           for s, r in self.scheduler.active.items()
                           if s in self._live_slots)
+            if self._paged:
+                # the block's KV writes must land on exclusively-owned
+                # pages: allocate tails / COW-split shared pages now, under
+                # the page-pressure ladder (can shrink _live_slots)
+                self._ensure_paged_capacity(num_steps)
             try:
                 cache, state, toks, lps = self._decode_block_fn(
                     self.params, self.pool.cache, self.state,

@@ -265,6 +265,7 @@ class SlotKVPool:
         self.cache = init_cache(cfg, max_batch, cache_len, ctx_len=ctx_len, dtype=dtype)
         self._free: List[int] = list(range(max_batch))[::-1]
         self._used: Set[int] = set()
+        self._zeros = None  # lazily-built shared zeros pytree (read-only)
 
     # ------------------------------------------------------------------ #
     @property
@@ -302,13 +303,18 @@ class SlotKVPool:
         return _read_slot(self.cache, slot=slot)
 
     def single_cache_zeros(self):
-        return init_cache(
-            self.cfg,
-            1,
-            self.cache_len,
-            ctx_len=self.ctx_len,
-            dtype=None if self.cfg.dtype is None else self.cfg.dtype,
-        )
+        """One shared zeros pytree per pool (callers never mutate in place;
+        every consumer is a functional jax op, so re-running ``init_cache``
+        per call only re-allocated identical device buffers)."""
+        if self._zeros is None:
+            self._zeros = init_cache(
+                self.cfg,
+                1,
+                self.cache_len,
+                ctx_len=self.ctx_len,
+                dtype=None if self.cfg.dtype is None else self.cfg.dtype,
+            )
+        return self._zeros
 
     @property
     def nbytes(self) -> int:

@@ -58,10 +58,19 @@ class LRUCache:
 
     def put(self, key: str, value: Any, nbytes: int) -> None:
         if key in self._store:
-            _, old = self._store.pop(key)
+            old_value, old = self._store.pop(key)
             self._bytes -= old
+            # a replaced value is as gone as an evicted one — fire the
+            # callback so resources it pins (e.g. paged-KV leases) are
+            # released; same-object re-puts skip (nothing was displaced)
+            if self._on_evict and old_value is not value:
+                self._on_evict(key, old_value)
         if nbytes > self.max_bytes:
-            return                               # would never fit; skip
+            # would never fit: dropped on the floor — still "evicted" from
+            # the resource-pinning point of view
+            if self._on_evict:
+                self._on_evict(key, value)
+            return
         self._store[key] = (value, nbytes)
         self._bytes += nbytes
         self.stats.insertions += 1
@@ -81,6 +90,21 @@ class LRUCache:
         entry = self._store.pop(key, None)
         if entry is not None:
             self._bytes -= entry[1]
+
+    def evict_lru(self) -> bool:
+        """Force-evict the least-recently-used entry (with callback + stats),
+        regardless of budget — used by the paged KV pool to reclaim device
+        pages held by cache entries when the page arena, not the host byte
+        budget, is the scarce resource.  Returns False on an empty cache."""
+        if not self._store:
+            return False
+        key, (value, nbytes) = self._store.popitem(last=False)
+        self._bytes -= nbytes
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += nbytes
+        if self._on_evict:
+            self._on_evict(key, value)
+        return True
 
     def keys(self) -> Iterator[str]:
         return iter(self._store.keys())

@@ -15,23 +15,31 @@ pair); eviction is byte-budget LRU.
 from __future__ import annotations
 
 import hashlib
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.lru import LRUCache
+
+#: digest-scheme version, baked into the chain seed: token blocks are packed
+#: as fixed-width little-endian int32 (constant-time per block) instead of
+#: the v1 ASCII join, so v1 keys can never alias v2 entries
+_SCHEME = b"prefix.v2:"
 
 
 def _h(prev: bytes, chunk: Sequence[int]) -> bytes:
     m = hashlib.sha256(prev)
-    m.update(b",".join(str(t).encode() for t in chunk))
+    m.update(np.asarray(chunk, "<i4").tobytes())
     return m.digest()
 
 
 class TextPrefixCache:
     def __init__(self, block_size: int = 16,
-                 max_bytes: int = 512 * 1024 * 1024):
+                 max_bytes: int = 512 * 1024 * 1024,
+                 on_evict: Optional[Callable[[str, Any], None]] = None):
         assert block_size >= 1
         self.block_size = block_size
-        self._lru = LRUCache(max_bytes=max_bytes)
+        self._lru = LRUCache(max_bytes=max_bytes, on_evict=on_evict)
 
     @property
     def stats(self):
@@ -45,7 +53,7 @@ class TextPrefixCache:
         """Hash-chain digests for every block-aligned prefix (ascending)."""
         bs = self.block_size
         out: List[bytes] = []
-        prev = hashlib.sha256(b"prefix:" + salt).digest()
+        prev = hashlib.sha256(_SCHEME + salt).digest()
         for i in range(0, len(tokens) - len(tokens) % bs, bs):
             prev = _h(prev, tokens[i:i + bs])
             out.append(prev)
@@ -87,7 +95,7 @@ class TextPrefixCache:
         collide.  Used for preemption snapshots, where a resume must match
         the full prompt+generated history bit-for-bit or not at all."""
         chain = self._chain(tokens, salt)
-        prev = chain[-1] if chain else hashlib.sha256(b"prefix:" + salt).digest()
+        prev = chain[-1] if chain else hashlib.sha256(_SCHEME + salt).digest()
         tail = tokens[len(tokens) - len(tokens) % self.block_size:]
         return _h(b"exact:" + prev, tail).hex()
 
@@ -128,3 +136,17 @@ class TextPrefixCache:
     def discard(self, key: str) -> None:
         """Drop a previously inserted entry (superseded partial prefix)."""
         self._lru.discard(key)
+
+    def evict_lru(self) -> bool:
+        """Force-evict the least-recently-used entry (firing ``on_evict``).
+        The paged KV pool calls this under page pressure: cache entries pin
+        device pages, so freeing the oldest entry releases real arena
+        capacity even when the host byte budget is nowhere near full."""
+        return self._lru.evict_lru()
+
+    def clear(self) -> None:
+        """Drop every entry *without* firing ``on_evict`` — used by the
+        catastrophic decode-block recovery path, where the page arena the
+        entries lease from is itself being rebuilt (releasing leases into a
+        dead allocator would be wrong in both directions)."""
+        self._lru.clear()

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas, quantize_int8  # noqa: F401
 from repro.kernels.ref import NEG_INF
@@ -172,6 +173,43 @@ def _decode_jnp(q, k_cache, v_cache, kv_valid):
     l = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
     out = jnp.einsum("bhgs,bshd->bhgd", p / l, v_cache.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_attention(
+    q: jax.Array,                   # [B, H, D]
+    k_pages: jax.Array,             # [N, ps, Hkv, D] page arena
+    v_pages: jax.Array,             # [N, ps, Hkv, D]
+    page_table: jax.Array,          # [B, P] int32
+    positions: jax.Array,           # [B] int32 query-token positions
+    *,
+    k_scale: Optional[jax.Array] = None,   # [N, ps, Hkv] f32 (int8 arena)
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Decode attention through a page table (see kernels/paged_attention).
+
+    The CPU path gathers pages into the contiguous [B, S, Hkv, D] layout and
+    reuses ``_decode_jnp`` — at ``page_size == cache_len`` (fp) the gather is
+    an identity extraction, so the math is bit-identical to the dense pool.
+    On TPU the gather never materialises: the Pallas kernel rides the page
+    indirection on its BlockSpec index map."""
+    if _on_tpu():
+        return paged_attention_pallas(q, k_pages, v_pages, page_table,
+                                      positions, k_scale=k_scale,
+                                      v_scale=v_scale)
+    b = q.shape[0]
+    p, ps = page_table.shape[1], k_pages.shape[1]
+    s = p * ps
+
+    def gather(pages, scale):
+        rows = pages[page_table]                     # [B, P, ps, Hkv, D]
+        if scale is not None:
+            rows = rows.astype(jnp.float32) * scale[page_table][..., None]
+        return rows.reshape(b, s, *pages.shape[2:])
+
+    idx = jnp.arange(s, dtype=jnp.int32)[None, :]
+    valid = (idx <= positions[:, None]) | (positions[:, None] >= s)
+    return _decode_jnp(q, gather(k_pages, k_scale), gather(v_pages, v_scale),
+                       valid)
 
 
 # --------------------------------------------------------------------------- #

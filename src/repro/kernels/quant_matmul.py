@@ -87,3 +87,19 @@ def quantize_int8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scales[None, :]),
                    -127, 127).astype(jnp.int8)
     return w_q, scales
+
+
+def quantize_kv_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-vector symmetric int8 quantisation over the LAST axis.
+
+    The KV-cache variant of :func:`quantize_int8`: each head-dim vector
+    (one position of one kv-head) gets its own scale, so ``x`` of shape
+    ``[..., hd]`` returns ``(int8 [..., hd], f32 scales [...])`` with
+    ``dequant = q.astype(f32) * scales[..., None]``.  Decode-step writes
+    and prefill-commit scatters use this same function so a page holds
+    identical bytes regardless of which path materialised it."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scales = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scales[..., None]), -127, 127).astype(jnp.int8)
+    return q, scales

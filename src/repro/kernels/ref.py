@@ -122,3 +122,36 @@ def ssd_ref(
     state, ys = jax.lax.scan(step, state, xs)
     y = jnp.moveaxis(ys, 0, 1)                                # [B,S,H,P]
     return y.astype(x.dtype), state
+
+
+def paged_attention_ref(
+    q: jax.Array,                   # [B, H, D] one new token per sequence
+    k_pages: jax.Array,             # [N, ps, Hkv, D] global page arena
+    v_pages: jax.Array,             # [N, ps, Hkv, D]
+    page_table: jax.Array,          # [B, P] int32 page id per table entry
+    positions: jax.Array,           # [B] int32 position of the query token
+    *,
+    k_scale: jax.Array | None = None,   # [N, ps, Hkv] f32 (int8 arenas)
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Decode attention through a page table: gather each sequence's pages
+    into a contiguous [B, P*ps, Hkv, D] view (dequantising int8 pages with
+    their per-(position, head) scales), mask cells past the query position
+    (ring semantics: a fully wrapped cache attends to everything), and run
+    the dense decode oracle."""
+    b = q.shape[0]
+    p = page_table.shape[1]
+    ps = k_pages.shape[1]
+    s = p * ps
+
+    def gather(pages, scale):
+        rows = pages[page_table]                     # [B, P, ps, Hkv, D]
+        if scale is not None:
+            rows = rows.astype(jnp.float32) * scale[page_table][..., None]
+        return rows.reshape(b, s, *pages.shape[2:])
+
+    k = gather(k_pages, k_scale)
+    v = gather(v_pages, v_scale)
+    idx = jnp.arange(s, dtype=jnp.int32)[None, :]
+    valid = (idx <= positions[:, None]) | (positions[:, None] >= s)
+    return decode_attention_ref(q, k, v, valid)

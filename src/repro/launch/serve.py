@@ -124,6 +124,20 @@ def main() -> None:
                          "pool; repeatable) — see core/faults.py")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the deterministic fault injector")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="KV cache layout: dense per-slot ring, or paged "
+                         "global arena with copy-on-write prefix sharing "
+                         "(DESIGN_paged_kv.md)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout; default matches "
+                         "the prefix-cache block size)")
+    ap.add_argument("--kv-num-pages", type=int, default=None,
+                    help="page-arena size (paged layout); default sizes for "
+                         "full max-batch capacity + reserved pages")
+    ap.add_argument("--kv-dtype", choices=("fp", "int8"), default="fp",
+                    help="KV page storage: model dtype, or int8 with "
+                         "per-(position, head) scales (paged layout only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -148,7 +162,11 @@ def main() -> None:
         max_preemptions=args.max_preemptions,
         speculative_fill=not args.no_spec_fill,
         aging_s=args.aging_s,
-        faults=faults)
+        faults=faults,
+        kv_layout=args.kv_layout,
+        kv_page_size=args.kv_page_size,
+        kv_num_pages=args.kv_num_pages,
+        kv_dtype=args.kv_dtype)
     admission = None
     if not args.no_admission:
         admission = AdmissionController(

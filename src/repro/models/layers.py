@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig
 from repro.distributed import constrain
 from repro.kernels import ops
+from repro.kernels.quant_matmul import quantize_kv_int8
 
 Params = Dict[str, Any]
 
@@ -126,6 +127,8 @@ def apply_self_attn(
     attn_schedule: str = "full",
     resume: bool = False,            # prefill continues from cached tokens
     seq_valid: Optional[jax.Array] = None,   # [B, S] prefix mask (padding off)
+    page_table: Optional[jax.Array] = None,  # [B, P] paged-KV decode only
+    slot_active: Optional[jax.Array] = None,  # [B] live mask (paged decode)
 ) -> Tuple[jax.Array, Optional[Params]]:
     b, s, _ = x.shape
     h = rmsnorm(x, p["ln"], cfg.rms_eps)
@@ -157,7 +160,45 @@ def apply_self_attn(
         out = constrain(out, "batch", None, "tp")
         return x + out @ p["wo"], {"k": kc, "v": vc}
 
-    if mode == "decode":
+    if mode == "decode" and page_table is not None:
+        # paged KV: cache holds the global page arena [N, ps, Hkv, hd] and
+        # the slot's cells are reached through page_table.  The engine's
+        # ensure_decode_capacity guarantees the write target is an
+        # exclusively-owned page; frozen slots (slot_active False) redirect
+        # their write to a reserved per-slot trash cell so shared/retired
+        # pages are never touched (the paged analogue of the dense path's
+        # select_cache_slots ring-cell repair).  No sharding constrain on
+        # the arena: paged + distributed KV is not supported.
+        kc, vc = cache["k"], cache["v"]
+        ps = kc.shape[1]
+        sc = ps * page_table.shape[1]
+        pos = positions[:, 0]
+        ring = (pos % sc).astype(jnp.int32)
+        page_idx = ring // ps
+        off = ring % ps
+        bidx = jnp.arange(b)
+        page = page_table[bidx, page_idx]
+        if slot_active is not None:
+            page = jnp.where(slot_active, page,
+                             (bidx // ps).astype(page.dtype))
+            off = jnp.where(slot_active, off, (bidx % ps).astype(off.dtype))
+        if "k_scale" in cache:                          # int8 arena
+            kq, ks = quantize_kv_int8(k[:, 0])
+            vq, vs = quantize_kv_int8(v[:, 0])
+            kc = kc.at[page, off].set(kq)
+            vc = vc.at[page, off].set(vq)
+            ksc = cache["k_scale"].at[page, off].set(ks)
+            vsc = cache["v_scale"].at[page, off].set(vs)
+            out = ops.paged_attention(q[:, 0], kc, vc, page_table, pos,
+                                      k_scale=ksc, v_scale=vsc)[:, None]
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc = kc.at[page, off].set(k[:, 0])
+            vc = vc.at[page, off].set(v[:, 0])
+            out = ops.paged_attention(q[:, 0], kc, vc, page_table,
+                                      pos)[:, None]
+            new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
         kc, vc = cache["k"], cache["v"]
         sc = kc.shape[1]
         slot = (positions[:, 0] % sc).astype(jnp.int32)                 # [B]
@@ -484,16 +525,20 @@ def apply_layer(
     cross_cached: bool = False,
     ctx_valid: Optional[jax.Array] = None,
     seq_valid: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,
+    slot_active: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: Params = {}
     if "attn" in p:
-        sub = {k: cache[k] for k in ("k", "v")} if cache else None
+        sub = ({k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+                if k in cache} if cache else None)
         x, c = apply_self_attn(p["attn"], x, cfg=cfg, mode=mode,
                                positions=positions, cache=sub, window=window,
                                attn_schedule=attn_schedule, resume=resume,
-                               seq_valid=seq_valid)
+                               seq_valid=seq_valid, page_table=page_table,
+                               slot_active=slot_active)
         if c:
             new_cache.update(c)
     if "cross" in p and kind != "xattn":    # audio decoder cross-attn

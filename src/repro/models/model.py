@@ -154,6 +154,9 @@ class Model:
                                          # identity SSM updates, no MoE
                                          # capacity use)
         logits_mode: str = "full",       # 'full' | 'last' (prefill: last only)
+        page_table: Optional[jax.Array] = None,  # [B, P] paged-KV decode:
+                                         # cache k/v leaves are page arenas
+        slot_active: Optional[jax.Array] = None,  # [B] live mask (paged)
         unroll_scan: bool = False,       # python loop instead of lax.scan —
                                          # exact XLA cost_analysis (which
                                          # counts a while-loop body ONCE);
@@ -189,7 +192,8 @@ class Model:
                 positions=positions, cache=sub, window=window_eff,
                 context=context, attn_schedule=attn_schedule,
                 resume=resume, cross_cached=cross_cached, ctx_valid=ctx_valid,
-                seq_valid=seq_valid)
+                seq_valid=seq_valid, page_table=page_table,
+                slot_active=slot_active)
             new_prefix_caches.append(c)
             aux_total += aux
 
@@ -204,7 +208,8 @@ class Model:
                     positions=positions, cache=sub, window=window_eff,
                     context=context, attn_schedule=attn_schedule,
                     resume=resume, cross_cached=cross_cached,
-                    ctx_valid=ctx_valid, seq_valid=seq_valid)
+                    ctx_valid=ctx_valid, seq_valid=seq_valid,
+                    page_table=page_table, slot_active=slot_active)
                 if c is not None:
                     c_out[f"pos{i}"] = c
                 aux_g += aux

@@ -316,7 +316,18 @@ class EngineClient:
         sched = self.engine.scheduler
         cap = max(1, 2 * sched.max_batch)
         used = sched.num_active + len(sched.pending)
-        return max(0.0, 1.0 - used / cap)
+        slots = max(0.0, 1.0 - used / cap)
+        # paged KV pool: bound headroom by *real* page occupancy, not just
+        # slot count — long sequences can exhaust the arena while slots
+        # remain free.  Pages held only by cache leases count as available
+        # (the engine's pressure ladder reclaims them before shedding
+        # matters).  Duck-typed: dense pools have no page_occupancy.
+        probe = getattr(self.engine.pool, "page_occupancy", None)
+        if probe is not None:
+            occ = probe()
+            pages = (occ["free"] + occ["reclaimable"]) / max(1, occ["total"])
+            return min(slots, pages)
+        return slots
 
     # ------------------------------------------------------------------ #
     def start(self) -> None:
