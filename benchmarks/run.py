@@ -11,10 +11,9 @@ import argparse
 import time
 
 from benchmarks import (decode_loop, fig2_concurrency, load_trace,
-                        paged_kv, prefill_overlap, sched_policy,
-                        table1_throughput, table2_mllm_cache, table3_video,
-                        table4_ablation, table5_resolution,
-                        table6_video_frames, table7_text_prefix)
+                        mllm_cache, paged_kv, prefill_overlap, sched_policy,
+                        table1_throughput, table4_ablation,
+                        table7_text_prefix)
 from benchmarks.common import ROWS
 
 SUITES = [
@@ -24,12 +23,9 @@ SUITES = [
     ("sched_policy", sched_policy.run),
     ("load_trace", load_trace.run),
     ("paged_kv", paged_kv.run),
+    ("mllm_cache", mllm_cache.run),
     ("fig2", fig2_concurrency.run),
-    ("table2", table2_mllm_cache.run),
-    ("table3", table3_video.run),
     ("table4", table4_ablation.run),
-    ("table5", table5_resolution.run),
-    ("table6", table6_video_frames.run),
     ("table7", table7_text_prefix.run),
 ]
 

@@ -58,11 +58,7 @@ EXEMPT: Dict[str, str] = {
     "workload to regress)",
     "table1_throughput": "paper-table CSV compared against the paper by eye; "
     "regression tracking for the serving path lives in decode_loop/prefill_overlap",
-    "table2_mllm_cache": "paper-table CSV (MLLM cache ablation) for human comparison",
-    "table3_video": "paper-table CSV (video workloads) for human comparison",
     "table4_ablation": "paper-table CSV (cache-level ablation) for human comparison",
-    "table5_resolution": "paper-table CSV (resolution sweep) for human comparison",
-    "table6_video_frames": "paper-table CSV (frame-count sweep) for human comparison",
     "table7_text_prefix": "paper-table CSV (text prefix reuse) for human comparison",
 }
 

@@ -105,8 +105,8 @@ import numpy as np
 
 from repro.configs import ModelConfig
 from repro.core.content_cache import (ContentCache, CrossKVEntry,
-                                      EmbeddingEntry, content_hash,
-                                      media_set_digest)
+                                      EmbeddingEntry, MediaStats,
+                                      content_hash, media_set_digest)
 from repro.core.faults import FaultInjector
 from repro.core.kv_cache import (DecodeState, SlotKVPool, admit_decode_state,
                                  concat_cache_rows, init_decode_state,
@@ -183,6 +183,42 @@ class _PrefillJob:
                                          # job finished before a slot freed)
 
 
+@dataclass
+class _MediaItem:
+    """One media payload of a request, resolved to an embedding either by a
+    content-cache hit at job open or by an encode wave."""
+    hash: str
+    ntok: int                            # context tokens this item occupies
+    emb: Optional[np.ndarray] = None     # [ntok, De] once resolved
+
+
+@dataclass
+class _MediaJob:
+    """A request's media set being resolved ahead of admission: payloads are
+    decoded + hashed once at job open, embedding-cache hits resolve items
+    immediately, and the rest wait on shared in-flight encode tasks.  The
+    request stays pending (media-ineligible for admission) until
+    ``remaining == 0``; a 64-frame video therefore streams through encode
+    waves across steps instead of stalling an admission synchronously."""
+    req: Request
+    items: List["_MediaItem"]
+    remaining: int                       # items still awaiting an embedding
+
+
+@dataclass
+class _EncodeTask:
+    """One *unique* pending encode, keyed by content hash — the singleflight
+    entry.  Every request whose media set needs this hash registers as a
+    waiter; the encode wave runs the encoder exactly once and delivers the
+    embedding to all of them, so N concurrent requests carrying the same
+    viral image cost one encoder invocation (asserted by counter)."""
+    hash: str
+    pixels: np.ndarray
+    encoder: Any
+    ntok: int
+    waiters: List[_MediaJob]
+
+
 class InferenceEngine:
     def __init__(
         self,
@@ -199,6 +235,8 @@ class InferenceEngine:
         cache_vision_embeddings: bool = True,
         cache_vision_kv: bool = True,
         cache_max_bytes: int = 512 * 1024 * 1024,
+        content_cache_bytes: Optional[int] = None,  # None = cache_max_bytes
+        encode_wave: int = 4,            # unique encodes per step (0 = all)
         top_k: int = 0,
         top_p: float = 1.0,
         min_p: float = 0.0,
@@ -308,10 +346,23 @@ class InferenceEngine:
                                                        if self._paged
                                                        else None))
                              if enable_prefix_cache else None)
-        self.content_cache = (ContentCache(cache_max_bytes,
-                                           cache_embeddings=cache_vision_embeddings,
-                                           cache_kv=cache_vision_kv)
-                              if enable_content_cache else None)
+        self.content_cache = (ContentCache(
+            cache_max_bytes if content_cache_bytes is None
+            else content_cache_bytes,
+            cache_embeddings=cache_vision_embeddings,
+            cache_kv=cache_vision_kv,
+            on_evict=self._on_content_evict if self._paged else None)
+            if enable_content_cache else None)
+        # batched vision encoding: per-request media jobs plus the
+        # singleflight table of unique in-flight encodes (hash -> task).
+        # A request with unresolved media is admission-ineligible (it keeps
+        # its place in the policy queue); encode waves run overlapped behind
+        # the dispatched decode block, like prefill waves
+        self.encode_wave = max(0, encode_wave)
+        self.media_stats = MediaStats()
+        self._media_jobs: Dict[int, _MediaJob] = {}
+        self._encode_tasks: Dict[str, _EncodeTask] = {}
+        self._max_media_jobs = 2 * max_batch + self.max_spec_jobs
 
         # per-slot decode state lives on device (one pytree); the host keeps
         # only the streaming decoders.  Sampler RNG is per-request: seeded
@@ -494,16 +545,171 @@ class InferenceEngine:
         return prefill
 
     # ------------------------------------------------------------------ #
-    # media pipeline (Alg.3 lines 1-10)
+    # media pipeline (Alg.3 lines 1-10): batched encode waves + in-flight
+    # dedup (singleflight on content hash) ahead of admission
     # ------------------------------------------------------------------ #
+    def _has_media(self, req: Request) -> bool:
+        return (self.media_kind != "none"
+                and bool(req.images or req.video_frames
+                         or req.audio is not None))
+
+    def _iter_media_payloads(self, req: Request):
+        """(payload, encoder, ntok) triples in context order — the one place
+        the per-modality geometry lives, shared by the job-open path and the
+        synchronous fallback so the two can never disagree."""
+        if self.media_kind == "vision":
+            for img in req.images:
+                yield img, self._img_encoder, self.image_tokens
+            for frame in req.video_frames:
+                yield frame, self._frame_encoder, self.frame_tokens
+        elif self.media_kind == "audio" and req.audio is not None:
+            yield req.audio, self._audio_encoder, self.ctx_len
+
+    def _open_media_job(self, req: Request) -> _MediaJob:
+        """Decode + hash every payload once (cheap host work), resolve
+        items straight from the embedding cache, and register the rest with
+        the in-flight singleflight table: a hash already pending — whether
+        registered by this job or a concurrent request — never spawns a
+        second encode task."""
+        ms = self.media_stats
+        items: List[_MediaItem] = []
+        job = _MediaJob(req, items, remaining=0)
+        for payload, encoder, ntok in self._iter_media_payloads(req):
+            pixels = decode_media(payload)
+            h = content_hash(pixels)
+            item = _MediaItem(h, ntok)
+            items.append(item)
+            entry = (self.content_cache.get_embedding(h)
+                     if self.content_cache is not None else None)
+            if entry is not None:
+                item.emb = entry.embeddings
+                req.vision_cache_hits += 1
+                ms.embed_hits += 1
+                continue
+            req.vision_cache_misses += 1
+            ms.embed_misses += 1
+            job.remaining += 1
+            task = self._encode_tasks.get(h)
+            if task is None:
+                self._encode_tasks[h] = _EncodeTask(h, pixels, encoder,
+                                                    ntok, [job])
+            else:
+                if job not in task.waiters:
+                    # joined a concurrent request's in-flight encode: this
+                    # request's encoder work is eliminated outright
+                    ms.dedup_joins += 1
+                    task.waiters.append(job)
+        # digest binds the prefix-cache salt before admission, exactly as
+        # the synchronous pipeline did
+        req.media_set_digest = (media_set_digest([it.hash for it in items])
+                                if items else None)
+        self._media_jobs[req.request_id] = job
+        return job
+
+    def _media_admissible(self, req: Request) -> bool:
+        """Admission eligibility predicate (passed into the scheduler): a
+        media request may bind a slot only once its whole media set is
+        resolved, so the prefill path never encodes synchronously.  Opens
+        the request's media job on first sight (bounded table)."""
+        if not self._has_media(req):
+            return True
+        if req.preempt_count and req.request_id in self._evicted:
+            # snapshot resume restores ctx rows from the snapshot itself —
+            # no embeddings needed (and none are re-encoded)
+            return True
+        job = self._media_jobs.get(req.request_id)
+        if job is None:
+            if len(self._media_jobs) >= self._max_media_jobs:
+                return False             # table full: stays queued, retried
+            try:
+                job = self._open_media_job(req)
+            except Exception as e:       # per-request boundary (bad payload)
+                self._fault_events.extend(self._fail_request(
+                    req.request_id, f"media decode failed: {e}"))
+                return False
+        return job.remaining == 0
+
+    def _cancel_media_job(self, request_id: int) -> None:
+        """Drop a request's media job (abort/failure): deregister it from
+        every in-flight encode task; tasks left with no waiters are dropped
+        before they cost an encoder invocation."""
+        job = self._media_jobs.pop(request_id, None)
+        if job is None:
+            return
+        for h in {it.hash for it in job.items if it.emb is None}:
+            task = self._encode_tasks.get(h)
+            if task is None:
+                continue
+            task.waiters = [j for j in task.waiters if j is not job]
+            if not task.waiters:
+                del self._encode_tasks[h]
+
+    def _dispatch_encode_wave(self) -> None:
+        """Run up to ``encode_wave`` unique pending encodes (most urgent
+        waiter first, policy order), delivering each embedding to *all*
+        waiters — the singleflight guarantee.  Called between the decode
+        -block dispatch and the token sync, so encoder host work overlaps
+        the in-flight device block the way prefill waves do.  The per-step
+        budget is what streams a 64-frame video across steps instead of
+        monopolising one: interactive traffic keeps admitting between
+        waves."""
+        if not self._encode_tasks:
+            return
+        key = self.scheduler.policy.key
+        order = sorted(self._encode_tasks.values(),
+                       key=lambda t: min(key(j.req) for j in t.waiters))
+        budget = self.encode_wave or len(order)
+        self.media_stats.encode_waves += 1
+        for task in order[:budget]:
+            del self._encode_tasks[task.hash]
+            if not task.waiters:
+                continue
+            try:
+                emb = task.encoder(task.pixels)
+            except Exception as e:       # per-request fault boundary
+                for job in list(task.waiters):
+                    self._fault_events.extend(self._fail_request(
+                        job.req.request_id, f"media encode failed: {e}"))
+                continue
+            self.media_stats.encoder_invocations += 1
+            if self.content_cache is not None:
+                self.content_cache.put_embedding(
+                    task.hash, EmbeddingEntry(emb, emb.nbytes))
+            for job in task.waiters:
+                for item in job.items:
+                    if item.hash == task.hash and item.emb is None:
+                        item.emb = emb
+                        job.remaining -= 1
+
+    def _assemble_media(self, job: _MediaJob):
+        """Pack a resolved job's embeddings into the fixed context window —
+        same cursor walk as the synchronous pipeline, so the device-visible
+        arrays are bit-identical regardless of which path produced them."""
+        embeds = np.zeros((self.ctx_len, self.embed_dim), np.float32)
+        valid = np.zeros((self.ctx_len,), bool)
+        cursor = 0
+        for item in job.items:
+            take = min(item.ntok, self.ctx_len - cursor)
+            embeds[cursor:cursor + take] = item.emb[:take]
+            valid[cursor:cursor + take] = True
+            cursor += take
+        digest = (media_set_digest([it.hash for it in job.items])
+                  if job.items else None)
+        salt = bytes.fromhex(digest) if digest else b""
+        return embeds[None], valid[None], salt, digest
+
     def _media_pipeline(self, req: Request):
-        """Returns (embeds [1,T,De] | zeros, ctx_valid [1,T], digest, set_hash)."""
+        """Synchronous fallback (returns (embeds [1,T,De] | zeros, ctx_valid
+        [1,T], salt, set_digest)): the lost-snapshot re-prefill path and any
+        open-prefill call without a resolved media job land here.  Bit
+        -identical to job assembly; encoder invocations still count."""
         if self.media_kind == "none":
             return None, None, b"", None
         embeds = np.zeros((self.ctx_len, self.embed_dim), np.float32)
         valid = np.zeros((self.ctx_len,), bool)
         hashes: List[str] = []
         cursor = 0
+        ms = self.media_stats
 
         def encode(payload, encoder, ntok):
             nonlocal cursor
@@ -513,25 +719,23 @@ class InferenceEngine:
             entry = self.content_cache.get_embedding(h) if self.content_cache else None
             if entry is None:
                 emb = encoder(pixels)
+                ms.encoder_invocations += 1
                 req.vision_cache_misses += 1
+                ms.embed_misses += 1
                 if self.content_cache is not None:
                     self.content_cache.put_embedding(
                         h, EmbeddingEntry(emb, emb.nbytes))
             else:
                 emb = entry.embeddings
                 req.vision_cache_hits += 1
+                ms.embed_hits += 1
             take = min(ntok, self.ctx_len - cursor)
             embeds[cursor:cursor + take] = emb[:take]
             valid[cursor:cursor + take] = True
             cursor += take
 
-        if self.media_kind == "vision":
-            for img in req.images:
-                encode(img, self._img_encoder, self.image_tokens)
-            for frame in req.video_frames:
-                encode(frame, self._frame_encoder, self.frame_tokens)
-        elif self.media_kind == "audio" and req.audio is not None:
-            encode(req.audio, self._audio_encoder, self.ctx_len)
+        for payload, encoder, ntok in self._iter_media_payloads(req):
+            encode(payload, encoder, ntok)
 
         digest = media_set_digest(hashes) if hashes else None
         salt = bytes.fromhex(digest) if digest else b""
@@ -613,8 +817,13 @@ class InferenceEngine:
     def _admit_into_free_slots(self) -> None:
         while (self.pool.num_free and self.scheduler.pending
                and self.scheduler.num_active < self.scheduler.max_batch):
-            head = self.scheduler.peek_pending()
-            if (self.faults is not None and head is not None
+            # media-ineligible requests (embeddings still resolving in the
+            # encode waves) are skipped without losing queue position —
+            # peeking also opens media jobs for newly seen requests
+            head = self.scheduler.peek_pending(self._media_admissible)
+            if head is None:
+                break
+            if (self.faults is not None
                     and self.faults.fires("pool", head.request_id,
                                           self._fault_tick)):
                 # transient slot-allocation failure: the request stays
@@ -622,7 +831,7 @@ class InferenceEngine:
                 # the retry draws fresh) — never dropped, never wedged
                 break
             slot = self.pool.allocate()
-            admitted = self.scheduler.admit([slot])
+            admitted = self.scheduler.admit([slot], self._media_admissible)
             if not admitted:
                 self.pool.free(slot)
                 break
@@ -650,6 +859,36 @@ class InferenceEngine:
         page-pressure eviction): release the device pages it leased."""
         if isinstance(value, dict) and value.get("pages"):
             self.pool.release_pages(value["pages"])
+
+    def _on_content_evict(self, key: str, value: Any) -> None:
+        """Content-cache entry displaced (LRU squeeze, replacement, or a
+        forced page-pressure eviction): release the device pages its
+        cross-KV payload leased.  Embedding entries carry no lease."""
+        pages = getattr(value, "pages", None)
+        if pages:
+            self.pool.release_pages(pages)
+            self.media_stats.xkv_lease_pages -= len(pages)
+            value.pages = None
+
+    def _lease_xkv_pages(self, nbytes: int) -> Optional[List[int]]:
+        """Charge a cross-KV entry's bytes against the paged arena so the
+        admission headroom probe and the pressure ladder see device-resident
+        media: lease ceil(nbytes / page_bytes) accounting pages, evicting
+        prefix-cache LRU entries if the arena is tight.  Returns None (the
+        publication is skipped) if the arena cannot spare the pages —
+        serving capacity always outranks media caching.  Dense layout: no
+        arena, nothing to lease."""
+        if not self._paged:
+            return []
+        npages = -(-nbytes // self.pool.page_bytes)
+        while self.pool.allocator.num_free < npages:
+            if self.prefix_cache is not None and \
+                    self.prefix_cache.evict_lru():
+                continue
+            return None
+        pages = [self.pool.allocator.alloc() for _ in range(npages)]
+        self.media_stats.xkv_lease_pages += npages
+        return pages
 
     def _release_lease(self, request_id: int) -> None:
         pages = self._job_leases.pop(request_id, None)
@@ -685,6 +924,12 @@ class InferenceEngine:
                                                    k_steps):
             if self.prefix_cache is not None and \
                     self.prefix_cache.evict_lru():
+                continue
+            # next rung: cached cross-KV entries surrender their accounting
+            # leases before any live request is preempted — media caching
+            # never outranks in-flight decode
+            if self.content_cache is not None and \
+                    self.content_cache.evict_cross_kv_lru():
                 continue
             live = self._live_positions()
             if not live:
@@ -748,7 +993,7 @@ class InferenceEngine:
         ``max_preemptions`` to bound churn under adversarial load."""
         key = self.scheduler.policy.key
         while self.scheduler.pending and not self.pool.num_free:
-            head = self.scheduler.peek_pending()
+            head = self.scheduler.peek_pending(self._media_admissible)
             # a victim must be exactly rebuildable if its snapshot is later
             # lost: the re-prefill fallback can only represent histories
             # that fit the KV ring without wrapping (wrapped prefill would
@@ -875,7 +1120,16 @@ class InferenceEngine:
         if slot is not None:
             req.status = RequestStatus.PREFILLING
 
-        embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
+        job = self._media_jobs.get(req.request_id)
+        if job is not None and job.remaining == 0:
+            # resolved by encode waves / embedding-cache hits ahead of
+            # admission — assembly only, no encoder work on this path
+            del self._media_jobs[req.request_id]
+            embeds, ctx_valid, salt, set_digest = self._assemble_media(job)
+        else:
+            if job is not None:          # unresolved job reached prefill
+                self._cancel_media_job(req.request_id)
+            embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
         req.media_set_digest = set_digest
 
         # Alg.2: longest cached prefix (cap: leave >=1 token for logits)
@@ -915,6 +1169,9 @@ class InferenceEngine:
             if xkv_entry is not None:
                 single = self._inject_xkv(single, xkv_entry.xkv)
                 cross_cached = True
+                self.media_stats.xkv_hits += 1
+            else:
+                self.media_stats.xkv_misses += 1
 
         return _PrefillJob(
             slot=slot, req=req, tokens=tokens, cache=single, consumed=matched,
@@ -1008,7 +1265,8 @@ class InferenceEngine:
                           if j.logits is None), key=lambda j: key(j.req))
         fresh = [r for r in self.scheduler.pending_in_order()
                  if r.request_id not in self._spec_jobs
-                 and not r.preempt_count]
+                 and not r.preempt_count
+                 and self._media_admissible(r)]
         for (bucket, cross_cached), rows in groups.items():
             kp = 1 << (len(rows) - 1).bit_length()
             while len(rows) < kp:
@@ -1086,12 +1344,22 @@ class InferenceEngine:
             job.consumed += take
 
             # publish cross-KV for future identical media sets (the first
-            # chunk fully materialises every layer's xk/xv)
+            # chunk fully materialises every layer's xk/xv).  Under the
+            # paged layout the entry leases accounting pages from the
+            # arena, so device-resident media bytes show up in
+            # page_occupancy() — the admission KV-headroom probe and the
+            # pressure ladder govern them like any slot's pages
             if job.publish_xkv:
                 xkv = self._extract_xkv(job.cache)
-                self.content_cache.put_cross_kv(
-                    job.req.media_set_digest,
-                    CrossKVEntry(xkv, self.ctx_len, tree_bytes(xkv)))
+                nbytes = tree_bytes(xkv)
+                pages = self._lease_xkv_pages(nbytes)
+                if pages is None:
+                    self.media_stats.xkv_publish_skipped += 1
+                else:
+                    self.content_cache.put_cross_kv(
+                        job.req.media_set_digest,
+                        CrossKVEntry(xkv, self.ctx_len, nbytes,
+                                     pages=pages))
                 job.publish_xkv = False
 
             if job.consumed >= len(job.tokens):
@@ -1237,6 +1505,9 @@ class InferenceEngine:
             except PagePoolExhausted:
                 if self.prefix_cache is not None and \
                         self.prefix_cache.evict_lru():
+                    continue
+                if self.content_cache is not None and \
+                        self.content_cache.evict_cross_kv_lru():
                     continue
                 raise
         for a in wave:                  # lease ownership moved to the slot
@@ -1450,6 +1721,7 @@ class InferenceEngine:
                 req = req or job.req
         if req is None or req.is_finished:
             return []
+        self._cancel_media_job(request_id)
         self._release_lease(request_id)
         meta = self._evicted.pop(request_id, None)
         if meta is not None:
@@ -1509,6 +1781,12 @@ class InferenceEngine:
             if self.prefix_cache is not None:
                 self.prefix_cache.clear()
             self._job_leases.clear()
+            # cross-KV accounting leases also died with the arena; the xkv
+            # arrays themselves are separate device buffers and stay valid,
+            # so the entries survive — only their leases detach
+            if self.content_cache is not None:
+                self.content_cache.detach_page_leases()
+            self.media_stats.xkv_lease_pages = 0
             for m in self._evicted.values():
                 if isinstance(m.get("cache"), dict) and \
                         m["cache"].get("pages"):
@@ -1561,6 +1839,35 @@ class InferenceEngine:
     # ------------------------------------------------------------------ #
     # public API
     # ------------------------------------------------------------------ #
+    def content_cache_stats(self) -> Dict[str, Any]:
+        """Content-cache + media-pipeline counters for ``GET /stats``.
+        Plain-int reads of engine-thread-owned counters, so handler threads
+        may call this concurrently with the engine loop (same contract as
+        ``scheduler.snapshot``).  Media counters exist even with the cache
+        disabled — the singleflight dedup invariant is engine-level."""
+        ms = self.media_stats
+        out: Dict[str, Any] = {
+            "enabled": self.content_cache is not None,
+            "encoder_invocations": ms.encoder_invocations,
+            "encode_waves": ms.encode_waves,
+            "encode_queue_depth": len(self._encode_tasks),
+            "dedup_joins": ms.dedup_joins,
+            "embed_hits": ms.embed_hits,
+            "embed_misses": ms.embed_misses,
+            "xkv_hits": ms.xkv_hits,
+            "xkv_misses": ms.xkv_misses,
+            "xkv_lease_pages": ms.xkv_lease_pages,
+            "xkv_publish_skipped": ms.xkv_publish_skipped,
+        }
+        if self.content_cache is not None:
+            s = self.content_cache.stats
+            out.update(bytes=self.content_cache.nbytes,
+                       entries=len(self.content_cache),
+                       insertions=s.insertions,
+                       evictions=s.evictions,
+                       bytes_evicted=s.bytes_evicted)
+        return out
+
     def validate_request(self, req: Request) -> None:
         """Validate + normalise a request without enqueueing it: prompt
         -length policy (truncate or raise), stop-token / stop-sequence /
@@ -1648,7 +1955,11 @@ class InferenceEngine:
                 self.state = state
                 block_plan = (num_steps, toks, lps)
 
-        # 3. dispatch the prefill wave behind the in-flight decode block
+        # 3. run an encode wave + dispatch the prefill wave behind the
+        # in-flight decode block: both are host/new-device work that hides
+        # in the block's host-sync window.  Encodes resolved here make
+        # their requests admission-eligible next step
+        self._dispatch_encode_wave()
         completed = self._dispatch_prefill_wave()
 
         # 4. sync the token block; emit + retire step-major

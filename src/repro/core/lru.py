@@ -106,6 +106,21 @@ class LRUCache:
             self._on_evict(key, value)
         return True
 
+    def evict(self, key: str) -> bool:
+        """Force-evict one specific entry (with callback + stats) — the
+        targeted sibling of :meth:`evict_lru`, used when only entries of a
+        certain kind pin the scarce resource (e.g. cross-KV page leases)."""
+        entry = self._store.pop(key, None)
+        if entry is None:
+            return False
+        value, nbytes = entry
+        self._bytes -= nbytes
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += nbytes
+        if self._on_evict:
+            self._on_evict(key, value)
+        return True
+
     def keys(self) -> Iterator[str]:
         return iter(self._store.keys())
 

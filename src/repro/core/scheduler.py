@@ -31,7 +31,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.request import Request
 
@@ -231,15 +231,27 @@ class ContinuousBatchingScheduler:
     def add(self, request: Request) -> None:
         self.pending.append(request)
 
-    def _pop_next(self) -> Request:
-        req = min(self.pending, key=self.policy.key)
+    def _pop_next(self, eligible: Optional[Callable[[Request], bool]] = None
+                  ) -> Optional[Request]:
+        cand = (self.pending if eligible is None
+                else [r for r in list(self.pending) if eligible(r)])
+        if not cand:
+            return None
+        req = min(cand, key=self.policy.key)
         self.pending.remove(req)
         return req
 
-    def peek_pending(self) -> Optional[Request]:
+    def peek_pending(self,
+                     eligible: Optional[Callable[[Request], bool]] = None
+                     ) -> Optional[Request]:
         """Most urgent pending request under the policy (None if empty).
-        Tolerates concurrent appends from submission threads."""
+        ``eligible`` filters candidates — the engine passes its media
+        -admissibility predicate so requests still waiting on an in-flight
+        encode wave never block the admission head.  Tolerates concurrent
+        appends from submission threads."""
         snapshot = list(self.pending)
+        if eligible is not None:
+            snapshot = [r for r in snapshot if eligible(r)]
         if not snapshot:
             return None
         return min(snapshot, key=self.policy.key)
@@ -249,14 +261,20 @@ class ContinuousBatchingScheduler:
         the engine to pick speculative-prefill candidates)."""
         return sorted(list(self.pending), key=self.policy.key)
 
-    def admit(self, free_slots: List[int]) -> List[Tuple[int, Request]]:
+    def admit(self, free_slots: List[int],
+              eligible: Optional[Callable[[Request], bool]] = None
+              ) -> List[Tuple[int, Request]]:
         """Alg.1 lines 3-6: fill free slots from the pending queue in policy
-        order (called at a token boundary, before the next step)."""
+        order (called at a token boundary, before the next step).
+        ``eligible`` mirrors :meth:`peek_pending` — ineligible requests stay
+        queued without losing their policy-order position."""
         admitted = []
         for slot in free_slots:
-            if not self.pending or len(self.active) >= self.max_batch:
+            if len(self.active) >= self.max_batch:
                 break
-            req = self._pop_next()
+            req = self._pop_next(eligible)
+            if req is None:
+                break
             self.active[slot] = req
             admitted.append((slot, req))
             self.stats.admitted += 1

@@ -44,6 +44,26 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--no-content-cache", action="store_true")
+    ap.add_argument("--no-vision-embed-cache", action="store_true",
+                    help="content-cache ablation: keep cross-KV entries but "
+                         "re-encode every frame (paper Table 4 'KV-only')")
+    ap.add_argument("--no-vision-kv-cache", action="store_true",
+                    help="content-cache ablation: keep frame embeddings but "
+                         "re-project cross-KV (paper Table 4 "
+                         "'embeddings-only')")
+    ap.add_argument("--content-cache-mb", type=int, default=None,
+                    help="byte budget for the content cache in MiB "
+                         "(default: share the prefix cache's 512 MiB "
+                         "budget figure)")
+    ap.add_argument("--vision-work-iters", type=int, default=8,
+                    help="vision/audio encoder work multiplier (stubbed "
+                         "encoder cost; higher = heavier encode, larger "
+                         "cache wins)")
+    ap.add_argument("--encode-wave", type=int, default=4,
+                    help="unique media encodes per engine step (0 = "
+                         "unbounded): batches concurrent encoder work "
+                         "behind the decode block and streams large video "
+                         "frame-sets across steps")
     ap.add_argument("--max-decode-block", type=int, default=8,
                     help="decode tokens per host sync (1 = per-token loop)")
     ap.add_argument("--top-p", type=float, default=1.0,
@@ -153,6 +173,12 @@ def main() -> None:
         cfg, max_batch=args.max_batch, cache_len=args.cache_len,
         seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
         enable_content_cache=not args.no_content_cache,
+        cache_vision_embeddings=not args.no_vision_embed_cache,
+        cache_vision_kv=not args.no_vision_kv_cache,
+        content_cache_bytes=(None if args.content_cache_mb is None
+                             else args.content_cache_mb * 1024 * 1024),
+        vision_work_iters=args.vision_work_iters,
+        encode_wave=args.encode_wave,
         max_decode_block=args.max_decode_block,
         top_p=args.top_p, top_k=args.top_k, min_p=args.min_p,
         prefill_chunk=args.prefill_chunk,

@@ -394,6 +394,7 @@ class EngineClient:
 
     def stats(self) -> Dict[str, object]:
         out = dict(self.engine.scheduler.snapshot())
+        out["content_cache"] = self.engine.content_cache_stats()
         out["draining"] = self._draining
         out["loop_errors"] = self._loop_errors
         out["watchdog"] = {

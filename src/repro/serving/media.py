@@ -65,12 +65,16 @@ class VisionEncoderStub:
         self.num_tokens = num_tokens
         self.embed_dim = embed_dim
         self.work_iters = work_iters
+        # invocation counter: the allocator-counter-style proof that
+        # in-flight dedup collapsed N identical media to ONE encode
+        self.calls = 0
         rng = np.random.default_rng(seed)
         self._proj = rng.standard_normal((256, embed_dim)).astype(np.float32) / 16.0
         self._mix = rng.standard_normal((embed_dim, embed_dim)).astype(np.float32) \
             / np.sqrt(embed_dim)
 
     def __call__(self, pixels: np.ndarray) -> np.ndarray:
+        self.calls += 1
         arr = np.asarray(pixels, np.float32)
         if arr.ndim == 2:
             arr = arr[..., None]
@@ -96,12 +100,14 @@ class AudioEncoderStub:
         self.num_frames = num_frames
         self.embed_dim = embed_dim
         self.work_iters = work_iters
+        self.calls = 0
         rng = np.random.default_rng(seed)
         self._proj = rng.standard_normal((64, embed_dim)).astype(np.float32) / 8.0
         self._mix = rng.standard_normal((embed_dim, embed_dim)).astype(np.float32) \
             / np.sqrt(embed_dim)
 
     def __call__(self, waveform: np.ndarray) -> np.ndarray:
+        self.calls += 1
         arr = np.asarray(waveform, np.float32).reshape(-1)
         want = self.num_frames * 64
         reps = -(-want // max(arr.size, 1))

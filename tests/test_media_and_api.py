@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.content_cache import content_hash
 from repro.core.engine import InferenceEngine
 from repro.core.request import Request, SamplingParams
 from repro.serving.client import EngineClient
@@ -25,6 +26,45 @@ def test_decode_media_formats(rng):
         decode_media({"url": "t://missing"})
     with pytest.raises(TypeError):
         decode_media(42)
+
+
+def test_content_hash_integer_dtypes_not_truncated(rng):
+    """Non-uint8 integer pixels are clipped to [0, 255], not wrapped mod
+    256: a uint16 pixel of 256 must NOT alias a uint8 pixel of 0 (the old
+    ``astype(uint8)`` truncation bug), while in-range values hash the same
+    regardless of width."""
+    small = rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
+    assert content_hash(small.astype(np.uint16)) == content_hash(small)
+    assert content_hash(small.astype(np.int32)) == content_hash(small)
+
+    wide = small.astype(np.uint16)
+    wide[0, 0, 0] = 256                    # truncates to 0, clips to 255
+    aliased = small.copy()
+    aliased[0, 0, 0] = 0
+    clipped = small.copy()
+    clipped[0, 0, 0] = 255
+    assert content_hash(wide) != content_hash(aliased)
+    assert content_hash(wide) == content_hash(clipped)
+
+
+def test_content_hash_float_and_int_pixels_agree(rng):
+    img = rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
+    assert content_hash(img.astype(np.float32) / 255.0) == content_hash(img)
+    assert content_hash(img.astype(np.float64) / 255.0) == content_hash(img)
+
+
+def test_content_hash_format_independent(rng, tmp_path):
+    """The same pixels hash identically whether they arrive as a raw array,
+    base64, a registered URL, or a filesystem path — dedup and the content
+    cache key on content, never on transport."""
+    img = rng.integers(0, 255, (8, 8, 3), dtype=np.uint8)
+    register_url("t://hash-pin", img)
+    path = tmp_path / "img.npy"
+    np.save(path, img)
+    want = content_hash(img)
+    for payload in (img, encode_b64(img), {"url": "t://hash-pin"},
+                    {"path": str(path)}):
+        assert content_hash(decode_media(payload)) == want
 
 
 def test_vision_stub_deterministic_and_resolution_scaled(rng):

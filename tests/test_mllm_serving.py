@@ -1,0 +1,332 @@
+"""Multimodal serving at scale: batched encode waves, in-flight dedup
+(singleflight on content hash), device-resident cross-KV under the paged
+arena, and the cache-hit bit-exactness contract.
+
+The load-bearing invariants:
+  * N concurrent requests carrying the same image cost exactly ONE encoder
+    invocation (counter-asserted, with and without the content cache);
+  * greedy generations are bit-identical across cold encode, embedding-cache
+    hit, cross-KV hit, preemption/resume, and chaos survivors;
+  * under ``--kv-layout paged`` cached cross-KV leases real arena pages, so
+    the KV-headroom probe and the pressure ladder govern media bytes too.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.faults import FaultInjector
+from repro.core.request import FinishReason, Request, SamplingParams
+from repro.serving.client import EngineClient
+from repro.serving.tokenizer import ByteTokenizer
+
+TOK = ByteTokenizer()
+
+
+@pytest.fixture(scope="module")
+def vcfg():
+    return get_config("qwen3-vl-toy")
+
+
+def _img(seed, shape=(32, 32, 3)):
+    return np.random.default_rng(seed).integers(0, 255, shape,
+                                                dtype=np.uint8)
+
+
+def _vreq(prompt, *, images=None, video_frames=None, max_tokens=4, **kw):
+    return Request(prompt_tokens=TOK.encode(prompt), images=images or [],
+                   video_frames=video_frames or [],
+                   sampling=SamplingParams(max_tokens=max_tokens), **kw)
+
+
+def _finished_ok(r):
+    return r.finish_reason in (FinishReason.STOP, FinishReason.LENGTH)
+
+
+# --------------------------------------------------------------------------- #
+# in-flight dedup: the singleflight contract
+# --------------------------------------------------------------------------- #
+def test_n8_concurrent_identical_images_one_encoder_call(vcfg):
+    """Eight concurrent requests with the same image: exactly one encoder
+    invocation (the viral-image case), seven singleflight joins, and every
+    output bit-identical to a solo cold run of the same request."""
+    ref = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                          vision_work_iters=1, enable_prefix_cache=False,
+                          enable_content_cache=False)
+    img = _img(7)
+    baseline = {}
+    for i in range(8):
+        r = _vreq(f"viral {i}", images=[img])
+        ref.generate([r])
+        baseline[i] = r.output_tokens
+
+    eng = InferenceEngine(vcfg, max_batch=8, cache_len=128,
+                          vision_work_iters=1)
+    reqs = [_vreq(f"viral {i}", images=[img]) for i in range(8)]
+    eng.generate(reqs)
+    assert all(_finished_ok(r) for r in reqs)
+    assert eng._img_encoder.calls == 1
+    assert eng.media_stats.encoder_invocations == 1
+    assert eng.media_stats.dedup_joins == 7
+    for i, r in enumerate(reqs):
+        assert r.output_tokens == baseline[i]
+    # singleflight also resolved the table: nothing left in flight
+    assert not eng._encode_tasks and not eng._media_jobs
+
+
+def test_dedup_holds_with_content_cache_disabled(vcfg):
+    """The singleflight invariant is engine-level, not a cache property:
+    with caching off, concurrent identical media still encode once."""
+    eng = InferenceEngine(vcfg, max_batch=4, cache_len=128,
+                          vision_work_iters=1, enable_content_cache=False)
+    img = _img(11)
+    reqs = [_vreq(f"q {i}", images=[img]) for i in range(4)]
+    eng.generate(reqs)
+    assert all(_finished_ok(r) for r in reqs)
+    assert eng._img_encoder.calls == 1
+    assert eng.media_stats.encoder_invocations == 1
+    assert eng.media_stats.dedup_joins == 3
+    # ...but a later identical request re-encodes (nothing was cached)
+    late = _vreq("late", images=[img])
+    eng.generate([late])
+    assert eng._img_encoder.calls == 2
+
+
+def test_distinct_images_are_not_deduped(vcfg):
+    eng = InferenceEngine(vcfg, max_batch=4, cache_len=128,
+                          vision_work_iters=1)
+    reqs = [_vreq(f"d {i}", images=[_img(100 + i)]) for i in range(4)]
+    eng.generate(reqs)
+    assert eng._img_encoder.calls == 4
+    assert eng.media_stats.dedup_joins == 0
+
+
+# --------------------------------------------------------------------------- #
+# cache-hit bit-exactness: cold vs embedding hit vs cross-KV hit
+# --------------------------------------------------------------------------- #
+def test_cold_vs_embed_hit_vs_xkv_hit_token_identical(vcfg):
+    img = _img(21)
+    prompts = ("describe the image", "what colour is it")
+
+    def cold(prompt):
+        eng = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                              vision_work_iters=1,
+                              enable_prefix_cache=False,
+                              enable_content_cache=False)
+        r = _vreq(prompt, images=[img], max_tokens=6)
+        eng.generate([r])
+        return r.output_tokens
+
+    reference = {p: cold(p) for p in prompts}
+
+    # full content cache: second prompt takes embedding hit + cross-KV hit
+    eng = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                          vision_work_iters=1)
+    r1 = _vreq(prompts[0], images=[img], max_tokens=6)
+    eng.generate([r1])
+    assert r1.output_tokens == reference[prompts[0]]
+    r2 = _vreq(prompts[1], images=[img], max_tokens=6)
+    eng.generate([r2])
+    assert r2.vision_cache_hits == 1 and r2.vision_cache_misses == 0
+    assert eng.media_stats.xkv_hits >= 1
+    assert r2.output_tokens == reference[prompts[1]]
+
+    # embeddings-only ablation: the hit path skips the encoder but still
+    # projects cross-KV — outputs must not move
+    emb_only = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                               vision_work_iters=1, cache_vision_kv=False)
+    ra = _vreq(prompts[0], images=[img], max_tokens=6)
+    rb = _vreq(prompts[1], images=[img], max_tokens=6)
+    emb_only.generate([ra])
+    emb_only.generate([rb])
+    assert rb.vision_cache_hits == 1
+    assert emb_only.media_stats.xkv_hits == 0
+    assert ra.output_tokens == reference[prompts[0]]
+    assert rb.output_tokens == reference[prompts[1]]
+
+
+def test_preemption_resume_bit_identical_with_media(vcfg):
+    """A media request evicted mid-decode resumes bit-identically — the
+    snapshot carries its ctx rows, so resume needs no re-encode."""
+    def scenario(policy, preemption):
+        eng = InferenceEngine(vcfg, max_batch=1, cache_len=256,
+                              vision_work_iters=1, sched_policy=policy,
+                              preemption=preemption)
+        batch = _vreq("long multimodal batch request", images=[_img(31)],
+                      max_tokens=24)
+        eng.add_request(batch)
+        for _ in range(4):
+            eng.step()
+        urgent = Request(prompt_tokens=TOK.encode("urgent interactive!"),
+                         sampling=SamplingParams(max_tokens=6),
+                         deadline_ms=1.0)
+        eng.add_request(urgent)
+        eng.run()
+        return batch, urgent, eng
+
+    b1, u1, _ = scenario("fifo", False)
+    b2, u2, eng = scenario("edf", True)
+    assert eng.scheduler.stats.preemptions >= 1
+    assert eng.scheduler.stats.resumed >= 1
+    encoder_calls_after_resume = eng._img_encoder.calls
+    assert encoder_calls_after_resume == 1      # resume never re-encoded
+    assert u2.finish_time < b2.finish_time
+    assert b1.output_tokens == b2.output_tokens
+    assert u1.output_tokens == u2.output_tokens
+
+
+def test_chaos_survivors_bit_identical_with_content_cache(vcfg):
+    """Under injected decode faults, surviving multimodal requests stay
+    token-for-token identical to a fault-free run — the content cache and
+    encode waves never leak one request's failure into a neighbour."""
+    shared = _img(41)
+
+    def reqs():
+        out = []
+        for i in range(6):
+            img = shared if i % 2 == 0 else _img(500 + i)
+            out.append(_vreq(f"chaos {i}", images=[img], max_tokens=6,
+                             request_id=940_000 + i))
+        return out
+
+    clean = InferenceEngine(vcfg, max_batch=4, cache_len=128,
+                            vision_work_iters=1)
+    baseline = {r.request_id: list(r.output_tokens)
+                for r in clean.generate(reqs())}
+    assert all(baseline.values())
+
+    chaotic = InferenceEngine(vcfg, max_batch=4, cache_len=128,
+                              vision_work_iters=1,
+                              faults=FaultInjector(seed=3,
+                                                   rates={"decode": 0.25}))
+    out = chaotic.generate(reqs())
+    failed = [r for r in out if r.finish_reason == FinishReason.ERROR]
+    survivors = [r for r in out if _finished_ok(r)]
+    assert failed and survivors
+    for r in survivors:
+        assert r.output_tokens == baseline[r.request_id]
+    # failures released their media jobs; the tables drain clean
+    assert not chaotic._encode_tasks and not chaotic._media_jobs
+
+
+# --------------------------------------------------------------------------- #
+# encode waves: streaming + interleaving
+# --------------------------------------------------------------------------- #
+def test_video_frames_stream_across_encode_waves(vcfg):
+    """With encode_wave=1 an 8-frame video needs 8 waves — interactive
+    text traffic admits and finishes while the video is still encoding,
+    instead of the video monopolising admission."""
+    eng = InferenceEngine(vcfg, max_batch=2, cache_len=128,
+                          vision_work_iters=1, encode_wave=1)
+    video = _vreq("summarise the video",
+                  video_frames=[_img(600 + i) for i in range(8)],
+                  max_tokens=4)
+    text = Request(prompt_tokens=TOK.encode("quick question"),
+                   sampling=SamplingParams(max_tokens=2))
+    eng.add_request(video)
+    eng.add_request(text)
+    eng.run()
+    assert _finished_ok(video) and _finished_ok(text)
+    assert text.finish_time < video.finish_time
+    assert eng.media_stats.encode_waves >= 8
+    assert eng._frame_encoder.calls == 8
+    # same video again: every frame hits the embedding cache
+    again = _vreq("summarise the video once more",
+                  video_frames=[_img(600 + i) for i in range(8)],
+                  max_tokens=4)
+    eng.generate([again])
+    assert again.vision_cache_hits == 8 and again.vision_cache_misses == 0
+    assert eng._frame_encoder.calls == 8
+
+
+def test_abort_pending_media_request_cancels_encode_tasks(vcfg):
+    eng = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                          vision_work_iters=1, encode_wave=1)
+    video = _vreq("doomed", video_frames=[_img(700 + i) for i in range(6)],
+                  max_tokens=4)
+    eng.add_request(video)
+    eng.step()                            # opens the job, encodes 1 frame
+    assert eng._encode_tasks
+    eng.abort(video.request_id)
+    assert not eng._encode_tasks and not eng._media_jobs
+    # the engine still serves clean traffic afterwards
+    ok = _vreq("fine", images=[_img(710)])
+    eng.generate([ok])
+    assert _finished_ok(ok)
+
+
+# --------------------------------------------------------------------------- #
+# paged arena: cross-KV residency + pressure ladder
+# --------------------------------------------------------------------------- #
+def test_paged_xkv_leases_pages_and_pressure_evicts_them(vcfg):
+    eng = InferenceEngine(vcfg, max_batch=2, cache_len=128,
+                          vision_work_iters=1, kv_layout="paged")
+    free0 = eng.pool.allocator.num_free
+    r = _vreq("paged media", images=[_img(51)], max_tokens=4)
+    eng.generate([r])
+    assert _finished_ok(r)
+    leased = eng.media_stats.xkv_lease_pages
+    assert leased > 0                     # cross-KV bytes are arena-visible
+    occ = eng.pool.page_occupancy()
+    assert occ["reclaimable"] >= leased
+    assert eng.pool.allocator.num_free < free0
+    # the pressure ladder's media rung: forced eviction releases the lease
+    assert eng.content_cache.evict_cross_kv_lru()
+    assert eng.media_stats.xkv_lease_pages == 0
+    # a fresh identical request re-publishes (miss, then re-lease)
+    r2 = _vreq("paged media again", images=[_img(51)], max_tokens=4)
+    eng.generate([r2])
+    assert eng.media_stats.xkv_lease_pages > 0
+
+
+def test_paged_media_outputs_match_dense(vcfg):
+    img = _img(61)
+    outs = []
+    for layout in ("dense", "paged"):
+        eng = InferenceEngine(vcfg, max_batch=2, cache_len=128,
+                              vision_work_iters=1, kv_layout=layout,
+                              **({"kv_page_size": 128}
+                                 if layout == "paged" else {}))
+        r1 = _vreq("cold paged", images=[img], max_tokens=6)
+        r2 = _vreq("warm paged", images=[img], max_tokens=6)
+        eng.generate([r1])
+        eng.generate([r2])
+        outs.append((r1.output_tokens, r2.output_tokens))
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------------------------- #
+# /stats counters
+# --------------------------------------------------------------------------- #
+def test_stats_expose_content_cache_counters(vcfg):
+    eng = InferenceEngine(vcfg, max_batch=2, cache_len=128,
+                          vision_work_iters=1)
+    client = EngineClient(engine=eng)
+    try:
+        img = _img(71)
+        for i in range(2):
+            r = _vreq(f"stats {i}", images=[img], max_tokens=3)
+            client.generate(r)
+        st = client.stats()["content_cache"]
+        assert st["enabled"] is True
+        assert st["encoder_invocations"] == 1
+        assert st["embed_hits"] == 1 and st["embed_misses"] == 1
+        assert st["xkv_hits"] == 1 and st["xkv_misses"] == 1
+        assert st["bytes"] > 0 and st["entries"] >= 2
+        for key in ("dedup_joins", "encode_waves", "encode_queue_depth",
+                    "xkv_lease_pages", "xkv_publish_skipped",
+                    "insertions", "evictions", "bytes_evicted"):
+            assert key in st
+    finally:
+        client.stop()
+
+
+def test_stats_content_cache_disabled_still_reports_media(vcfg):
+    eng = InferenceEngine(vcfg, max_batch=1, cache_len=128,
+                          vision_work_iters=1, enable_content_cache=False)
+    r = _vreq("no cache", images=[_img(81)])
+    eng.generate([r])
+    st = eng.content_cache_stats()
+    assert st["enabled"] is False
+    assert st["encoder_invocations"] == 1
+    assert "bytes" not in st

@@ -14,6 +14,7 @@ import urllib.error
 import urllib.request
 from pathlib import Path
 
+import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -30,6 +31,27 @@ def server():
     cfg = get_config("qwen3-0.6b-toy")
     engine = InferenceEngine(cfg, max_batch=4, cache_len=128)
     api = OpenAIServer(engine, "toy")
+    srv = ApiServer(api, port=0)
+    srv.start()
+    yield srv
+    srv.stop()
+    api.client.stop()
+
+
+@pytest.fixture(scope="module")
+def vl_server():
+    """Vision-model server for the ``chat_image_*`` fixtures: real encoder
+    stubs (cheap work_iters), with the synthetic:// fixture URL registered
+    in the in-process media store."""
+    from repro.serving.media import register_url
+
+    cfg = get_config("qwen3-vl-toy")
+    engine = InferenceEngine(cfg, max_batch=4, cache_len=256,
+                             vision_work_iters=1)
+    register_url("synthetic://golden-image",
+                 (np.arange(8 * 8 * 3) % 251)
+                 .reshape(8, 8, 3).astype(np.uint8))
+    api = OpenAIServer(engine, "toy-vl")
     srv = ApiServer(api, port=0)
     srv.start()
     yield srv
@@ -114,7 +136,10 @@ def _request_sse(server, fixture):
 
 
 @pytest.mark.parametrize("path", GOLDEN, ids=lambda p: p.stem)
-def test_golden_fixture(server, path):
+def test_golden_fixture(server, vl_server, path):
+    # chat_image_* fixtures need the vision model; everything else runs
+    # against the text-only server
+    server = vl_server if path.stem.startswith("chat_image") else server
     fixture = json.loads(path.read_text())
     if fixture.get("stream"):
         status, chunks = _request_sse(server, fixture)
