@@ -12,7 +12,7 @@ import time
 
 from benchmarks import (decode_loop, fig2_concurrency, load_trace,
                         mllm_cache, paged_kv, prefill_overlap, sched_policy,
-                        table1_throughput, table4_ablation,
+                        spec_decode, table1_throughput, table4_ablation,
                         table7_text_prefix)
 from benchmarks.common import ROWS
 
@@ -21,6 +21,7 @@ SUITES = [
     ("decode_loop", decode_loop.run),
     ("prefill_overlap", prefill_overlap.run),
     ("sched_policy", sched_policy.run),
+    ("spec_decode", spec_decode.run),
     ("load_trace", load_trace.run),
     ("paged_kv", paged_kv.run),
     ("mllm_cache", mllm_cache.run),

@@ -23,6 +23,13 @@ This suite pins both sides of that trade for the policy subsystem:
                       freed within ~1 decode step instead of riding out a
                       full K-token block — run() asserts the reclaim
                       latency drops
+  * ``sampler_mix`` — FIFO + speculative filling with a *heterogeneous
+                      sampler batch*: rows cycle greedy / temperature /
+                      temperature+top_p (seeded), exercising the
+                      per-slot sampler state threaded through the decode
+                      block (PR 5).  Compared against ``fifo`` (the same
+                      schedule with an all-greedy batch) it prices the
+                      masked-sampling work a mixed batch adds per step
   * ``priority``    — priority ordering + speculative filling
   * ``edf``         — earliest-deadline-first + speculative filling
   * ``edf_preempt`` — EDF + slot preemption (urgent requests evict the
@@ -87,14 +94,16 @@ OUT = Path("BENCH_sched_policy.json")
 ABORT_FRAC = 0.25
 
 VARIANTS = [
-    # (tag, policy, preemption, speculative_fill, abort_frac, reclaim_hint)
-    ("fifo_nospec", "fifo", False, False, 0.0, False),
-    ("fifo", "fifo", False, True, 0.0, False),
-    ("fifo_abort", "fifo", False, True, ABORT_FRAC, False),
-    ("fifo_abort_hint", "fifo", False, True, ABORT_FRAC, True),
-    ("priority", "priority", False, True, 0.0, False),
-    ("edf", "edf", False, True, 0.0, False),
-    ("edf_preempt", "edf", True, True, 0.0, False),
+    # (tag, policy, preemption, speculative_fill, abort_frac, reclaim_hint,
+    #  sampler_mix)
+    ("fifo_nospec", "fifo", False, False, 0.0, False, False),
+    ("fifo", "fifo", False, True, 0.0, False, False),
+    ("fifo_abort", "fifo", False, True, ABORT_FRAC, False, False),
+    ("fifo_abort_hint", "fifo", False, True, ABORT_FRAC, True, False),
+    ("priority", "priority", False, True, 0.0, False, False),
+    ("edf", "edf", False, True, 0.0, False, False),
+    ("edf_preempt", "edf", True, True, 0.0, False, False),
+    ("sampler_mix", "fifo", False, True, 0.0, False, True),
 ]
 
 SMOKE = dict(concurrency=[4], batch_prompt=48, batch_tokens=12,
@@ -102,8 +111,22 @@ SMOKE = dict(concurrency=[4], batch_prompt=48, batch_tokens=12,
              prefill_chunk=16, warm_steps=2, repeats=1)
 
 
-def _batch_requests(n: int, prompt_len: int, max_tokens: int
-                    ) -> List[Request]:
+def _sampling(i: int, max_tokens: int, mix: bool) -> SamplingParams:
+    """All-greedy by default; with ``mix`` the batch cycles greedy /
+    temperature / temperature+top_p rows (stochastic rows seeded, so the
+    episode stays replayable) — the heterogeneous sampler composition the
+    per-slot sampler state exists for."""
+    if not mix or i % 3 == 0:
+        return SamplingParams(max_tokens=max_tokens)
+    if i % 3 == 1:
+        return SamplingParams(max_tokens=max_tokens, temperature=0.8,
+                              seed=1000 + i)
+    return SamplingParams(max_tokens=max_tokens, temperature=0.7,
+                          top_p=0.9, seed=1000 + i)
+
+
+def _batch_requests(n: int, prompt_len: int, max_tokens: int,
+                    mix: bool = False) -> List[Request]:
     # staggered prompt lengths (1x / 0.75x / 0.5x): jobs drop out of the
     # chunk queue at different waves, so wave sizes pass through non-power
     # -of-two values and leave padding rows for speculative filling — the
@@ -114,17 +137,17 @@ def _batch_requests(n: int, prompt_len: int, max_tokens: int
         plen = lens[i % len(lens)]
         body = f"batch {i} " + "payload " * plen
         out.append(Request(prompt_tokens=TOK.encode(body)[:plen],
-                           sampling=SamplingParams(max_tokens=max_tokens)))
+                           sampling=_sampling(i, max_tokens, mix)))
     return out
 
 
-def _interactive_requests(n: int, prompt_len: int, max_tokens: int
-                          ) -> List[Request]:
+def _interactive_requests(n: int, prompt_len: int, max_tokens: int,
+                          mix: bool = False) -> List[Request]:
     out = []
     for i in range(n):
         body = f"chat {i} " + "hi " * prompt_len
         out.append(Request(prompt_tokens=TOK.encode(body)[:prompt_len],
-                           sampling=SamplingParams(max_tokens=max_tokens),
+                           sampling=_sampling(i + 1, max_tokens, mix),
                            priority=5, deadline_ms=DEADLINE_MS))
     return out
 
@@ -140,7 +163,7 @@ def _engine(policy: str, preempt: bool, spec: bool, conc: int,
 
 
 def _episode(eng: InferenceEngine, knobs: dict, conc: int,
-             abort_frac: float = 0.0) -> dict:
+             abort_frac: float = 0.0, mix: bool = False) -> dict:
     """One mixed-workload episode; returns raw per-class measurements.
 
     With ``abort_frac > 0``, that fraction of the batch requests is
@@ -149,14 +172,14 @@ def _episode(eng: InferenceEngine, knobs: dict, conc: int,
     Reclaim *latency* is measured separately by :func:`_reclaim_probe`,
     which controls the decode-block size the abort has to ride out."""
     batch = _batch_requests(2 * conc, knobs["batch_prompt"],
-                            knobs["batch_tokens"])
+                            knobs["batch_tokens"], mix)
     t0 = time.monotonic()
     for r in batch:
         eng.add_request(r)
     for _ in range(knobs["warm_steps"]):   # fill slots, build the backlog
         eng.step()
     inter = _interactive_requests(conc, knobs["inter_prompt"],
-                                  knobs["inter_tokens"])
+                                  knobs["inter_tokens"], mix)
     for r in inter:
         eng.add_request(r)
     victims: List[Request] = []
@@ -244,26 +267,26 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
     whichever one it happened to land on, so the best-of comparison stays
     apples-to-apples."""
     engines = {}
-    for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
+    for tag, policy, preempt, spec, abort_frac, hint, mix in VARIANTS:
         eng = _engine(policy, preempt, spec, conc, knobs["cache_len"],
                       knobs["prefill_chunk"], params)
-        _episode(eng, knobs, conc, abort_frac)         # warmup (compiles)
+        _episode(eng, knobs, conc, abort_frac, mix)    # warmup (compiles)
         if abort_frac > 0:
             _reclaim_probe(eng, knobs, conc, hint)     # compiles probe shapes
         engines[tag] = eng
     best: dict = {}
     for _ in range(knobs["repeats"]):
-        for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
+        for tag, policy, preempt, spec, abort_frac, hint, mix in VARIANTS:
             eng = engines[tag]
             before = {k: getattr(eng.scheduler.stats, k)
                       for k in _STAT_DELTAS}
-            row = _episode(eng, knobs, conc, abort_frac)
+            row = _episode(eng, knobs, conc, abort_frac, mix)
             delta = {k: getattr(eng.scheduler.stats, k) - before[k]
                      for k in _STAT_DELTAS}
             row.update({
                 "variant": tag, "policy": policy, "preemption": preempt,
                 "speculative_fill": spec, "abort_frac": abort_frac,
-                "reclaim_hint": hint,
+                "reclaim_hint": hint, "sampler_mix": mix,
                 "concurrency": conc, "requests": 3 * conc,
                 "rows_per_wave": (delta["prefill_chunks"]
                                   / max(delta["prefill_waves"], 1)),
@@ -271,7 +294,7 @@ def _measure_all(conc: int, knobs: dict, params) -> List[dict]:
             })
             if tag not in best or row["tok_s"] > best[tag]["tok_s"]:
                 best[tag] = row
-    for tag, policy, preempt, spec, abort_frac, hint in VARIANTS:
+    for tag, policy, preempt, spec, abort_frac, hint, mix in VARIANTS:
         reclaims = np.array([0.0])
         if abort_frac > 0:
             samples = _reclaim_probe(engines[tag], knobs, conc, hint)

@@ -120,8 +120,13 @@ from repro.core.request import (FinishReason, PromptTooLongError, Request,
 from repro.core.sampling import (masked_sample, masked_sample_inner,
                                  request_base_key, validate_sampling_params)
 from repro.core.scheduler import ContinuousBatchingScheduler, SchedulingPolicy
+from repro.core.spec_decode import (DraftModelSource, DraftSource,
+                                    NGramDraftSource, SpecController,
+                                    SpecStats, build_spec_verify_fn,
+                                    stage_drafts)
 from repro.core.streaming import StopSequenceChecker, TokenStreamDecoder
 from repro.models import build_model
+from repro.models.model import init_cache
 from repro.serving.media import AudioEncoderStub, VisionEncoderStub, decode_media
 from repro.serving.tokenizer import ByteTokenizer
 
@@ -260,6 +265,11 @@ class InferenceEngine:
         kv_page_size: int = 16,          # tokens per KV page (paged layout)
         kv_num_pages: Optional[int] = None,  # arena size; None = full capacity
         kv_dtype: str = "fp",            # 'fp' | 'int8' (paged layout only)
+        spec_mode: str = "off",          # 'off' | 'ngram' | 'draft'
+        spec_k: int = 4,                 # max drafted tokens per round
+        spec_draft_config: Optional[Any] = None,  # name | ModelConfig
+        spec_draft_params: Optional[Any] = None,  # None = seeded init
+        spec_ngram_max: int = 3,         # longest lookup n-gram
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -290,6 +300,21 @@ class InferenceEngine:
         self.speculative_fill = speculative_fill
         self.max_spec_jobs = (max_batch if max_spec_jobs is None
                               else max(0, max_spec_jobs))
+        # speculative *decoding* (draft-verify, core/spec_decode.py) — a
+        # different axis from speculative prefill filling above
+        assert spec_mode in ("off", "ngram", "draft"), spec_mode
+        self.spec_mode = spec_mode
+        self.spec_k = max(1, spec_k) if spec_mode != "off" else 0
+        if spec_mode != "off":
+            if any(k.startswith("ssm") for k in cfg.layer_kinds()):
+                raise ValueError(
+                    "speculative decoding needs an attention decode path: "
+                    f"family '{cfg.family}' decodes recurrent state strictly "
+                    "one token at a time")
+            if spec_mode == "draft" and spec_draft_config is None:
+                raise ValueError("spec_mode='draft' requires "
+                                 "spec_draft_config (a config name or "
+                                 "ModelConfig for the draft model)")
 
         # media geometry
         self.media_kind = ("vision" if cfg.vision is not None
@@ -370,7 +395,7 @@ class InferenceEngine:
         # draw from this engine-owned chain at add_request (deterministic
         # for a fixed engine seed + submission order).
         self.state = init_decode_state(max_batch, self.ctx_len,
-                                       max_stop_tokens)
+                                       max_stop_tokens, spec_k=self.spec_k)
         self._request_rng = jax.random.PRNGKey(seed + 1)
         self._streamers: Dict[int, TokenStreamDecoder] = {}
         # per-request stop-sequence checkers (only for requests that set
@@ -410,6 +435,39 @@ class InferenceEngine:
         self._step_count = 0
         self._prefill_fns: Dict[Tuple, Any] = {}
         self._decode_block_fn = self._build_decode_block_fn()
+
+        # speculation infrastructure: counters + controller exist even when
+        # off (stable /stats schema); the verify fn and draft source only
+        # when a mode is selected
+        self.spec_stats = SpecStats()
+        self.spec_controller = SpecController()
+        self._draft_source: Optional[DraftSource] = None
+        self._spec_verify_fn = None
+        if self.spec_mode != "off":
+            self._spec_verify_fn = build_spec_verify_fn(
+                self.model, use_ctx=self.media_kind != "none",
+                n_top=self.max_top_logprobs, paged=self._paged,
+                cache_len=cache_len,
+                page_size=self.pool.page_size if self._paged else 0)
+            if self.spec_mode == "draft":
+                dcfg = spec_draft_config
+                if isinstance(dcfg, str):
+                    from repro.configs import get_config
+                    dcfg = get_config(dcfg)
+                if dcfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab {dcfg.vocab_size} != target vocab "
+                        f"{cfg.vocab_size}: draft proposals must be target "
+                        "token ids")
+                if any(k.startswith("ssm") for k in dcfg.layer_kinds()) or \
+                        dcfg.vision is not None or dcfg.audio is not None:
+                    raise ValueError("the draft model must be a text-only "
+                                     "attention config")
+                self._draft_source = DraftModelSource(
+                    dcfg, spec_draft_params, max_batch=max_batch,
+                    cache_len=cache_len, seed=seed)
+            else:
+                self._draft_source = NGramDraftSource(max_n=spec_ngram_max)
 
     # ------------------------------------------------------------------ #
     # compiled steps
@@ -1069,9 +1127,19 @@ class InferenceEngine:
         self.scheduler.requeue(slot)
         self.pool.free(slot)
         self._live_slots.discard(slot)
+        self._spec_release(slot)
         # freeze the slot on-device so decode blocks dispatched before the
         # next admission lands there cannot advance stale state
         self._deactivate_slot(slot)
+
+    def _spec_release(self, slot: int) -> None:
+        """Drop a slot's speculation state (EWMA entry, draft-pool primed
+        mark) when the slot detaches from its request — retire, eviction,
+        or abort/failure.  Draft state drops cleanly on evict; a resume
+        re-primes at the shared admission point."""
+        if self.spec_mode != "off":
+            self.spec_controller.release(slot)
+            self._draft_source.release(slot)
 
     def _deactivate_slot(self, slot: int) -> None:
         """Freeze a slot's device row (preemption, host-side stop-sequence
@@ -1568,6 +1636,78 @@ class InferenceEngine:
                          for _, req, *_ in rows], jnp.int32),
             jnp.asarray(stops),
             jnp.asarray([active for *_, active in rows], bool))
+        for _, req, *_ in rows:
+            # `echo` + logprobs: prompt-token logprobs are computed once at
+            # the first admission commit (resumes keep the stored list)
+            if (req.sampling.echo and req.sampling.logprobs
+                    and req.prompt_logprobs is None):
+                self._compute_prompt_logprobs(req)
+        if self.spec_mode == "off":
+            return
+        # speculation joins at the same single admission point: acceptance
+        # EWMA resets optimistic, and the draft-model rung re-primes its KV
+        # from the slot's committed history (preemption resume included)
+        for slot, _, _, _, _, act in rows:
+            if act:
+                self.spec_controller.on_admit(slot)
+        if isinstance(self._draft_source, DraftModelSource):
+            for slot, req, last, pos, _, act in rows:
+                if not act:
+                    self._draft_source.release(slot)
+                    continue
+                base = req.prompt_tokens + req.output_tokens
+                if len(base) >= pos:
+                    self._draft_source.prime(slot, base[:pos] + [last])
+                else:       # history unavailable: slot simply never drafts
+                    self._draft_source.release(slot)
+            self._draft_source.admit(
+                [slot for slot, *_ in rows],
+                [last for _, _, last, *_ in rows],
+                [pos for _, _, _, pos, *_ in rows],
+                [s[0] for s in samp], [s[1] for s in samp],
+                [s[2] for s in samp], [s[3] for s in samp],
+                np.stack([req.sample_key for _, req, *_ in rows]),
+                [active for *_, active in rows])
+
+    def _echo_fn(self, bucket: int):
+        """Teacher-forced full-logits pass for prompt-token logprobs
+        (OpenAI ``echo``): one batch=1 prefill-mode forward over the padded
+        prompt, log-softmaxed.  Same forward as the admission prefill, so
+        the returned values are exactly the prefill wave's logits — the
+        throwaway cache is sized to the bucket and dropped."""
+        if not hasattr(self, "_echo_fns"):
+            self._echo_fns: Dict[int, Any] = {}
+        if bucket not in self._echo_fns:
+            model = self.model
+
+            @jax.jit
+            def run(params, cache, toks, length):
+                pos = jnp.arange(bucket)[None, :]
+                sv = (jnp.arange(bucket) < length)[None, :]
+                out = model.apply(params, toks, mode="prefill",
+                                  positions=pos, cache=cache, seq_valid=sv)
+                return jax.nn.log_softmax(
+                    out.logits[0].astype(jnp.float32), axis=-1)
+
+            self._echo_fns[bucket] = run
+        return self._echo_fns[bucket]
+
+    def _compute_prompt_logprobs(self, req: Request) -> None:
+        toks = req.prompt_tokens
+        n = len(toks)
+        if n <= 1:
+            req.prompt_logprobs = [None] * n
+            return
+        bucket = _next_bucket(n, floor=self._bucket_floor)
+        cache = init_cache(self.cfg, 1, bucket)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :n] = toks
+        lp = np.asarray(self._echo_fn(bucket)(
+            self.params, cache, jnp.asarray(padded), jnp.int32(n)))
+        out: List[Optional[float]] = [None]
+        for i in range(1, n):
+            out.append(float(lp[i - 1, toks[i]]))
+        req.prompt_logprobs = out
 
     # ------------------------------------------------------------------ #
     # emit / finish / abort (the host side of the request lifecycle)
@@ -1666,6 +1806,7 @@ class InferenceEngine:
         self.scheduler.retire(slot)
         self.pool.free(slot)
         self._live_slots.discard(slot)
+        self._spec_release(slot)
 
     def abort(self, request_id: int) -> List[StreamEvent]:
         """Cancel a request wherever it currently lives (see
@@ -1713,6 +1854,7 @@ class InferenceEngine:
             self.scheduler.abort_slot(slot)
             self.pool.free(slot)
             self._live_slots.discard(slot)
+            self._spec_release(slot)
             self._deactivate_slot(slot)
         else:
             req = self.scheduler.abort_pending(request_id)
@@ -1760,7 +1902,12 @@ class InferenceEngine:
         # fresh decode state first: the failure paths below touch it
         # (_deactivate_slot), and the donated one may already be invalid
         self.state = init_decode_state(self.pool.max_batch, self.ctx_len,
-                                       self.max_stop_tokens)
+                                       self.max_stop_tokens,
+                                       spec_k=self.spec_k)
+        if isinstance(self._draft_source, DraftModelSource):
+            # the draft pool/state may have been donated into the failed
+            # round as well — rebuild both; slots re-prime at re-admission
+            self._draft_source.reset()
         for slot in sorted(self._live_slots):
             req = self.scheduler.active.get(slot)
             if req is not None:
@@ -1902,12 +2049,123 @@ class InferenceEngine:
         # before the request can reach a decode slot
         validate_sampling_params(req.sampling.top_p, req.sampling.top_k,
                                  req.sampling.min_p, req.sampling.seed)
+        if req.sampling.echo and (req.images or req.video_frames
+                                  or req.audio is not None):
+            raise ValueError(
+                "echo is supported for text-only prompts (prompt logprobs "
+                "are teacher-forced over the token sequence alone)")
         self._assign_sample_key(req)
 
     def add_request(self, req: Request) -> None:
         self.validate_request(req)
         req.status = RequestStatus.QUEUED
         self.scheduler.add(req)
+
+    # ------------------------------------------------------------------ #
+    # speculative decoding rounds
+    # ------------------------------------------------------------------ #
+    def _plan_spec_lens(self, reclaim_queued: bool) -> Optional[np.ndarray]:
+        """Host-side staging plan for one draft-verify round: per-slot draft
+        lengths, or None to run a normal decode block instead.
+
+        A slot stages zero drafts when (guards, in order): the scheduler is
+        under pressure or acceptance is on probation (``plan_spec_k`` = 0);
+        its ring would wrap inside the round (``pos + spec_k >= cache_len``
+        — a wrapped validity mask would let a verify query attend to cells
+        written for later queries in the same batched pass); its remaining
+        budget cannot accept any draft; or (draft rung) its draft KV is not
+        primed.  All-zero rounds return None so an unspeculable batch keeps
+        the K-step amortisation of plain block decode."""
+        acceptance = self.spec_controller.tick()
+        k_cap = self.scheduler.plan_spec_k(self.spec_k, acceptance,
+                                           reclaim_queued=reclaim_queued)
+        if k_cap <= 0:
+            return None
+        lens = np.zeros((self.pool.max_batch,), np.int32)
+        props: Dict[int, List[int]] = {}
+        draft_rung = isinstance(self._draft_source, DraftModelSource)
+        for slot, pos in self._live_positions().items():
+            req = self.scheduler.active[slot]
+            if pos + self.spec_k >= self.pool.cache_len:
+                continue
+            kmax = min(k_cap, req.sampling.max_tokens
+                       - req.num_generated - 1)
+            if kmax <= 0:
+                continue
+            if draft_rung:
+                if self._draft_source.primed(slot):
+                    lens[slot] = kmax
+            else:
+                p = self._draft_source.propose(
+                    req.prompt_tokens + req.output_tokens, kmax)
+                if p:
+                    props[slot] = p
+                    lens[slot] = len(p)
+        if not lens.any():
+            return None
+        self._spec_props = props
+        return lens
+
+    def _dispatch_spec_round(self, lens: np.ndarray, want_lp: bool):
+        """Stage drafts and dispatch one compiled verify round; returns the
+        block plan + accounting arrays, or None on catastrophic failure
+        (recovery already ran)."""
+        fix = None
+        q = None
+        if self._paged:
+            # the verify forward writes up to spec_k + 1 positions per slot
+            self._ensure_paged_capacity(self.spec_k + 1)
+        if isinstance(self._draft_source, DraftModelSource):
+            snap, start_pos, drafts, q = \
+                self._draft_source.draft_round(self.spec_k)
+            fix = (snap, start_pos)
+        else:
+            host = np.zeros((self.pool.max_batch, self.spec_k), np.int32)
+            for slot, p in self._spec_props.items():
+                host[slot, :len(p)] = p
+            drafts = jnp.asarray(host)
+        self.state = stage_drafts(self.state, drafts,
+                                  jnp.asarray(lens, dtype=jnp.int32))
+        try:
+            cache, state, toks, n_acc, n_emit, lps = self._spec_verify_fn(
+                self.params, self.pool.cache, self.state, q,
+                spec_k=self.spec_k, want_logprobs=want_lp,
+                use_q=self._draft_source.uses_q)
+        except Exception as e:      # catastrophic round failure
+            self._recover_decode_block(e)
+            return None
+        self.pool.cache = cache
+        self.state = state
+        if fix is not None:
+            self._draft_source.fixup(self.spec_k, *fix, state)
+        return {"plan": (self.spec_k + 1, toks, lps),
+                "lens": lens, "n_acc": n_acc, "n_emit": n_emit}
+
+    def _account_spec_round(self, meta: Dict[str, Any]) -> None:
+        lens = meta["lens"]
+        n_acc = np.asarray(meta["n_acc"])
+        n_emit = np.asarray(meta["n_emit"])
+        st = self.spec_stats
+        st.rounds += 1
+        st.emitted += int(n_emit.sum())
+        for slot in np.nonzero(lens)[0]:
+            d = int(lens[slot])
+            a = int(min(n_acc[slot], d))
+            st.drafted += d
+            st.accepted += a
+            st.rejected += d - a
+            self.spec_controller.observe(int(slot), d, a)
+
+    def speculation_stats(self) -> Dict[str, Any]:
+        """Speculation counter block for ``GET /stats`` (plain-int reads,
+        same concurrency contract as ``scheduler.snapshot``)."""
+        out: Dict[str, Any] = {"mode": self.spec_mode, "k": self.spec_k}
+        out.update(self.spec_stats.snapshot())
+        out["slot_acceptance_ewma"] = self.spec_controller.snapshot()
+        out["draft_pool_bytes"] = (
+            self._draft_source.nbytes
+            if isinstance(self._draft_source, DraftModelSource) else 0)
+        return out
 
     def step(self) -> List[StreamEvent]:
         """One scheduler iteration (paper Alg.1 loop body, K tokens).
@@ -1931,29 +2189,40 @@ class InferenceEngine:
         # yet); K collapses to 1 while requests, chunks, or — via the
         # client-installed reclaim hint — aborts wait at the boundary
         block_plan = None
+        spec_meta = None
         if self._live_slots:
-            num_steps = self.scheduler.plan_decode_block(
-                self.max_decode_block,
-                reclaim_queued=bool(self.reclaim_hint is not None
-                                    and self.reclaim_hint()))
+            reclaim_q = bool(self.reclaim_hint is not None
+                             and self.reclaim_hint())
             want_lp = any(r.sampling.logprobs
                           for s, r in self.scheduler.active.items()
                           if s in self._live_slots)
-            if self._paged:
-                # the block's KV writes must land on exclusively-owned
-                # pages: allocate tails / COW-split shared pages now, under
-                # the page-pressure ladder (can shrink _live_slots)
-                self._ensure_paged_capacity(num_steps)
-            try:
-                cache, state, toks, lps = self._decode_block_fn(
-                    self.params, self.pool.cache, self.state,
-                    num_steps=num_steps, want_logprobs=want_lp)
-            except Exception as e:  # catastrophic block failure
-                self._recover_decode_block(e)
+            spec_lens = (self._plan_spec_lens(reclaim_q)
+                         if self._spec_verify_fn is not None else None)
+            if spec_lens is not None:
+                # draft-verify round: one wider forward commits up to
+                # spec_k + 1 tokens per slot in a single device dispatch
+                spec_meta = self._dispatch_spec_round(spec_lens, want_lp)
+                if spec_meta is not None:
+                    block_plan = spec_meta["plan"]
             else:
-                self.pool.cache = cache
-                self.state = state
-                block_plan = (num_steps, toks, lps)
+                num_steps = self.scheduler.plan_decode_block(
+                    self.max_decode_block, reclaim_queued=reclaim_q)
+                if self._paged:
+                    # the block's KV writes must land on exclusively-owned
+                    # pages: allocate tails / COW-split shared pages now,
+                    # under the page-pressure ladder (can shrink
+                    # _live_slots)
+                    self._ensure_paged_capacity(num_steps)
+                try:
+                    cache, state, toks, lps = self._decode_block_fn(
+                        self.params, self.pool.cache, self.state,
+                        num_steps=num_steps, want_logprobs=want_lp)
+                except Exception as e:  # catastrophic block failure
+                    self._recover_decode_block(e)
+                else:
+                    self.pool.cache = cache
+                    self.state = state
+                    block_plan = (num_steps, toks, lps)
 
         # 3. run an encode wave + dispatch the prefill wave behind the
         # in-flight decode block: both are host/new-device work that hides
@@ -1971,7 +2240,12 @@ class InferenceEngine:
                 lp_c, lp_v, lp_i = (np.asarray(a) for a in lps)
             self._step_count += 1
             self.scheduler.stats.steps += 1
-            self.scheduler.stats.device_steps += num_steps
+            # one spec round is ONE device dispatch however many rows it
+            # commits — that asymmetry is the whole point
+            self.scheduler.stats.device_steps += \
+                (1 if spec_meta is not None else num_steps)
+            if spec_meta is not None:
+                self._account_spec_round(spec_meta)
             live = {s: r for s, r in self.scheduler.active.items()
                     if s in self._live_slots}
             for k in range(num_steps):

@@ -61,9 +61,13 @@ class DecodeState(NamedTuple):
     budget: jax.Array  # [B] int32 — tokens left before LENGTH stop
     stop_tokens: jax.Array  # [B, S] int32 — per-slot stop ids, -1 pad
     active: jax.Array  # [B] bool — False: slot frozen/empty
+    draft_tokens: jax.Array  # [B, K] int32 — staged speculative proposals
+    draft_len: jax.Array  # [B] int32 — proposals staged this round (<= K)
 
 
-def init_decode_state(max_batch: int, ctx_len: int, max_stop: int) -> DecodeState:
+def init_decode_state(
+    max_batch: int, ctx_len: int, max_stop: int, spec_k: int = 0
+) -> DecodeState:
     return DecodeState(
         last_token=jnp.zeros((max_batch,), jnp.int32),
         positions=jnp.zeros((max_batch,), jnp.int32),
@@ -76,6 +80,8 @@ def init_decode_state(max_batch: int, ctx_len: int, max_stop: int) -> DecodeStat
         budget=jnp.zeros((max_batch,), jnp.int32),
         stop_tokens=jnp.full((max_batch, max_stop), -1, jnp.int32),
         active=jnp.zeros((max_batch,), bool),
+        draft_tokens=jnp.zeros((max_batch, max(spec_k, 1)), jnp.int32),
+        draft_len=jnp.zeros((max_batch,), jnp.int32),
     )
 
 
@@ -108,6 +114,8 @@ def admit_decode_state(
         budget=state.budget.at[slots].set(budget),
         stop_tokens=state.stop_tokens.at[slots].set(stop_tokens),
         active=state.active.at[slots].set(active),
+        draft_tokens=state.draft_tokens.at[slots].set(0),
+        draft_len=state.draft_len.at[slots].set(0),
     )
 
 
@@ -158,6 +166,87 @@ def select_cache_slots(active: jax.Array, positions: jax.Array, new_cache, old_c
             for pos, sub in new_cache["block"].items()
         }
         if old_cache.get("block") is not None
+        else None
+    )
+    return out
+
+
+def gather_ring_cells(cache, slots: jax.Array):
+    """Snapshot the dense-ring cells ``slots`` ([B, S] ring indices) from
+    every self-attention ``k``/``v`` leaf, as a pytree of [B, S, ...] (or
+    stacked [L, B, S, ...]) cell blocks.
+
+    Speculative verification snapshots the S = k_draft + 1 cells its batched
+    forward may overwrite, runs the forward, then hands the snapshot to
+    :func:`restore_ring_cells` to roll back the cells of rejected drafts —
+    the masked-KV-rollback half of the draft/verify contract
+    (DESIGN_spec_decode.md).  Only ``k``/``v`` carry per-position ring state;
+    cross-attention context (``xk``/``xv``) is read-only during decode and
+    recurrent SSM leaves are excluded by the engine's family gate."""
+    b, s = slots.shape
+    bidx2 = jnp.arange(b)[:, None]
+
+    def g(leaf, stacked: bool):
+        if stacked:  # [L, B, C, ...]
+            return leaf[:, bidx2, slots]
+        return leaf[bidx2, slots]
+
+    snap = {
+        "prefix": [
+            {n: g(bp[n], False) for n in bp if n in ("k", "v")} for bp in cache["prefix"]
+        ]
+    }
+    snap["block"] = (
+        {
+            pos: {n: g(sub[n], True) for n in sub if n in ("k", "v")}
+            for pos, sub in cache["block"].items()
+        }
+        if cache.get("block") is not None
+        else None
+    )
+    return snap
+
+
+def restore_ring_cells(cache, snap, slots: jax.Array, keep: jax.Array):
+    """Roll back the ring cells of rejected speculative positions.
+
+    ``slots`` is the same [B, S] cell grid handed to
+    :func:`gather_ring_cells`; ``keep`` is a [B, S] bool mask — True keeps
+    the verification forward's freshly-written cell (accepted draft), False
+    restores the pre-forward snapshot.  Cell indices are distinct within a
+    row (consecutive ring positions, S <= cache_len), so the scatter has no
+    write conflicts."""
+    b, s = slots.shape
+    bidx2 = jnp.arange(b)[:, None]
+
+    def r(leaf, snap_cells, stacked: bool):
+        if stacked:
+            cur = leaf[:, bidx2, slots]
+            mask = keep.reshape((1, b, s) + (1,) * (cur.ndim - 3))
+            return leaf.at[:, bidx2, slots].set(jnp.where(mask, cur, snap_cells))
+        cur = leaf[bidx2, slots]
+        mask = keep.reshape((b, s) + (1,) * (cur.ndim - 2))
+        return leaf.at[bidx2, slots].set(jnp.where(mask, cur, snap_cells))
+
+    out = {
+        "prefix": [
+            {n: (r(bp[n], sn[n], False) if n in sn else bp[n]) for n in bp}
+            for bp, sn in zip(cache["prefix"], snap["prefix"])
+        ]
+    }
+    out["block"] = (
+        {
+            pos: {
+                n: (
+                    r(sub[n], snap["block"][pos][n], True)
+                    if n in snap["block"][pos]
+                    else sub[n]
+                )
+                for n in sub
+            }
+            for pos, sub in cache["block"].items()
+        }
+        if cache.get("block") is not None
         else None
     )
     return out

@@ -674,6 +674,75 @@ class PagedKVPool:
 
 
 # --------------------------------------------------------------------------- #
+# speculative-decode rollback (paged variant of kv_cache.gather_ring_cells)
+# --------------------------------------------------------------------------- #
+def gather_page_cells(cache, pages: jax.Array, offs: jax.Array):
+    """Snapshot arena cells ``(pages[b, j], offs[b, j])`` from every arena
+    leaf (k/v and, under int8, their scale leaves) as [B, S, ...] blocks
+    (stacked block layers [L, B, S, ...]).
+
+    The speculative verifier snapshots the S = k_draft + 1 cells its batched
+    forward may write, then restores rejected ones with
+    :func:`restore_page_cells`.  Callers redirect the (page, off) pairs of
+    rows/cells that must not touch real pages (frozen slots, beyond-draft
+    positions) to the slot's reserved trash cell, mirroring the attention
+    write redirect — so rollback can never write a page another slot owns,
+    and rejected-tail pages stay slot-owned (freed at slot release, never
+    leaked)."""
+
+    def g(leaf, stacked):
+        if stacked:                                   # [L, N, ps, ...]
+            return leaf[:, pages, offs]
+        return leaf[pages, offs]
+
+    snap = {"prefix": [
+        {n: g(sub[n], False) for n in sub if n in ARENA_KEYS}
+        for sub in cache["prefix"]
+    ]}
+    snap["block"] = (
+        {pos: {n: g(sub[n], True) for n in sub if n in ARENA_KEYS}
+         for pos, sub in cache["block"].items()}
+        if cache.get("block") is not None else None)
+    return snap
+
+
+def restore_page_cells(cache, snap, pages: jax.Array, offs: jax.Array,
+                       keep: jax.Array):
+    """Roll back rejected speculative cells in the arena.
+
+    ``keep`` [B, S]: True keeps the verification forward's fresh cell,
+    False restores the snapshot.  Trash-redirected entries may repeat a
+    cell within a row, but every such write carries the same snapshot value
+    (gathered from that very cell pre-forward), so duplicate scatters are
+    order-independent."""
+    b, s = pages.shape
+
+    def r(leaf, snap_cells, stacked):
+        if stacked:
+            cur = leaf[:, pages, offs]
+            mask = keep.reshape((1, b, s) + (1,) * (cur.ndim - 3))
+            return leaf.at[:, pages, offs].set(
+                jnp.where(mask, cur, snap_cells))
+        cur = leaf[pages, offs]
+        mask = keep.reshape((b, s) + (1,) * (cur.ndim - 2))
+        return leaf.at[pages, offs].set(jnp.where(mask, cur, snap_cells))
+
+    out = dict(cache)
+    out["prefix"] = [
+        {n: (r(sub[n], sn[n], False) if n in sn else sub[n]) for n in sub}
+        for sub, sn in zip(cache["prefix"], snap["prefix"])
+    ]
+    if cache.get("block") is not None:
+        out["block"] = {
+            pos: {n: (r(sub[n], snap["block"][pos][n], True)
+                      if n in snap["block"][pos] else sub[n])
+                  for n in sub}
+            for pos, sub in cache["block"].items()
+        }
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # decode-block select (paged variant of kv_cache.select_cache_slots)
 # --------------------------------------------------------------------------- #
 def select_cache_slots_paged(active: jax.Array, positions: jax.Array,

@@ -74,6 +74,13 @@ class SamplingParams:
     # logprob and the top-`top_logprobs` alternatives per step
     logprobs: bool = False
     top_logprobs: int = 0
+    # OpenAI completions `echo`: return the prompt tokens (with logprobs,
+    # when `logprobs` is set) ahead of the completion.  Prompt logprobs are
+    # teacher-forced from one full-logits prefill pass at admission commit
+    # (the first prompt token has no conditioning context, so its entry is
+    # None — OpenAI semantics).  Rejected for streaming requests by the
+    # OpenAI codec.
+    echo: bool = False
     seed: Optional[int] = None
 
 
@@ -110,6 +117,10 @@ class Request:
     # (logprob, top_logprobs) pair per emitted token, where top_logprobs is
     # a list of (token_id, logprob) pairs (len == sampling.top_logprobs)
     output_logprobs: List[Tuple[float, List[Tuple[int, float]]]] = field(default_factory=list)
+    # prompt-token logprobs, populated when sampling.echo and
+    # sampling.logprobs: one entry per prompt token — None for the first
+    # (nothing to condition on), float for the rest
+    prompt_logprobs: Optional[List[Optional[float]]] = None
     finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None

@@ -67,6 +67,67 @@ def fold_step_keys(base_keys: jax.Array, positions: jax.Array) -> jax.Array:
     return jax.vmap(jax.random.fold_in)(base_keys, positions)
 
 
+def mask_scaled_logits(
+    scaled: jax.Array,  # [B, V] f32 — temperature-scaled logits
+    top_p: jax.Array,  # [B] f32 (1 = off)
+    top_k: jax.Array,  # [B] int32 (0 = off)
+    min_p: jax.Array,  # [B] f32 (0 = off)
+) -> jax.Array:
+    """Apply the per-slot prefix-threshold masks to temperature-scaled logits.
+
+    The single source of the top-k/top-p/min-p keep-set semantics, shared by
+    the sampling kernel below and the speculative-decoding verification path
+    (core/spec_decode.py), which needs the masked *distribution* a stochastic
+    slot draws from — not just one sample — for its rejection-sampling
+    correction."""
+    vocab = scaled.shape[-1]
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # each filter keeps a prefix of the sorted order; the keep-set is the
+    # shortest prefix, applied as one value threshold (ties kept)
+    n_k = jnp.where(top_k > 0, jnp.minimum(top_k, vocab), vocab)
+    # top_p composes with top_k the HF/vLLM way: cumulative mass is
+    # renormalized to the surviving top-k prefix (denominator 1 when top_k
+    # is off, so plain nucleus sampling is untouched)
+    ranks = jnp.arange(vocab)[None, :]
+    k_mass = jnp.take_along_axis(cum, (n_k - 1)[:, None], axis=-1)
+    denom = jnp.where((n_k < vocab)[:, None], k_mass, 1.0)
+    in_k = ranks < n_k[:, None]
+    n_p = jnp.where(
+        top_p < 1.0,
+        jnp.sum((cum / denom < top_p[:, None]) & in_k, axis=-1) + 1,
+        vocab,
+    )
+    n_m = jnp.where(
+        min_p > 0.0,
+        jnp.sum(probs >= min_p[:, None] * probs[:, :1], axis=-1),
+        vocab,
+    )
+    n_keep = jnp.clip(jnp.minimum(jnp.minimum(n_k, n_p), n_m), 1, vocab)
+    cutoff = jnp.take_along_axis(sorted_desc, (n_keep - 1)[:, None], axis=-1)
+    return jnp.where(scaled < cutoff, -jnp.inf, scaled)
+
+
+def masked_probs(
+    logits: jax.Array,  # [B, V] f32
+    temperatures: jax.Array,  # [B] f32 (0 = greedy)
+    top_p: jax.Array,  # [B] f32 (1 = off)
+    top_k: jax.Array,  # [B] int32 (0 = off)
+    min_p: jax.Array,  # [B] f32 (0 = off)
+) -> jax.Array:
+    """Per-slot token distribution under the masked sampler: the probability
+    rows the stochastic path of :func:`masked_sample_inner` draws from
+    (softmax of the masked scaled logits); greedy slots get the argmax point
+    mass.  Used by the speculative-decoding verifier (target distribution
+    ``p`` and draft distribution ``q`` of the rejection-sampling test)."""
+    logits = logits.astype(jnp.float32)
+    greedy = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=jnp.float32)
+    temps = jnp.maximum(temperatures, 1e-6)[:, None]
+    masked = mask_scaled_logits(logits / temps, top_p, top_k, min_p)
+    return jnp.where((temperatures > 0)[:, None], jax.nn.softmax(masked, axis=-1), greedy)
+
+
 def masked_sample_inner(
     logits: jax.Array,  # [B, V] f32
     base_keys: jax.Array,  # [B, 2] uint32 — per-slot base keys
@@ -88,7 +149,6 @@ def masked_sample_inner(
     plain temperature sampling (all mask knobs off) skip the sort pipeline
     too."""
     logits = logits.astype(jnp.float32)
-    vocab = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def stochastic(_):
@@ -97,33 +157,7 @@ def masked_sample_inner(
         scaled = logits / temps
 
         def masked(_):
-            sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
-            probs = jax.nn.softmax(sorted_desc, axis=-1)
-            cum = jnp.cumsum(probs, axis=-1)
-            # each filter keeps a prefix of the sorted order; the keep-set
-            # is the shortest prefix, applied as one value threshold (ties
-            # kept)
-            n_k = jnp.where(top_k > 0, jnp.minimum(top_k, vocab), vocab)
-            # top_p composes with top_k the HF/vLLM way: cumulative mass is
-            # renormalized to the surviving top-k prefix (denominator 1 when
-            # top_k is off, so plain nucleus sampling is untouched)
-            ranks = jnp.arange(vocab)[None, :]
-            k_mass = jnp.take_along_axis(cum, (n_k - 1)[:, None], axis=-1)
-            denom = jnp.where((n_k < vocab)[:, None], k_mass, 1.0)
-            in_k = ranks < n_k[:, None]
-            n_p = jnp.where(
-                top_p < 1.0,
-                jnp.sum((cum / denom < top_p[:, None]) & in_k, axis=-1) + 1,
-                vocab,
-            )
-            n_m = jnp.where(
-                min_p > 0.0,
-                jnp.sum(probs >= min_p[:, None] * probs[:, :1], axis=-1),
-                vocab,
-            )
-            n_keep = jnp.clip(jnp.minimum(jnp.minimum(n_k, n_p), n_m), 1, vocab)
-            cutoff = jnp.take_along_axis(sorted_desc, (n_keep - 1)[:, None], axis=-1)
-            return jnp.where(scaled < cutoff, -jnp.inf, scaled)
+            return mask_scaled_logits(scaled, top_p, top_k, min_p)
 
         # second fast path: plain temperature sampling (every mask knob off)
         # skips the O(B·V log V) sort pipeline and draws straight from the

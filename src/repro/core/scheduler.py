@@ -396,6 +396,29 @@ class ContinuousBatchingScheduler:
         k = max(1, min(max_block, rem))
         return 1 << (k.bit_length() - 1)
 
+    def plan_spec_k(self, max_k: int, acceptance: float,
+                    reclaim_queued: bool = False) -> int:
+        """Acceptance-rate-aware draft length for a speculative round.
+
+        Returns 0 (speculation off this round) under exactly the pressure
+        conditions that collapse the decode block to K=1 — waiting
+        admissions, queued prefill chunks, a pending abort/reclaim — plus
+        when the acceptance signal is below the probation low-water mark
+        (0.15, enforced by ``SpecController.tick`` returning 0.0): a
+        draft-verify round costs a wider forward than a single decode step,
+        so it must never delay admission latency or burn bandwidth on
+        streams that reject everything.  Between the low-water mark and 0.5
+        the draft length halves — mediocre acceptance still profits from
+        short drafts, long ones mostly roll back."""
+        if max_k <= 0 or self.pending or self.chunk_queue \
+                or reclaim_queued or not self.active:
+            return 0
+        if acceptance < 0.15:
+            return 0
+        if acceptance < 0.5:
+            return max(1, max_k // 2)
+        return max_k
+
     # ------------------------------------------------------------------ #
     # observability
     # ------------------------------------------------------------------ #

@@ -1,0 +1,703 @@
+"""Speculative decoding: draft-verify inside the compiled decode block.
+
+Decode on consumer hardware is bandwidth-bound, not compute-bound (PAPER.md;
+arxiv 2508.08531), so a forward pass over ``k + 1`` tokens costs roughly the
+same wall clock as one token: speculative decoding converts the idle FLOPs
+into accepted tokens.  This module provides the two draft rungs and the
+batched verifier (DESIGN_spec_decode.md):
+
+* **Self-speculative (ngram)** — :class:`NGramProposer` drafts from the
+  slot's own context by prompt-lookup (no second model, host-side, zero
+  device cost); proposals are staged into ``DecodeState.draft_tokens``.
+* **Draft model** — :class:`DraftModelSource` runs a small config ahead of
+  the target, its KV in a second dense pool, returning both the drafted
+  tokens and the draft *distributions* ``q`` needed for the
+  rejection-sampling test.
+* **Batched verification** — :func:`build_spec_verify_fn` compiles one
+  target forward over ``[batch, k_draft + 1]`` positions with on-device
+  longest-accepted-prefix selection, rejection-sampling correction for
+  stochastic draft-model rows, and masked KV rollback of rejected cells
+  (dense ring via ``gather/restore_ring_cells``, paged arena via
+  ``gather/restore_page_cells`` — rejected tail pages stay slot-owned and
+  are freed at slot release, never leaked).
+
+Determinism contract: verification samples the target token at every
+position ``j`` with the *plain* stateless key ``fold_in(base, p0 + 1 + j)``
+— the exact key stream non-speculative decode uses.  An ngram row (greedy
+or seeded-stochastic) accepts a draft iff it *equals* that target sample, so
+the emitted stream is bit-identical to ``--spec-mode off``; speculation only
+changes how many tokens one device dispatch commits.  Draft-model stochastic
+rows instead run the standard accept test ``u · q(d) < p(d)`` with
+*salted* keys (:data:`ACCEPT_SALT` etc. — never the plain stream, which
+must stay reserved for the tokens themselves), preserving the target
+distribution exactly while accepting tokens the plain draw would have
+missed.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kv_cache import (
+    DecodeState,
+    SlotKVPool,
+    gather_ring_cells,
+    init_decode_state,
+    restore_ring_cells,
+    select_cache_slots,
+)
+from repro.core.paged_kv import gather_page_cells, restore_page_cells
+from repro.core.sampling import masked_probs, masked_sample_inner
+
+# Key salts: every auxiliary draw (accept test, correction draw, draft-model
+# sampling) folds one of these into the request base key *before* the token
+# position, so the auxiliary streams are independent of the plain per-token
+# stream `fold_in(base, position)` that samples the tokens themselves —
+# seeded replay of the emitted stream stays bit-identical whether or not
+# speculation ran.
+ACCEPT_SALT = 0x5BEC0001
+CORRECTION_SALT = 0x5BEC0002
+DRAFT_SALT = 0x5BEC0003
+
+
+def fold_salted_keys(base_keys: jax.Array, salt: int, positions: jax.Array) -> jax.Array:
+    """Per-slot auxiliary keys: ``fold_in(fold_in(base, salt), position)``."""
+
+    def one(key, pos):
+        return jax.random.fold_in(jax.random.fold_in(key, salt), pos)
+
+    return jax.vmap(one, in_axes=(0, 0))(base_keys, positions)
+
+
+# --------------------------------------------------------------------------- #
+# self-speculative drafting: host-side prompt lookup
+# --------------------------------------------------------------------------- #
+class NGramProposer:
+    """Prompt-lookup drafting (self-speculative): propose the continuation of
+    the most recent previous occurrence of the context's trailing n-gram.
+
+    Longest n first (``max_n`` down to ``min_n``), most recent occurrence
+    wins — repetition-heavy text (code, structured output, quoted context)
+    accepts long runs, random text simply proposes nothing and the round
+    degenerates to ordinary decode.  Pure host-side bookkeeping: the device
+    never sees the history scan, only the staged proposals."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        hist = list(history)
+        ln = len(hist)
+        if k <= 0 or ln < self.min_n + 1:
+            return []
+        for n in range(min(self.max_n, ln - 1), self.min_n - 1, -1):
+            pat = hist[-n:]
+            # backward scan: latest previous occurrence ending before the end
+            for start in range(ln - n - 1, -1, -1):
+                if hist[start : start + n] == pat:
+                    cont = hist[start + n : start + n + k]
+                    if cont:
+                        return cont
+        return []
+
+
+# --------------------------------------------------------------------------- #
+# accounting + K adaptation
+# --------------------------------------------------------------------------- #
+@dataclass
+class SpecStats:
+    """Engine-level speculation counters (distinct from the scheduler's
+    ``spec_*`` fields, which count speculative *prefill* jobs)."""
+
+    rounds: int = 0  # spec verify rounds dispatched
+    drafted: int = 0  # tokens staged for verification
+    accepted: int = 0  # drafted tokens accepted by the target
+    rejected: int = 0  # drafted tokens rejected (drafted - accepted)
+    emitted: int = 0  # tokens emitted by spec rounds (accepted + bonus/correction)
+
+    def snapshot(self) -> Dict[str, Any]:
+        drafted = max(self.drafted, 1)
+        return {
+            "rounds": self.rounds,
+            "tokens_drafted": self.drafted,
+            "tokens_accepted": self.accepted,
+            "tokens_rejected": self.rejected,
+            "tokens_emitted": self.emitted,
+            "acceptance_rate": self.accepted / drafted if self.drafted else None,
+        }
+
+
+class SpecController:
+    """Per-slot acceptance EWMA driving the scheduler's K adaptation.
+
+    Freshly admitted slots start optimistic (EWMA 1.0) so speculation gets a
+    chance; sustained rejection drags the mean acceptance below the
+    scheduler's low-water mark, which zeroes K (probation).  Probation lasts
+    ``probation_rounds`` decode rounds, after which every tracked slot
+    resets optimistic — cheap periodic re-probing, so a phase change in the
+    stream (e.g. the prompt's structure finally recurring) re-enables
+    drafting without host tuning."""
+
+    def __init__(self, alpha: float = 0.3, probation_rounds: int = 16):
+        self.alpha = alpha
+        self.probation_rounds = probation_rounds
+        self._ewma: Dict[int, float] = {}
+        self._cooldown = 0
+
+    def on_admit(self, slot: int) -> None:
+        self._ewma[slot] = 1.0
+
+    def release(self, slot: int) -> None:
+        self._ewma.pop(slot, None)
+        if not self._ewma:
+            # probation is a property of the *current* workload: once every
+            # tracked slot has drained, a fresh batch deserves a fresh probe
+            # instead of inheriting a cooldown it never earned
+            self._cooldown = 0
+
+    def observe(self, slot: int, drafted: int, accepted: int) -> None:
+        if drafted <= 0:
+            return
+        rate = accepted / drafted
+        prev = self._ewma.get(slot, 1.0)
+        self._ewma[slot] = (1.0 - self.alpha) * prev + self.alpha * rate
+
+    def round_acceptance(self) -> float:
+        """Mean EWMA over tracked slots (1.0 when nothing is tracked)."""
+        if not self._ewma:
+            return 1.0
+        return sum(self._ewma.values()) / len(self._ewma)
+
+    def tick(self, low_water: float = 0.15) -> float:
+        """Per-round acceptance signal for ``plan_spec_k``, with probation:
+        returns 0.0 while on probation (spec stays off), otherwise the mean
+        acceptance — entering probation when it sinks below ``low_water``."""
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            if self._cooldown == 0:
+                for s in self._ewma:
+                    self._ewma[s] = 1.0
+            return 0.0
+        acc = self.round_acceptance()
+        if self._ewma and acc < low_water:
+            self._cooldown = self.probation_rounds
+            return 0.0
+        return acc
+
+    def snapshot(self) -> Dict[str, float]:
+        return {str(slot): round(rate, 4) for slot, rate in sorted(self._ewma.items())}
+
+
+@jax.jit
+def _sync_draft_state(last, pos, active, primed):
+    """Draft-state sync leaves with *fresh* buffers (un-donated jit outputs
+    never alias their inputs): the engine donates its decode state into
+    every staged round, so the draft state must never share buffers with
+    the target state — see :meth:`DraftModelSource.fixup`."""
+    return last + 0, pos + 0, active & primed
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def stage_drafts(state: DecodeState, drafts: jax.Array, draft_len: jax.Array) -> DecodeState:
+    """Stage one round of proposals ([B, k] tokens + per-slot lengths) into
+    the decode state.  ``draft_len`` is host-built and already carries the
+    guards (wrap, budget, unprimed slot, scheduler pressure = 0)."""
+    k = drafts.shape[1]
+    return state._replace(
+        draft_tokens=state.draft_tokens.at[:, :k].set(drafts),
+        draft_len=draft_len,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# batched verification
+# --------------------------------------------------------------------------- #
+def build_spec_verify_fn(model, *, use_ctx: bool, n_top: int, paged: bool,
+                         cache_len: int, page_size: int = 0):
+    """Compile the draft-verify round: one target forward over the S =
+    ``spec_k + 1`` staged inputs per slot, per-position target sampling with
+    the plain stateless keys, longest-accepted-prefix selection, emission
+    bookkeeping (stop tokens, budget) matching the non-speculative block
+    step for step, and masked rollback of the KV cells of rejected drafts.
+
+    Returns ``(cache, state, emit [S, B], n_acc [B], n_emit [B], lps)`` —
+    ``emit`` uses the same -1-for-frozen sentinel and [steps, batch] layout
+    as the block-decode token grid, so the engine's host emit loop consumes
+    it unchanged.
+
+    Bit-identity argument (tested in tests/test_spec_decode.py): the input
+    row of slot b is ``[last_token, d_0 .. d_{k-1}]`` at positions ``p0 ..
+    p0+k``; position j's logits condition on inputs < j, and position j is
+    only *emitted* while every earlier draft equalled the plain-key target
+    sample at its position — i.e. while the conditioning inputs equal the
+    exact tokens non-speculative decode would have fed.  Attention for each
+    query row uses ``ops.decode_attention`` (never the flash kernel, whose
+    different normalisation order would break bitwise equality), so emitted
+    tokens are bit-identical to ``--spec-mode off``.  A slot whose ring
+    would wrap inside the round (``p0 + spec_k >= cache_len``) must be
+    staged with ``draft_len = 0`` by the host: the wrapped validity mask
+    (`pos >= cache_len` => all cells valid) would otherwise let query j see
+    cells written for j' > j in the same batched pass.  ``draft_len = 0``
+    rows degenerate to an exact single decode step."""
+
+    @functools.partial(jax.jit,
+                       static_argnames=("spec_k", "want_logprobs", "use_q"),
+                       donate_argnums=(1, 2))
+    def spec_verify(params, cache, state: DecodeState,
+                    q_probs: Optional[jax.Array] = None, *,
+                    spec_k: int, want_logprobs: bool = False,
+                    use_q: bool = False):
+        st = state
+        b = st.last_token.shape[0]
+        s = spec_k + 1
+        jidx = jnp.arange(s)[None, :]                         # [1, S]
+        bidx2 = jnp.arange(b)[:, None]
+        inp = jnp.concatenate([st.last_token[:, None],
+                               st.draft_tokens[:, :spec_k]], axis=1)
+        pos = st.positions[:, None] + jnp.arange(s)[None, :]  # [B, S]
+        seq_valid = st.active[:, None] & (jidx <= st.draft_len[:, None])
+
+        # snapshot the cells this forward may write, pre-forward
+        ring = (pos % cache_len).astype(jnp.int32)
+        if paged:
+            pt = cache["page_table"]
+            page = pt[bidx2, ring // page_size]
+            off = (ring % page_size).astype(jnp.int32)
+            # frozen rows redirect to the slot's reserved trash cell (their
+            # page-table rows may point at pages another slot now owns);
+            # active rows' grids are fully backed — the engine ensures paged
+            # capacity for spec_k + 1 steps before dispatching the round
+            act_cell = jnp.broadcast_to(st.active[:, None], page.shape)
+            bgrid = jnp.broadcast_to(bidx2, page.shape)
+            page = jnp.where(act_cell, page,
+                             (bgrid // page_size).astype(page.dtype))
+            off = jnp.where(act_cell, off,
+                            (bgrid % page_size).astype(off.dtype))
+            snap = gather_page_cells(cache, page, off)
+        else:
+            snap = gather_ring_cells(cache, ring)
+
+        out = model.apply(
+            params, inp, mode="decode", positions=pos, cache=cache,
+            ctx_valid=st.ctx_valid if use_ctx else None,
+            seq_valid=seq_valid,
+            page_table=cache["page_table"] if paged else None,
+            slot_active=st.active if paged else None)
+        logits = out.logits.astype(jnp.float32)               # [B, S, V]
+        new_cache = dict(cache)
+        new_cache["prefix"] = out.cache["prefix"]
+        new_cache["block"] = out.cache.get("block")
+
+        # target samples at every position with the PLAIN per-token keys —
+        # the exact stream non-speculative decode draws from.  Python loop,
+        # not vmap: vmap would lower masked_sample_inner's lax.cond fast
+        # paths to select, computing (and paying for) the stochastic branch
+        # even for all-greedy batches.
+        act = st.active
+        temps = st.temps * act
+        tp = jnp.where(act, st.top_p, 1.0)
+        tk = jnp.where(act, st.top_k, 0)
+        mp = jnp.where(act, st.min_p, 0.0)
+        x = jnp.stack(
+            [masked_sample_inner(logits[:, j], st.sample_key,
+                                 st.positions + 1 + j, temps, tp, tk, mp)
+             for j in range(s)], axis=1)                      # [B, S]
+
+        drafts = st.draft_tokens[:, :spec_k]
+        staged = jnp.arange(spec_k)[None, :] < st.draft_len[:, None]
+        match = (drafts == x[:, :spec_k]) & staged
+        if use_q:
+            # draft-model rung, stochastic rows: standard rejection test
+            # u·q(d) < p(d) with salted keys; greedy rows keep the match
+            # rule (their p is a point mass — the tests coincide).
+            stoch = temps > 0
+            acc_cols, corr_cols = [], []
+            for j in range(spec_k):
+                p_j = masked_probs(logits[:, j], temps, tp, tk, mp)
+                q_j = q_probs[:, j]
+                d_j = drafts[:, j][:, None]
+                pd = jnp.take_along_axis(p_j, d_j, axis=-1)[:, 0]
+                qd = jnp.take_along_axis(q_j, d_j, axis=-1)[:, 0]
+                akeys = fold_salted_keys(st.sample_key, ACCEPT_SALT,
+                                         st.positions + 1 + j)
+                u = jax.vmap(lambda k_: jax.random.uniform(k_))(akeys)
+                acc_cols.append(jnp.where(stoch, u * qd < pd, match[:, j])
+                                & staged[:, j])
+                # correction draw ~ max(p - q, 0) (all-zero residual — q
+                # covers p exactly — falls back to p)
+                resid = jnp.maximum(p_j - q_j, 0.0)
+                degenerate = (resid.sum(-1) <= 0.0)[:, None]
+                target = jnp.where(degenerate, jnp.log(p_j), jnp.log(resid))
+                ckeys = fold_salted_keys(st.sample_key, CORRECTION_SALT,
+                                         st.positions + 1 + j)
+                corr = jax.vmap(jax.random.categorical)(ckeys, target)
+                corr_cols.append(corr.astype(jnp.int32))
+            accept = jnp.stack(acc_cols, axis=1)
+            correction = jnp.stack(corr_cols, axis=1)         # [B, spec_k]
+        else:
+            accept = match
+
+        run = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+        n_acc = run.sum(axis=1).astype(jnp.int32)             # [B]
+
+        # token grid: j < n_acc -> accepted draft; j == n_acc -> correction
+        # (a staged draft was rejected there) or bonus/plain target sample;
+        # j > n_acc is never emitted.  Match rows emit the plain target
+        # stream x verbatim (accepted drafts equal it by construction).
+        if use_q:
+            zeros = jnp.zeros((b, 1), jnp.int32)
+            drafts_pad = jnp.concatenate([drafts, zeros], axis=1)
+            corr_pad = jnp.concatenate([correction, zeros], axis=1)
+            rejected_at = (jidx == n_acc[:, None]) & \
+                          (n_acc[:, None] < st.draft_len[:, None])
+            tok = jnp.where(jidx < n_acc[:, None], drafts_pad,
+                            jnp.where(rejected_at, corr_pad, x))
+            tok = jnp.where(stoch[:, None], tok, x)
+        else:
+            tok = x
+
+        # emission bookkeeping, identical to the sequential block: emit up
+        # to and including the first stop, never past the budget, never past
+        # the accepted prefix + 1
+        is_stop = jnp.any(tok[..., None] == st.stop_tokens[:, None, :],
+                          axis=-1)                            # [B, S]
+        not_stop = (~is_stop).astype(jnp.int32)
+        prior_ok = jnp.concatenate(
+            [jnp.ones((b, 1), jnp.int32),
+             jnp.cumprod(not_stop, axis=1)[:, :-1]], axis=1).astype(bool)
+        emit = (act[:, None] & (jidx <= n_acc[:, None])
+                & (jidx < st.budget[:, None]) & prior_ok)
+        n_emit = emit.sum(axis=1).astype(jnp.int32)           # >= 1 if active
+        new_budget = st.budget - n_emit
+        stopped = jnp.any(emit & is_stop, axis=1)
+        finished = act & (stopped | (new_budget <= 0))
+        last_idx = jnp.maximum(n_emit - 1, 0)
+        new_last = jnp.take_along_axis(tok, last_idx[:, None], axis=1)[:, 0]
+        new_last = jnp.where(act, new_last, st.last_token)
+
+        # KV rollback: input j's cell is committed history iff j < n_emit
+        # (j = 0 is last_token; j >= 1 is draft d_{j-1} = emitted token
+        # x_{j-1}).  The last emitted token's own KV is NOT written — it
+        # becomes next round's last_token, exactly as in block decode.
+        keep = act[:, None] & (jidx < n_emit[:, None])
+        if paged:
+            cache = restore_page_cells(new_cache, snap, page, off, keep)
+        else:
+            cache = restore_ring_cells(new_cache, snap, ring, keep)
+
+        new_state = st._replace(
+            last_token=new_last,
+            positions=st.positions + n_emit,
+            budget=new_budget,
+            active=act & ~finished,
+            draft_len=jnp.zeros_like(st.draft_len),
+        )
+        emit_toks = jnp.where(emit, tok, -1).T                # [S, B]
+        if want_logprobs:
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            chosen = jnp.take_along_axis(lp, tok[..., None],
+                                         axis=-1)[..., 0]     # [B, S]
+            top_v, top_i = jax.lax.top_k(lp, n_top)           # [B, S, n_top]
+            lps = (chosen.T, jnp.swapaxes(top_v, 0, 1),
+                   jnp.swapaxes(top_i, 0, 1))
+            return cache, new_state, emit_toks, n_acc, n_emit, lps
+        return cache, new_state, emit_toks, n_acc, n_emit, None
+
+    return spec_verify
+
+
+# --------------------------------------------------------------------------- #
+# draft sources
+# --------------------------------------------------------------------------- #
+class DraftSource:
+    """Strategy interface: where proposals come from.  ``uses_q = True``
+    sources return draft distributions alongside tokens and opt stochastic
+    rows into the rejection-sampling accept test; ``uses_q = False`` sources
+    verify every row with the exact-match rule (bit-identical streams)."""
+
+    mode = "off"
+    uses_q = False
+
+    def admit(self, slots, last, positions, temps, top_p, top_k, min_p,
+              keys, active) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def prime(self, slot: int, history: Sequence[int]) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+class NGramDraftSource(DraftSource):
+    """Self-speculative rung: host-side prompt lookup, no device state."""
+
+    mode = "ngram"
+    uses_q = False
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        self.proposer = NGramProposer(max_n=max_n, min_n=min_n)
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        return self.proposer.propose(history, k)
+
+
+class DraftModelSource(DraftSource):
+    """Draft-model rung: a small config decodes ``spec_k`` tokens ahead of
+    the target, in its own dense KV pool that mirrors the target's slot
+    layout (same slot indices, same ring length, so the same host-side wrap
+    guard covers both pools).
+
+    The draft block is one compiled call per round: ``spec_k`` chained
+    single-token decode steps sampling from the draft's *masked* distribution
+    at the target row's sampler knobs (salted keys — greedy rows reduce to
+    the draft argmax), returning the drafts, the distributions ``q`` the
+    verifier's rejection test needs, and a pre-block snapshot of the ring
+    cells it wrote so :meth:`fixup` can roll back rejected tail cells after
+    verification.  No host sync anywhere in the round: drafts/q stay on
+    device, and the post-round state sync copies device arrays from the
+    target's verified state."""
+
+    mode = "draft"
+    uses_q = True
+
+    def __init__(self, cfg, params=None, *, max_batch: int, cache_len: int,
+                 seed: int = 0):
+        from repro.models.model import build_model
+
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.pool = SlotKVPool(cfg, max_batch, cache_len)
+        self.state = init_decode_state(max_batch, 0, 1)
+        # slots whose draft KV mirrors the target history; a slot whose
+        # history no longer fits one prime prefill (wrapped ring on resume)
+        # stays unprimed and simply never drafts (known limit)
+        self._primed = np.zeros((max_batch,), bool)
+        self._draft_fns: Dict[int, Any] = {}
+        self._fixup_fns: Dict[int, Any] = {}
+        self._prime_fns: Dict[int, Any] = {}
+
+    # -- admission ----------------------------------------------------- #
+    def admit(self, slots, last, positions, temps, top_p, top_k, min_p,
+              keys, active) -> None:
+        from repro.core.kv_cache import admit_decode_state
+
+        n = len(slots)
+        primed = jnp.asarray(self._primed[np.asarray(slots)])
+        self.state = admit_decode_state(
+            self.state, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(last, jnp.int32), jnp.asarray(positions, jnp.int32),
+            jnp.asarray(temps, jnp.float32), jnp.asarray(top_p, jnp.float32),
+            jnp.asarray(top_k, jnp.int32), jnp.asarray(min_p, jnp.float32),
+            jnp.asarray(keys, jnp.uint32),
+            jnp.zeros((n, self.state.ctx_valid.shape[1]), bool),
+            jnp.zeros((n,), jnp.int32),
+            jnp.full((n, self.state.stop_tokens.shape[1]), -1, jnp.int32),
+            jnp.asarray(active, bool) & primed)
+
+    def prime(self, slot: int, history: Sequence[int]) -> None:
+        """Prefill the draft pool with the slot's committed history (all
+        tokens except the pending last one) — one padded-bucket batch=1
+        forward, mirroring the target's admission prefill."""
+        ln = len(history) - 1
+        if ln > self.cache_len:
+            self._primed[slot] = False
+            return
+        if ln > 0:
+            bucket = 32
+            while bucket < ln:
+                bucket *= 2
+            bucket = min(bucket, self.cache_len)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :ln] = np.asarray(history[:ln], np.int32)
+            row = self._prime_fn(bucket)(
+                self.params, self.pool.single_cache_zeros(),
+                jnp.asarray(toks), jnp.int32(ln))
+            self.pool.insert(slot, row)
+        self._primed[slot] = True
+
+    def release(self, slot: int) -> None:
+        self._primed[slot] = False
+
+    def primed(self, slot: int) -> bool:
+        return bool(self._primed[slot])
+
+    def reset(self) -> None:
+        """Rebuild the draft pool + state after a catastrophic failure
+        (both may have been donated into a failed compiled round); every
+        slot re-primes at its next admission."""
+        self.pool = SlotKVPool(self.cfg, self.max_batch, self.cache_len)
+        self.state = init_decode_state(self.max_batch, 0, 1)
+        self._primed[:] = False
+
+    # -- compiled pieces ------------------------------------------------ #
+    def _prime_fn(self, bucket: int):
+        if bucket not in self._prime_fns:
+            model = self.model
+
+            @jax.jit
+            def run(params, cache, toks, length):
+                pos = jnp.arange(bucket)[None, :]
+                sv = (jnp.arange(bucket) < length)[None, :]
+                out = model.apply(params, toks, mode="prefill",
+                                  positions=pos, cache=cache, seq_valid=sv,
+                                  logits_mode="last")
+                return out.cache
+
+            self._prime_fns[bucket] = run
+        return self._prime_fns[bucket]
+
+    def _draft_fn(self, spec_k: int):
+        if spec_k not in self._draft_fns:
+            model, sc = self.model, self.cache_len
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def run(params, cache, st: DecodeState):
+                grid = ((st.positions[:, None] + jnp.arange(spec_k)[None, :])
+                        % sc).astype(jnp.int32)
+                snap = gather_ring_cells(cache, grid)
+                act = st.active
+                temps = st.temps * act
+                tp = jnp.where(act, st.top_p, 1.0)
+                tk = jnp.where(act, st.top_k, 0)
+                mp = jnp.where(act, st.min_p, 0.0)
+                last, pos = st.last_token, st.positions
+                ds, qs = [], []
+                for _ in range(spec_k):
+                    out = model.apply(params, last[:, None], mode="decode",
+                                      positions=pos[:, None], cache=cache)
+                    cache = select_cache_slots(act, pos, out.cache, cache)
+                    q = masked_probs(out.logits[:, 0], temps, tp, tk, mp)
+                    keys = fold_salted_keys(st.sample_key, DRAFT_SALT,
+                                            pos + 1)
+                    d = jax.vmap(jax.random.categorical)(
+                        keys, jnp.log(q)).astype(jnp.int32)
+                    ds.append(d)
+                    qs.append(q)
+                    last = jnp.where(act, d, last)
+                    pos = pos + act.astype(jnp.int32)
+                return (cache, snap, jnp.stack(ds, axis=1),
+                        jnp.stack(qs, axis=1))
+
+            self._draft_fns[spec_k] = run
+        return self._draft_fns[spec_k]
+
+    def _fixup_fn(self, spec_k: int):
+        if spec_k not in self._fixup_fns:
+            sc = self.cache_len
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(cache, snap, start_pos, n_emit, active):
+                grid = ((start_pos[:, None] + jnp.arange(spec_k)[None, :])
+                        % sc).astype(jnp.int32)
+                keep = (active[:, None]
+                        & (jnp.arange(spec_k)[None, :] < n_emit[:, None]))
+                return restore_ring_cells(cache, snap, grid, keep)
+
+            self._fixup_fns[spec_k] = run
+        return self._fixup_fns[spec_k]
+
+    # -- per-round flow -------------------------------------------------- #
+    def draft_round(self, spec_k: int):
+        """Run the draft block; returns ``(snap, start_pos, drafts, q)``
+        with drafts/q device-resident ([B, k] / [B, k, V])."""
+        start_pos = self.state.positions
+        cache, snap, drafts, q = self._draft_fn(spec_k)(
+            self.params, self.pool.cache, self.state)
+        self.pool.cache = cache
+        return snap, start_pos, drafts, q
+
+    def fixup(self, spec_k: int, snap, start_pos, target_state: DecodeState):
+        """Roll back rejected draft cells and sync the draft state to the
+        verified target state (device-to-device, no host sync).
+
+        The sync goes through :func:`_sync_draft_state` so the draft state
+        owns *fresh* buffers: the engine donates its decode state into every
+        staged round (``stage_drafts`` / the verify kernel), so any draft
+        leaf aliasing a target leaf would be deleted out from under the next
+        draft round."""
+        delta = target_state.positions - start_pos          # n_emit per slot
+        self.pool.cache = self._fixup_fn(spec_k)(
+            self.pool.cache, snap, start_pos, delta, self.state.active)
+        last, pos, act = _sync_draft_state(
+            target_state.last_token, target_state.positions,
+            target_state.active, jnp.asarray(self._primed))
+        self.state = self.state._replace(
+            last_token=last, positions=pos, active=act)
+
+    @property
+    def nbytes(self) -> int:
+        return self.pool.nbytes
+
+
+# --------------------------------------------------------------------------- #
+# host reference (hypothesis property tests)
+# --------------------------------------------------------------------------- #
+def verify_reference(logits_rows: np.ndarray, drafts: Sequence[int],
+                     q_rows: Optional[np.ndarray], base_key: np.ndarray,
+                     start_pos: int, temperature: float, top_p: float,
+                     top_k: int, min_p: float, use_q: bool) -> List[int]:
+    """Host mirror of one verify round for ONE slot, given the target's
+    per-position logits rows [S, V] (run the target per token to obtain
+    them): returns the emitted tokens before stop/budget bookkeeping.
+
+    Independent implementation of the acceptance math (match rule, or the
+    rejection test + residual correction when ``use_q``), with the same key
+    derivation as the device kernel — tests hold the compiled round to this
+    token for token."""
+    from repro.core.sampling import sample_reference
+
+    s = logits_rows.shape[0]
+    k = s - 1
+
+    def plain_key(j):
+        return np.asarray(jax.random.fold_in(jnp.asarray(base_key),
+                                             start_pos + 1 + j))
+
+    def salted_key(salt, j):
+        key = jax.random.fold_in(jnp.asarray(base_key), salt)
+        return jax.random.fold_in(key, start_pos + 1 + j)
+
+    def dist(row):
+        return np.asarray(masked_probs(
+            jnp.asarray(row[None, :]), jnp.asarray([temperature]),
+            jnp.asarray([top_p]), jnp.asarray([top_k], jnp.int32),
+            jnp.asarray([min_p]))[0])
+
+    x = [sample_reference(logits_rows[j], plain_key(j), temperature,
+                          top_p, top_k, min_p) for j in range(s)]
+    emitted: List[int] = []
+    for j in range(k):
+        d = int(drafts[j])
+        if use_q and temperature > 0:
+            p_j, q_j = dist(logits_rows[j]), np.asarray(q_rows[j])
+            u = float(jax.random.uniform(salted_key(ACCEPT_SALT, j)))
+            if u * q_j[d] < p_j[d]:
+                emitted.append(d)
+                continue
+            resid = np.maximum(p_j - q_j, 0.0)
+            target = p_j if resid.sum() <= 0 else resid
+            corr = int(jax.random.categorical(
+                salted_key(CORRECTION_SALT, j),
+                jnp.log(jnp.asarray(target))))
+            emitted.append(corr)
+            return emitted
+        if d == x[j]:
+            emitted.append(x[j])
+            continue
+        emitted.append(x[j])
+        return emitted
+    emitted.append(x[k])
+    return emitted

@@ -158,11 +158,30 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=("fp", "int8"), default="fp",
                     help="KV page storage: model dtype, or int8 with "
                          "per-(position, head) scales (paged layout only)")
+    # -- speculative decoding (PR 9; DESIGN_spec_decode.md) -------------- #
+    ap.add_argument("--spec-mode", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding: off, self-speculative "
+                         "n-gram drafting from the request's own history, "
+                         "or a paired draft model (--spec-draft-config)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per round (the "
+                         "scheduler halves/zeroes it when acceptance "
+                         "drops or pending work needs the batch)")
+    ap.add_argument("--spec-draft-config", default=None,
+                    help="registered model config name for the draft "
+                         "model (--spec-mode draft); must share the "
+                         "target's vocab and be text-only attention")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    spec_draft = args.spec_draft_config
     if args.smoke:
         cfg = cfg.reduced()
+        if spec_draft is not None:
+            # shrink the draft alongside the target, or its full-size vocab
+            # can never match the reduced target's
+            spec_draft = get_config(spec_draft).reduced()
     print(f"loading {cfg.name} ({cfg.param_count()/1e6:.1f}M params)...")
     faults = None
     rates = parse_fault_rates(args.fault_rate)
@@ -192,7 +211,10 @@ def main() -> None:
         kv_layout=args.kv_layout,
         kv_page_size=args.kv_page_size,
         kv_num_pages=args.kv_num_pages,
-        kv_dtype=args.kv_dtype)
+        kv_dtype=args.kv_dtype,
+        spec_mode=args.spec_mode,
+        spec_k=args.spec_k,
+        spec_draft_config=spec_draft)
     admission = None
     if not args.no_admission:
         admission = AdmissionController(

@@ -172,11 +172,53 @@ def apply_self_attn(
         kc, vc = cache["k"], cache["v"]
         ps = kc.shape[1]
         sc = ps * page_table.shape[1]
-        pos = positions[:, 0]
+        bidx = jnp.arange(b)
+        if s > 1:
+            # speculative verification under paging: per-position writes and
+            # attention in a static Python loop (one compiled graph).  A
+            # cell whose row is frozen OR beyond the slot's staged drafts
+            # (``seq_valid`` False) redirects to the slot's reserved trash
+            # cell — real pages of rejected/invalid positions are written
+            # only for accepted drafts, and the verifier's rollback
+            # (paged_kv.restore_page_cells) restores the rest.  Same wrap
+            # guard as the dense branch (engine stages zero drafts on wrap).
+            ksc, vsc = cache.get("k_scale"), cache.get("v_scale")
+            live = (slot_active if slot_active is not None
+                    else jnp.ones((b,), bool))
+            outs = []
+            for j in range(s):
+                pos_j = positions[:, j]
+                ring = (pos_j % sc).astype(jnp.int32)
+                page = page_table[bidx, ring // ps]
+                off = ring % ps
+                ok = live if seq_valid is None else live & seq_valid[:, j]
+                page = jnp.where(ok, page, (bidx // ps).astype(page.dtype))
+                off = jnp.where(ok, off, (bidx % ps).astype(off.dtype))
+                if ksc is not None:                     # int8 arena
+                    kq, ks_j = quantize_kv_int8(k[:, j])
+                    vq, vs_j = quantize_kv_int8(v[:, j])
+                    kc = kc.at[page, off].set(kq)
+                    vc = vc.at[page, off].set(vq)
+                    ksc = ksc.at[page, off].set(ks_j)
+                    vsc = vsc.at[page, off].set(vs_j)
+                    outs.append(ops.paged_attention(
+                        q[:, j], kc, vc, page_table, pos_j,
+                        k_scale=ksc, v_scale=vsc))
+                else:
+                    kc = kc.at[page, off].set(k[:, j])
+                    vc = vc.at[page, off].set(v[:, j])
+                    outs.append(ops.paged_attention(q[:, j], kc, vc,
+                                                    page_table, pos_j))
+            out = jnp.stack(outs, axis=1)
+            new_cache = ({"k": kc, "v": vc} if ksc is None else
+                         {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc})
+            out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+            out = constrain(out, "batch", None, "tp")
+            return x + out @ p["wo"], new_cache
+        pos = positions[:, 0]  # S == 1: the block-decode fast path
         ring = (pos % sc).astype(jnp.int32)
         page_idx = ring // ps
         off = ring % ps
-        bidx = jnp.arange(b)
         page = page_table[bidx, page_idx]
         if slot_active is not None:
             page = jnp.where(slot_active, page,
@@ -198,6 +240,40 @@ def apply_self_attn(
             out = ops.paged_attention(q[:, 0], kc, vc, page_table,
                                       pos)[:, None]
             new_cache = {"k": kc, "v": vc}
+    elif mode == "decode" and s > 1:
+        # speculative verification: S = k_draft + 1 candidate tokens per slot
+        # run as ONE batched decode forward.  Writes take the prefill-resume
+        # masked-restore trick (``seq_valid`` cells beyond a slot's staged
+        # drafts — and every cell of frozen slots — are written back with
+        # their previous values, leaving no trace); attention stays the
+        # per-position ``ops.decode_attention`` op so each row's j = 0 query
+        # is bit-identical to the S = 1 step (the flash kernel normalises in
+        # a different order — see kernels/ops.py — so flash here would break
+        # the greedy-ngram == off bit-exactness contract).  The engine's
+        # wrap guard (core/spec_decode.py) stages zero drafts for any slot
+        # whose ring has wrapped, because a wrapped ring's validity mask is
+        # all-ones and query j would otherwise see the cells written for
+        # j' > j in this same pass.
+        kc, vc = cache["k"], cache["v"]
+        sc = kc.shape[1]
+        bidx2 = jnp.arange(b)[:, None]
+        slots = (positions % sc).astype(jnp.int32)                      # [B,S]
+        if seq_valid is not None:
+            keep = seq_valid[..., None, None]
+            k = jnp.where(keep, k, kc[bidx2, slots])
+            v = jnp.where(keep, v, vc[bidx2, slots])
+        kc = kc.at[bidx2, slots].set(k)
+        vc = vc.at[bidx2, slots].set(v)
+        kc = constrain(kc, "kv_batch", "kv_seq", None, None)
+        vc = constrain(vc, "kv_batch", "kv_seq", None, None)
+        idx = jnp.arange(sc)[None, :]
+        outs = []
+        for j in range(s):
+            pos_j = positions[:, j]
+            valid_j = (idx <= pos_j[:, None]) | (pos_j[:, None] >= sc)
+            outs.append(ops.decode_attention(q[:, j], kc, vc, valid_j))
+        out = jnp.stack(outs, axis=1)                                   # [B,S,H,hd]
+        new_cache = {"k": kc, "v": vc}
     elif mode == "decode":
         kc, vc = cache["k"], cache["v"]
         sc = kc.shape[1]
@@ -269,7 +345,13 @@ def apply_cross_attn(
         q = (h @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
         valid = (jnp.ones((b, xk.shape[1]), bool) if ctx_valid is None
                  else ctx_valid)
-        out = ops.decode_attention(q[:, 0], xk, xv, valid)[:, None]
+        if s > 1:
+            # speculative verification: cross-attention context is
+            # position-independent, so every candidate shares one mask
+            out = jnp.stack([ops.decode_attention(q[:, j], xk, xv, valid)
+                             for j in range(s)], axis=1)
+        else:
+            out = ops.decode_attention(q[:, 0], xk, xv, valid)[:, None]
         new_cache = cache
     else:
         q, xk, xv = _qkv(p, h, context, cfg)

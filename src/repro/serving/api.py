@@ -207,6 +207,7 @@ class OpenAIServer:
         body: Dict[str, Any],
         prompt: Union[str, List[int]],
         images: Optional[List[Any]] = None,
+        echo: bool = False,
     ) -> GenerationRequest:
         if not isinstance(body, dict):
             raise OpenAIError("request body must be a JSON object")
@@ -244,6 +245,7 @@ class OpenAIServer:
             stop_sequences=_parse_stop(body),
             logprobs=logprobs,
             top_logprobs=top_logprobs,
+            echo=echo,
             seed=seed,
         )
         if sampling.max_tokens < 1:
@@ -352,9 +354,20 @@ class OpenAIServer:
             content.append(entry)
         return {"content": content}
 
-    def _completion_logprobs(self, tokens: List[int], logprobs) -> Dict[str, Any]:
+    def _completion_logprobs(
+        self,
+        tokens: List[int],
+        logprobs,
+        prompt_tokens: List[int] = (),
+        prompt_logprobs: Optional[List[Optional[float]]] = None,
+    ) -> Dict[str, Any]:
         """Legacy completions logprobs block (tokens / token_logprobs /
-        top_logprobs / text_offset, offsets into the generated text)."""
+        top_logprobs / text_offset, offsets into the returned text).  With
+        ``echo`` the prompt tokens lead the block: their ``token_logprobs``
+        are the teacher-forced values from the admission prefill (``None``
+        for the first token — nothing to condition on) and their
+        ``top_logprobs`` entries are ``None`` (alternatives are only
+        collected for sampled tokens)."""
         tok = self.engine.tokenizer
         out: Dict[str, List[Any]] = {
             "tokens": [],
@@ -363,6 +376,15 @@ class OpenAIServer:
             "text_offset": [],
         }
         offset = 0
+        if prompt_logprobs is None:
+            prompt_logprobs = [None] * len(prompt_tokens)
+        for token, lp in zip(prompt_tokens, prompt_logprobs):
+            text = tok.decode([token])
+            out["tokens"].append(text)
+            out["token_logprobs"].append(lp)
+            out["top_logprobs"].append(None)
+            out["text_offset"].append(offset)
+            offset += len(text)
         for token, (lp, top) in zip(tokens, logprobs):
             text = tok.decode([token])
             out["tokens"].append(text)
@@ -468,16 +490,29 @@ class OpenAIServer:
     # ------------------------------------------------------------------ #
     # legacy completions
     # ------------------------------------------------------------------ #
-    def _decode_completion(self, body: Dict[str, Any]) -> List[GenerationRequest]:
+    def _decode_completion(
+        self, body: Dict[str, Any], stream: bool = False
+    ) -> List[GenerationRequest]:
         if not isinstance(body, dict):
             raise OpenAIError("request body must be a JSON object")
-        for unsupported in ("echo", "suffix"):
-            if body.get(unsupported):
-                raise OpenAIError(
-                    f"'{unsupported}' is not supported",
-                    param=unsupported,
-                    code="unsupported_parameter",
-                )
+        if body.get("suffix"):
+            raise OpenAIError(
+                "'suffix' is not supported",
+                param="suffix",
+                code="unsupported_parameter",
+            )
+        echo = body.get("echo", False)
+        if not isinstance(echo, bool):
+            raise OpenAIError("'echo' must be a boolean", param="echo")
+        if echo and stream:
+            # the prompt prefix would have to be replayed through the SSE
+            # delta protocol, which OpenAI itself never did — reject rather
+            # than invent semantics
+            raise OpenAIError(
+                "'echo' is not supported with 'stream'",
+                param="echo",
+                code="unsupported_parameter",
+            )
         prompts = self._decode_completion_prompts(body)
         # legacy integer `logprobs`: top-k count, chosen logprob included
         lp = body.get("logprobs")
@@ -491,7 +526,7 @@ class OpenAIServer:
             body["logprobs"] = False
             body["top_logprobs"] = 0
         body.setdefault("max_tokens", 16)
-        return [self._decode_common(body, prompt) for prompt in prompts]
+        return [self._decode_common(body, prompt, echo=echo) for prompt in prompts]
 
     def _submit_all(self, greqs: List[GenerationRequest]) -> List[RequestHandle]:
         """Submit a multi-prompt fan-out atomically enough: if a later
@@ -515,15 +550,23 @@ class OpenAIServer:
         for p, (greq, handle) in enumerate(zip(greqs, handles)):
             result = handle.result()
             for c in result.choices:
+                echo = greq.sampling.echo
+                text = c.text
+                if echo:
+                    text = self.engine.tokenizer.decode(c.prompt_token_ids) + text
+                logprobs = None
+                if greq.sampling.logprobs:
+                    logprobs = self._completion_logprobs(
+                        c.tokens,
+                        c.logprobs,
+                        prompt_tokens=c.prompt_token_ids if echo else (),
+                        prompt_logprobs=c.prompt_logprobs if echo else None,
+                    )
                 choices.append(
                     {
                         "index": p * greq.n + c.index,
-                        "text": c.text,
-                        "logprobs": (
-                            self._completion_logprobs(c.tokens, c.logprobs)
-                            if greq.sampling.logprobs
-                            else None
-                        ),
+                        "text": text,
+                        "logprobs": logprobs,
                         "finish_reason": c.finish_reason,
                     }
                 )
@@ -540,7 +583,7 @@ class OpenAIServer:
         }
 
     def completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
-        greqs = self._decode_completion(body)
+        greqs = self._decode_completion(body, stream=True)
         include_usage = self._include_usage(body)
         handles = self._submit_all(greqs)
         cid = f"cmpl-{uuid.uuid4().hex[:12]}"

@@ -94,6 +94,10 @@ class ChoiceResult:
     tokens: List[int]
     finish_reason: Optional[str]
     logprobs: List[Tuple[float, List[Tuple[int, float]]]] = field(default_factory=list)
+    # completions `echo`: the prompt token ids and — when the request also
+    # asked for logprobs — their teacher-forced logprobs (first entry None)
+    prompt_token_ids: List[int] = field(default_factory=list)
+    prompt_logprobs: Optional[List[Optional[float]]] = None
 
 
 @dataclass
@@ -215,6 +219,9 @@ class RequestHandle:
                 tokens=list(r.output_tokens),
                 finish_reason=(r.finish_reason.value if r.finish_reason else None),
                 logprobs=list(r.output_logprobs),
+                prompt_token_ids=list(r.prompt_tokens),
+                prompt_logprobs=(None if r.prompt_logprobs is None
+                                 else list(r.prompt_logprobs)),
             )
             for i, r in enumerate(self._requests)
         ]
@@ -395,6 +402,7 @@ class EngineClient:
     def stats(self) -> Dict[str, object]:
         out = dict(self.engine.scheduler.snapshot())
         out["content_cache"] = self.engine.content_cache_stats()
+        out["speculation"] = self.engine.speculation_stats()
         out["draining"] = self._draining
         out["loop_errors"] = self._loop_errors
         out["watchdog"] = {

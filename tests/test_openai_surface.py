@@ -222,6 +222,39 @@ def test_out_of_range_sampler_params_rejected(server):
         assert body["error"]["param"] == param
 
 
+def test_completions_echo_semantics(server):
+    """echo=true: response text leads with the decoded prompt; the logprobs
+    block covers prompt + completion tokens, the first prompt entry is null
+    (nothing to condition on), prompt alternatives are null, and
+    text_offset strictly accumulates over the *returned* text."""
+    prompt = "echo me"
+    _, body = _request_json(server, {
+        "method": "POST", "path": "/v1/completions",
+        "request": {"prompt": prompt, "max_tokens": 4, "logprobs": 1,
+                    "echo": True},
+    })
+    choice = body["choices"][0]
+    assert choice["text"].startswith(prompt)
+    lp = choice["logprobs"]
+    n_prompt = body["usage"]["prompt_tokens"]
+    assert len(lp["tokens"]) == n_prompt + 4
+    assert lp["token_logprobs"][0] is None
+    for v in lp["token_logprobs"][1:]:
+        assert isinstance(v, float) and v <= 0.0
+    assert all(t is None for t in lp["top_logprobs"][:n_prompt])
+    assert all(t is not None for t in lp["top_logprobs"][n_prompt:])
+    offs = lp["text_offset"]
+    assert offs[0] == 0 and offs == sorted(offs)
+    assert "".join(lp["tokens"]) == choice["text"]
+    # without logprobs, echo still prefixes the text
+    _, plain = _request_json(server, {
+        "method": "POST", "path": "/v1/completions",
+        "request": {"prompt": prompt, "max_tokens": 4, "echo": True},
+    })
+    assert plain["choices"][0]["text"] == choice["text"]
+    assert plain["choices"][0]["logprobs"] is None
+
+
 def test_seeded_requests_replay_with_stable_fingerprint(server):
     """`seed` + unchanged `system_fingerprint` ⇒ identical completions —
     the OpenAI determinism contract, backed by per-request device-resident

@@ -368,7 +368,8 @@ def test_stats_snapshot_consistent_under_concurrent_mutation(cfg):
     url = f"http://127.0.0.1:{server.port}/stats"
     required = {"queue_depth", "oldest_wait_s", "latency_by_class",
                 "sched_policy", "preemptions", "spec_chunks",
-                "rows_per_wave", "host_syncs_per_token", "content_cache"}
+                "rows_per_wave", "host_syncs_per_token", "content_cache",
+                "speculation"}
     failures = []
     stop = threading.Event()
 

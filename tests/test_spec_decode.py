@@ -1,0 +1,411 @@
+"""Speculative decoding (PR 9): draft-verify inside the compiled decode
+block.  Greedy/seeded ngram rounds must be TOKEN-IDENTICAL to --spec-mode
+off (the match rule couples the verifier to the plain per-token key stream);
+the draft-model rung is held to the host rejection-sampling reference; KV
+rollback must leak nothing on either cache layout."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import InferenceEngine
+from repro.core.kv_cache import (SlotKVPool, admit_decode_state,
+                                 init_decode_state, select_cache_slots)
+from repro.core.request import Request, SamplingParams
+from repro.core.sampling import request_base_key
+from repro.core.spec_decode import (NGramProposer, SpecController,
+                                    build_spec_verify_fn, stage_drafts,
+                                    verify_reference)
+from repro.serving.tokenizer import ByteTokenizer
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # tier-1 collects without hypothesis (CI has it)
+    HAS_HYPOTHESIS = False
+
+TOK = ByteTokenizer()
+
+# repetition-heavy prompt: prompt-lookup drafting finds long continuations
+REP = "the cat sat on the mat and the cat sat on the mat again and "
+MIX = "zq pw lx " + REP
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def _mk(cfg, *, max_batch=3, K=8, seed=0, **kw):
+    return InferenceEngine(cfg, max_batch=max_batch, cache_len=256, seed=seed,
+                           max_decode_block=K, enable_prefix_cache=False, **kw)
+
+
+def _reqs(n_tok=24, **kw):
+    """A mixed batch: repetition-heavy greedy, short greedy, seeded
+    stochastic — different budgets so slots retire at different rounds."""
+    return [
+        Request(prompt_tokens=TOK.encode(REP),
+                sampling=SamplingParams(max_tokens=n_tok, **kw)),
+        Request(prompt_tokens=TOK.encode("short one"),
+                sampling=SamplingParams(max_tokens=n_tok // 2, **kw)),
+        Request(prompt_tokens=TOK.encode(MIX),
+                sampling=SamplingParams(max_tokens=n_tok, temperature=0.9,
+                                        top_p=0.9, seed=42)),
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# n-gram proposer (host)
+# --------------------------------------------------------------------------- #
+def test_ngram_proposer_prompt_lookup():
+    p = NGramProposer(max_n=3)
+    #       0  1  2  3  4  5  6  7
+    hist = [5, 6, 7, 9, 5, 6, 7, 9]      # trailing [6,7,9] recurs at 1..3
+    assert p.propose(hist + [5], 3) == [6, 7, 9]
+    assert p.propose(hist + [5], 2) == [6, 7]
+    # no recurrence anywhere -> no proposal
+    assert p.propose([1, 2, 3, 4, 5], 4) == []
+    # most recent occurrence wins over an earlier different continuation
+    assert p.propose([1, 9, 2, 1, 9, 3, 1, 9], 1) == [3]
+    assert p.propose([], 4) == [] and p.propose([7], 4) == []
+
+
+# --------------------------------------------------------------------------- #
+# tentpole bit-identity: greedy + seeded ngram == off
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("K", [1, 8])
+def test_ngram_token_identical_to_off_across_block_sizes(cfg, K):
+    ref = [r.output_tokens for r in _mk(cfg, K=K).generate(_reqs())]
+    eng = _mk(cfg, K=K, spec_mode="ngram", spec_k=4)
+    got = eng.generate(_reqs())
+    assert [r.output_tokens for r in got] == ref
+    assert all(r.finish_reason is not None for r in got)
+    stats = eng.speculation_stats()
+    assert stats["rounds"] > 0 and stats["tokens_drafted"] > 0
+    assert stats["tokens_accepted"] + stats["tokens_rejected"] \
+        == stats["tokens_drafted"]
+
+
+def test_ngram_identical_to_off_solo_vs_batched(cfg):
+    """Per-slot streams must not depend on batch composition with spec on
+    (staged neighbours, seq_valid masking, per-slot rollback)."""
+    solo = []
+    for r in _reqs():
+        eng = _mk(cfg, max_batch=1, spec_mode="ngram", spec_k=4)
+        eng.generate([r])
+        solo.append(r.output_tokens)
+    batched = _mk(cfg, spec_mode="ngram", spec_k=4).generate(_reqs())
+    assert [r.output_tokens for r in batched] == solo
+
+
+def test_seeded_stochastic_ngram_replays_spec_off_stream(cfg):
+    """The match rule samples targets with the plain per-token keys, so even
+    a *stochastic* seeded ngram request is bit-identical to spec off."""
+    r_off = Request(prompt_tokens=TOK.encode(MIX),
+                    sampling=SamplingParams(max_tokens=20, temperature=0.9,
+                                            top_p=0.9, seed=7))
+    _mk(cfg).generate([r_off])
+    r_on = Request(prompt_tokens=TOK.encode(MIX),
+                   sampling=SamplingParams(max_tokens=20, temperature=0.9,
+                                           top_p=0.9, seed=7))
+    _mk(cfg, spec_mode="ngram", spec_k=4).generate([r_on])
+    assert r_on.output_tokens == r_off.output_tokens
+    assert len(set(r_on.output_tokens)) > 1
+
+
+def test_ngram_identical_under_preemption_and_resume(cfg):
+    """Spec rounds + preemption: a preempted-and-resumed slot re-enters
+    speculation (EWMA reset, drafts from committed history) and still emits
+    the exact spec-off stream."""
+    def load(**kw):
+        longs = [Request(prompt_tokens=TOK.encode(REP),
+                         sampling=SamplingParams(max_tokens=30))
+                 for _ in range(3)]
+        vip = Request(prompt_tokens=TOK.encode("urgent"),
+                      sampling=SamplingParams(max_tokens=8), priority=5)
+        return longs, vip
+
+    outs = []
+    for spec in ({}, {"spec_mode": "ngram", "spec_k": 4}):
+        eng = _mk(cfg, max_batch=2, sched_policy="priority",
+                  preemption=True, **spec)
+        longs, vip = load()
+        for r in longs:
+            eng.add_request(r)
+        eng.step()
+        eng.add_request(vip)        # evicts a running long request
+        while not all(r.is_finished for r in longs + [vip]):
+            eng.step()
+        assert sum(r.preempt_count for r in longs) > 0
+        outs.append([r.output_tokens for r in longs + [vip]])
+    assert outs[0] == outs[1]
+
+
+def test_ngram_paged_layout_identical_and_leaks_no_pages(cfg):
+    kw = dict(kv_layout="paged", kv_page_size=16,
+              enable_content_cache=False)
+    ref = [r.output_tokens
+           for r in _mk(cfg, **kw).generate(_reqs())]
+    eng = _mk(cfg, spec_mode="ngram", spec_k=4, **kw)
+    free0 = eng.pool.allocator.num_free
+    got = eng.generate(_reqs())
+    assert [r.output_tokens for r in got] == ref
+    # every page returned after retire: rejected-tail cells live on
+    # slot-owned pages, so rollback can never strand a page refcount
+    assert eng.pool.allocator.num_free == free0
+    assert eng.speculation_stats()["rounds"] > 0
+
+
+def test_paged_exhaustion_with_spec_active(cfg):
+    """Page-arena pressure while speculating: capacity for spec_k+1 steps is
+    ensured per round (preempting if needed) and every request completes."""
+    eng = _mk(cfg, max_batch=3, kv_layout="paged", kv_page_size=16,
+              kv_num_pages=24, enable_content_cache=False,
+              spec_mode="ngram", spec_k=4, preemption=True)
+    free0 = eng.pool.allocator.num_free
+    reqs = [Request(prompt_tokens=TOK.encode(REP),
+                    sampling=SamplingParams(max_tokens=40))
+            for _ in range(4)]
+    done = eng.generate(reqs)
+    assert all(r.is_finished for r in done)
+    assert eng.pool.allocator.num_free == free0
+
+
+# --------------------------------------------------------------------------- #
+# draft-model rung
+# --------------------------------------------------------------------------- #
+def test_draft_model_oracle_accepts_and_matches_greedy(cfg):
+    """Draft == target (same config AND params): greedy rows must emit the
+    exact spec-off stream with high acceptance (only numeric drift between
+    the draft's own KV path and the target's can reject)."""
+    ref_eng = _mk(cfg)
+    ref = ref_eng.generate(_reqs())
+    eng = _mk(cfg, spec_mode="draft", spec_k=4, spec_draft_config=cfg,
+              spec_draft_params=ref_eng.params)
+    eng.params = ref_eng.params
+    got = eng.generate(_reqs())
+    for a, b in zip(ref[:2], got[:2]):          # the two greedy rows
+        assert a.output_tokens == b.output_tokens
+    stats = eng.speculation_stats()
+    assert stats["acceptance_rate"] > 0.3
+    assert stats["draft_pool_bytes"] > 0
+
+
+def test_draft_model_stochastic_seeded_replay(cfg):
+    """The rejection-sampled stream is NOT the spec-off stream (different
+    coupling), but it must be a valid completion and replay bit-identically
+    for a fixed seed across engine instances."""
+    def run():
+        eng = _mk(cfg, spec_mode="draft", spec_k=4, spec_draft_config=cfg)
+        r = Request(prompt_tokens=TOK.encode(MIX),
+                    sampling=SamplingParams(max_tokens=20, temperature=0.9,
+                                            top_p=0.9, seed=42))
+        eng.generate([r])
+        assert r.is_finished and len(r.output_tokens) == 20
+        return r.output_tokens
+    assert run() == run()
+
+
+def test_draft_model_requires_matching_vocab(cfg):
+    bad = dataclasses.replace(cfg, vocab_size=cfg.vocab_size * 2)
+    with pytest.raises(ValueError, match="vocab"):
+        _mk(cfg, spec_mode="draft", spec_draft_config=bad)
+
+
+# --------------------------------------------------------------------------- #
+# K adaptation + stats plumbing
+# --------------------------------------------------------------------------- #
+def test_controller_probation_and_recovery():
+    c = SpecController(alpha=0.5, probation_rounds=4)
+    c.on_admit(0)
+    assert c.tick() == 1.0
+    for _ in range(8):
+        c.observe(0, 4, 0)          # everything rejected
+    assert c.round_acceptance() < 0.15
+    assert c.tick(low_water=0.15) == 0.0      # probation entered
+    for _ in range(4):
+        assert c.tick() == 0.0                # cooldown holds
+    assert c.tick() == 1.0                    # expiry resets optimistic
+    c.release(0)
+    assert c.snapshot() == {}
+
+
+def test_scheduler_gates_spec_under_pressure(cfg):
+    eng = _mk(cfg, max_batch=2, spec_mode="ngram", spec_k=4)
+    s = eng.scheduler
+    assert s.plan_spec_k(4, 1.0) == 0         # no active slots yet
+    for r in _reqs()[:2]:
+        eng.add_request(r)
+    for _ in range(20):                       # step until prefills commit
+        eng.step()
+        if len(s.active) == 2 and not s.pending and not s.chunk_queue:
+            break
+    assert s.plan_spec_k(4, 1.0) == 4
+    assert s.plan_spec_k(4, 0.3) == 2         # low acceptance halves K
+    assert s.plan_spec_k(4, 0.1) == 0         # below low-water: off
+    assert s.plan_spec_k(4, 1.0, reclaim_queued=True) == 0
+    eng.add_request(_reqs()[0])               # pending pressure (batch full)
+    assert s.plan_spec_k(4, 1.0) == 0
+
+
+def test_speculation_stats_shape(cfg):
+    eng = _mk(cfg, spec_mode="ngram", spec_k=4)
+    eng.generate(_reqs())
+    s = eng.speculation_stats()
+    for k in ("mode", "k", "rounds", "tokens_drafted", "tokens_accepted",
+              "tokens_rejected", "tokens_emitted", "acceptance_rate",
+              "slot_acceptance_ewma", "draft_pool_bytes"):
+        assert k in s
+    off = _mk(cfg).speculation_stats()
+    assert off["mode"] == "off" and off["rounds"] == 0
+
+
+def test_logprobs_through_spec_rounds(cfg):
+    """Per-token logprobs requested with spec on: same tokens AND same
+    logprob values as spec off (the verify pass computes them from the same
+    per-position logits)."""
+    def run(**kw):
+        r = Request(prompt_tokens=TOK.encode(REP),
+                    sampling=SamplingParams(max_tokens=12, logprobs=True,
+                                            top_logprobs=2))
+        _mk(cfg, **kw).generate([r])
+        return r
+    a, b = run(), run(spec_mode="ngram", spec_k=4)
+    assert a.output_tokens == b.output_tokens
+    assert len(b.output_logprobs) == len(b.output_tokens)
+    for (lp_a, top_a), (lp_b, top_b) in zip(a.output_logprobs,
+                                            b.output_logprobs):
+        assert lp_a == pytest.approx(lp_b, abs=1e-5)
+        assert [t for t, _ in top_a] == [t for t, _ in top_b]
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis property: compiled verify round == host reference
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def target(cfg):
+    eng = InferenceEngine(cfg, max_batch=1, cache_len=64, max_decode_block=1,
+                          enable_prefix_cache=False)
+    # the target's own greedy continuation of the property prompt: perfect
+    # drafts, driving the full-acceptance (+bonus) path
+    r = Request(prompt_tokens=TOK.encode("property test prompt"),
+                sampling=SamplingParams(max_tokens=5))
+    eng.generate([r])
+    return eng.model, eng.params, np.asarray(r.output_tokens[:4], np.int32)
+
+
+def _seeded_round(cfg_obj, model, params, *, spec_k, drafts, temperature,
+                  top_p, top_k, seed, use_q, q_eps):
+    """Run ONE verify round on a hand-built slot and return
+    (device_emitted, host_emitted)."""
+    cache_len, B = 64, 2
+    prompt = TOK.encode("property test prompt")
+    ln = len(prompt)
+    pool = SlotKVPool(cfg_obj, B, cache_len)
+
+    bucket = 32
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, :ln - 1] = prompt[:-1]
+
+    @jax.jit
+    def prime(params, cache, toks):
+        pos = jnp.arange(bucket)[None, :]
+        sv = (jnp.arange(bucket) < ln - 1)[None, :]
+        out = model.apply(params, toks, mode="prefill", positions=pos,
+                          cache=cache, seq_valid=sv, logits_mode="last")
+        return out.cache
+
+    row = prime(params, pool.single_cache_zeros(), jnp.asarray(toks))
+    pool.insert(0, row)
+
+    base_key = request_base_key(seed)
+    state = init_decode_state(B, 0, 1, spec_k=spec_k)
+    state = admit_decode_state(
+        state, jnp.asarray([0], jnp.int32),
+        jnp.asarray([prompt[-1]], jnp.int32),
+        jnp.asarray([ln - 1], jnp.int32),
+        jnp.asarray([temperature], jnp.float32),
+        jnp.asarray([top_p], jnp.float32),
+        jnp.asarray([top_k], jnp.int32), jnp.asarray([0.0], jnp.float32),
+        jnp.asarray(base_key[None, :]), jnp.zeros((1, 1), bool),
+        jnp.asarray([100], jnp.int32),
+        jnp.full((1, 1), -1, jnp.int32), jnp.asarray([True]))
+
+    d_host = np.zeros((B, spec_k), np.int32)
+    d_host[0] = drafts
+    lens = np.zeros((B,), np.int32)
+    lens[0] = spec_k
+    # draft "quality" knob: q = eps-smoothed point mass on the draft token
+    V = cfg_obj.vocab_size
+    q = None
+    if use_q:
+        q_np = np.full((B, spec_k, V), q_eps / V, np.float32)
+        for j, d in enumerate(drafts):
+            q_np[0, j, d] += 1.0 - q_eps
+        q = jnp.asarray(q_np)
+
+    # host reference: run the target per token over [last, d_0..d_{k-1}]
+    ref_cache = {k: v for k, v in pool.cache.items()}
+    logits_rows = []
+    tok_in = jnp.asarray([prompt[-1]] + list(drafts), jnp.int32)
+    act = jnp.asarray([True, False])
+    for j in range(spec_k + 1):
+        pos = jnp.asarray([ln - 1 + j, 0], jnp.int32)
+        inp = jnp.stack([tok_in[j], jnp.int32(0)])
+        out = model.apply(params, inp[:, None], mode="decode",
+                          positions=pos[:, None], cache=ref_cache)
+        ref_cache = select_cache_slots(act, pos, out.cache, ref_cache)
+        logits_rows.append(np.asarray(out.logits[0, 0], np.float32))
+    host = verify_reference(np.stack(logits_rows), drafts,
+                            None if q is None else np.asarray(q[0]),
+                            base_key, ln - 1, temperature, top_p, top_k,
+                            0.0, use_q)
+
+    verify = build_spec_verify_fn(model, use_ctx=False, n_top=0,
+                                  paged=False, cache_len=cache_len)
+    state = stage_drafts(state, jnp.asarray(d_host), jnp.asarray(lens))
+    _, _, emit, _, _, _ = verify(params, pool.cache, state, q,
+                                 spec_k=spec_k, use_q=use_q)
+    col = np.asarray(emit)[:, 0]
+    device = [int(t) for t in col if t >= 0]
+    return device, host
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data())
+    def test_verify_round_matches_host_reference(cfg, target, data):
+        """Arbitrary (draft quality, k_draft, sampler) mixes: the compiled
+        batched verify round emits exactly what the run-target-per-token
+        host reference does — match rule and rejection-correction rule
+        alike."""
+        spec_k = data.draw(st.integers(1, 4), label="k")
+        seed = data.draw(st.integers(0, 2**32), label="seed")
+        temperature = data.draw(st.sampled_from([0.0, 0.7, 1.3]),
+                                label="temp")
+        top_p = data.draw(st.sampled_from([1.0, 0.9]), label="top_p")
+        top_k = data.draw(st.sampled_from([0, 40]), label="top_k")
+        use_q = data.draw(st.booleans(), label="use_q")
+        q_eps = data.draw(st.sampled_from([0.05, 0.9]), label="q_eps")
+        rng = np.random.default_rng(seed)
+        model, params, oracle = target
+        quality = data.draw(st.sampled_from(["random", "oracle", "mixed"]),
+                            label="draft quality")
+        if quality == "random":
+            drafts = rng.integers(0, cfg.vocab_size, spec_k).astype(np.int32)
+        elif quality == "oracle":   # the target's own continuation
+            drafts = oracle[:spec_k]
+        else:                       # good prefix, garbage tail
+            drafts = oracle[:spec_k].copy()
+            drafts[-1] = rng.integers(0, cfg.vocab_size)
+        device, host = _seeded_round(
+            cfg, model, params, spec_k=spec_k, drafts=drafts,
+            temperature=temperature, top_p=top_p, top_k=top_k, seed=seed,
+            use_q=use_q, q_eps=q_eps)
+        assert device == host
