@@ -11,9 +11,9 @@ import argparse
 import time
 
 from benchmarks import (decode_loop, fig2_concurrency, load_trace,
-                        mllm_cache, paged_kv, prefill_overlap, sched_policy,
-                        spec_decode, table1_throughput, table4_ablation,
-                        table7_text_prefix)
+                        mllm_cache, paged_kv, prefill_overlap, router,
+                        sched_policy, spec_decode, table1_throughput,
+                        table4_ablation, table7_text_prefix)
 from benchmarks.common import ROWS
 
 SUITES = [
@@ -25,6 +25,7 @@ SUITES = [
     ("load_trace", load_trace.run),
     ("paged_kv", paged_kv.run),
     ("mllm_cache", mllm_cache.run),
+    ("router", router.run),
     ("fig2", fig2_concurrency.run),
     ("table4", table4_ablation.run),
     ("table7", table7_text_prefix.run),

@@ -413,6 +413,17 @@ class InferenceEngine:
         # is enabled, so snapshot memory competes with ordinary prefix reuse;
         # with the prefix cache disabled the snapshot is held here directly.
         self._evicted: Dict[int, Dict[str, Any]] = {}
+        # shared-prefix admission groups (OpenAI `n` fan-out): leader
+        # request_id -> {"value": committed prompt cache or None,
+        # "remaining": followers still owed a share, "failed": leader died
+        # before commit}.  Followers stay queue-ineligible until the
+        # leader's prompt cache commits, then admit by sharing it — COW
+        # pages under the paged layout, zero full-cache copies — instead of
+        # re-running the prefill.  Works with the prefix cache disabled
+        # (the value is engine-owned, not an LRU entry).
+        self._prefill_groups: Dict[int, Dict[str, Any]] = {}
+        self.group_stats = {"groups": 0, "shared_admits": 0,
+                            "independent_fallbacks": 0}
 
         # power-of-two prefill buckets: cap the distinct compiled shapes by
         # raising the smallest bucket (pad more, compile less).  Floor 32,
@@ -687,6 +698,69 @@ class InferenceEngine:
                 return False
         return job.remaining == 0
 
+    # ------------------------------------------------------------------ #
+    # shared-prefix admission groups (n>1 fan-out; DESIGN_router.md)
+    # ------------------------------------------------------------------ #
+    def _admissible(self, req: Request) -> bool:
+        """Combined admission eligibility: media resolved AND (for an
+        ``n>1`` follower) the group leader's prompt cache committed, so
+        the follower admits by sharing it instead of prefilling again."""
+        return self._media_admissible(req) and self._group_admissible(req)
+
+    def _group_admissible(self, req: Request) -> bool:
+        if req.group_leader is None or req.metadata.get("group_done"):
+            return True
+        if self._has_media(req):
+            # media groups fall back to independent admission (the shared
+            # value carries no ctx rows); content-cache dedup already
+            # collapses their encoder work
+            return True
+        g = self._prefill_groups.get(req.group_leader)
+        if g is None:
+            # leader unknown to this engine (cross-replica handoff, direct
+            # add): admit independently rather than wait forever
+            return True
+        return g["value"] is not None or g["failed"]
+
+    def _group_value(self, req: Request) -> Optional[Dict[str, Any]]:
+        """The leader's committed prompt cache for an admissible follower
+        (None -> independent prefill)."""
+        if (req.group_leader is None or req.metadata.get("group_done")
+                or req.num_generated or self._has_media(req)):
+            return None
+        g = self._prefill_groups.get(req.group_leader)
+        if g is None or g["value"] is None:
+            return None
+        return g["value"]
+
+    def _group_consume(self, req: Request) -> None:
+        """One follower leaves the group (shared admission, independent
+        fallback, or termination): decrement once; the last one out
+        releases the group value's page refs."""
+        if req.group_leader is None or req.metadata.get("group_done"):
+            return
+        req.metadata["group_done"] = True
+        g = self._prefill_groups.get(req.group_leader)
+        if g is None:
+            return
+        g["remaining"] -= 1
+        if g["remaining"] <= 0:
+            value = g["value"]
+            if value is not None:
+                self._release_snapshot_value(value)
+            del self._prefill_groups[req.group_leader]
+
+    def _group_on_terminate(self, req: Request) -> None:
+        """Group bookkeeping on abort/failure/detach: a dying leader that
+        never committed flips the group to independent admission; a dying
+        follower consumes its share."""
+        if req.group_size > 1 and req.group_leader is None:
+            g = self._prefill_groups.get(req.request_id)
+            if g is not None and g["value"] is None:
+                g["failed"] = True
+        elif req.group_leader is not None:
+            self._group_consume(req)
+
     def _cancel_media_job(self, request_id: int) -> None:
         """Drop a request's media job (abort/failure): deregister it from
         every in-flight encode task; tasks left with no waiters are dropped
@@ -878,7 +952,7 @@ class InferenceEngine:
             # media-ineligible requests (embeddings still resolving in the
             # encode waves) are skipped without losing queue position —
             # peeking also opens media jobs for newly seen requests
-            head = self.scheduler.peek_pending(self._media_admissible)
+            head = self.scheduler.peek_pending(self._admissible)
             if head is None:
                 break
             if (self.faults is not None
@@ -889,7 +963,7 @@ class InferenceEngine:
                 # the retry draws fresh) — never dropped, never wedged
                 break
             slot = self.pool.allocate()
-            admitted = self.scheduler.admit([slot], self._media_admissible)
+            admitted = self.scheduler.admit([slot], self._admissible)
             if not admitted:
                 self.pool.free(slot)
                 break
@@ -1019,7 +1093,8 @@ class InferenceEngine:
         """Attach an admitted request to its slot: restore an eviction
         snapshot (preempted request), adopt the request's speculative
         prefill progress, or open a fresh prefill job."""
-        if req.preempt_count and self._try_resume(slot, req):
+        if ((req.preempt_count or req.request_id in self._evicted)
+                and self._try_resume(slot, req)):
             return
         job = self._spec_jobs.pop(req.request_id, None)
         if job is not None:
@@ -1051,7 +1126,7 @@ class InferenceEngine:
         ``max_preemptions`` to bound churn under adversarial load."""
         key = self.scheduler.policy.key
         while self.scheduler.pending and not self.pool.num_free:
-            head = self.scheduler.peek_pending(self._media_admissible)
+            head = self.scheduler.peek_pending(self._admissible)
             # a victim must be exactly rebuildable if its snapshot is later
             # lost: the re-prefill fallback can only represent histories
             # that fit the KV ring without wrapping (wrapped prefill would
@@ -1200,9 +1275,40 @@ class InferenceEngine:
             embeds, ctx_valid, salt, set_digest = self._media_pipeline(req)
         req.media_set_digest = set_digest
 
-        # Alg.2: longest cached prefix (cap: leave >=1 token for logits)
+        # n>1 fan-out: a follower admits by sharing its group leader's
+        # committed prompt cache — maximal match by construction (identical
+        # prompt), capped to leave >=1 token for first-token logits.  Paged
+        # pools lease the leader's published pages COW exactly like a
+        # prefix-cache hit; dense pools resume from the leader's row.  The
+        # share works with the prefix cache disabled.
         matched, single = 0, None
-        if self.prefix_cache is not None:
+        gvalue = self._group_value(req)
+        if gvalue is not None and len(tokens) == len(req.prompt_tokens):
+            matched = min(gvalue["len"], len(tokens) - 1)
+            if self._paged:
+                single = gvalue["dense"]
+                ps = self.pool.page_size
+                shared = list(gvalue["pages"][:min(matched // ps,
+                                                   len(gvalue["pages"]))])
+                if shared:
+                    self.pool.incref_pages(shared)
+                    stale = self._job_leases.pop(req.request_id, None)
+                    if stale:
+                        self.pool.release_pages(stale)
+                    self._job_leases[req.request_id] = shared
+            else:
+                single = gvalue["cache"]
+            req.cached_prefix_len = matched
+            self.group_stats["shared_admits"] += 1
+            self._group_consume(req)
+        elif req.group_leader is not None \
+                and not req.metadata.get("group_done"):
+            # group gone (leader died / value dropped): independent prefill
+            self.group_stats["independent_fallbacks"] += 1
+            self._group_consume(req)
+
+        # Alg.2: longest cached prefix (cap: leave >=1 token for logits)
+        if single is None and self.prefix_cache is not None:
             value, matched = self.prefix_cache.lookup(
                 tokens, salt=salt, max_len=len(tokens) - 1)
             if value is not None:
@@ -1334,7 +1440,7 @@ class InferenceEngine:
         fresh = [r for r in self.scheduler.pending_in_order()
                  if r.request_id not in self._spec_jobs
                  and not r.preempt_count
-                 and self._media_admissible(r)]
+                 and self._admissible(r)]
         for (bucket, cross_cached), rows in groups.items():
             kp = 1 << (len(rows) - 1).bit_length()
             while len(rows) < kp:
@@ -1529,6 +1635,8 @@ class InferenceEngine:
             self.pool.insert_many([a.slot for a in wave],
                                   [a.single_cache for a in wave])
         self._live_slots.update(a.slot for a in wave)
+        for a in wave:
+            self._group_publish(a)
         events: List[StreamEvent] = []
         for a in wave:
             # a resumed-by-prefill request keeps its streamer (mid-UTF-8
@@ -1551,6 +1659,30 @@ class InferenceEngine:
             [(a.slot, a.req, a.first_token, a.seq_len, a.ctx_valid,
               not a.req.is_finished) for a in wave])
         return events
+
+    def _group_publish(self, a: "_Admission") -> None:
+        """n>1 group leader's commit: stage its freshly inserted prompt
+        cache as the group's shared value, so followers admit against it.
+        Fires exactly once (the first commit is always the prompt-only one;
+        a preemption re-prefill commits with history appended and is
+        guarded out).  Paged pools share the slot's prompt pages by
+        incref'd reference — zero copies; dense pools share the row read
+        back from the pool (generated KV lands only in later blocks, so
+        the row is exactly the prompt prefill)."""
+        req = a.req
+        g = self._prefill_groups.get(req.request_id)
+        if (g is None or g["value"] is not None or g["remaining"] <= 0
+                or a.seq_len != len(req.prompt_tokens)
+                or self._has_media(req)):
+            return
+        if self._paged:
+            ps = self.pool.page_size
+            pub = list(self.pool.slot_pages(a.slot)[:a.seq_len // ps])
+            self.pool.incref_pages(pub)
+            g["value"] = {"pages": pub, "dense": a.single_cache,
+                          "len": a.seq_len}
+        else:
+            g["value"] = {"cache": self.pool.read(a.slot), "len": a.seq_len}
 
     def _paged_insert_wave(self, wave: List[_Admission]) -> None:
         """Paged admission: each row's COW-leased prefix pages map into the
@@ -1863,6 +1995,7 @@ class InferenceEngine:
                 req = req or job.req
         if req is None or req.is_finished:
             return []
+        self._group_on_terminate(req)
         self._cancel_media_job(request_id)
         self._release_lease(request_id)
         meta = self._evicted.pop(request_id, None)
@@ -1938,6 +2071,11 @@ class InferenceEngine:
                 if isinstance(m.get("cache"), dict) and \
                         m["cache"].get("pages"):
                     m["cache"] = None
+            # group share values also leased into the dead arena: keep the
+            # dense shadow (separate buffer, still valid), drop the pages
+            for g in self._prefill_groups.values():
+                if isinstance(g.get("value"), dict):
+                    g["value"]["pages"] = []
         else:
             fresh = SlotKVPool(self.cfg, self.pool.max_batch,
                                self.pool.cache_len, ctx_len=self.ctx_len)
@@ -1982,6 +2120,118 @@ class InferenceEngine:
         events.extend(self._fault_events)
         self._fault_events.clear()
         return events
+
+    # ------------------------------------------------------------------ #
+    # cross-replica drain/handoff (DESIGN_router.md)
+    # ------------------------------------------------------------------ #
+    def export_handoff(self) -> List[Dict[str, Any]]:
+        """Rolling-restart handoff: capture every open request as a
+        portable record a successor replica resumes *bit-identically*,
+        then detach them all without emitting finish events (the requests
+        stay alive — their handles migrate with the records).
+
+        Live decode slots export a dense cache snapshot (paged slots
+        gather their pages back into one dense row — the same
+        ``pool.read`` the eviction snapshot uses) plus their streaming
+        -codec state (mid-UTF-8 decoder, stop-sequence holdback), so the
+        successor restores the slot through the existing exact-sequence
+        resume path.  Everything else — pending, mid-prefill, speculative,
+        preempted, and media requests — exports as a queue record that
+        re-prefills its prompt+history on the successor; chunked prefill
+        is bit-identical to monolithic, so the continuation is too.  The
+        per-request ``sample_key`` travels on the request itself, keeping
+        seeded/stochastic streams exact across the hop."""
+        records: List[Dict[str, Any]] = []
+        for slot in sorted(self._live_slots):
+            req = self.scheduler.active.get(slot)
+            if req is None or req.is_finished:
+                continue
+            if self._has_media(req):
+                continue                  # exported below as a queue record
+            records.append({
+                "req": req,
+                "cache": {"cache": self.pool.read(slot)},
+                "ctx_valid": (np.asarray(self.state.ctx_valid[slot])
+                              if self.media_kind != "none" else None),
+                "streamer": self._streamers.get(req.request_id),
+                "stopchk": self._stopchk.get(req.request_id),
+            })
+        snapshotted = {r["req"].request_id for r in records}
+        others = [r for r in self.scheduler.active.values()]
+        others += list(self.scheduler.pending_in_order())
+        others += [j.req for j in self._spec_jobs.values()]
+        for req in others:
+            if (req.request_id in snapshotted or req.is_finished):
+                continue
+            snapshotted.add(req.request_id)
+            records.append({
+                "req": req, "cache": None, "ctx_valid": None,
+                "streamer": self._streamers.get(req.request_id),
+                "stopchk": self._stopchk.get(req.request_id),
+            })
+        for rec in records:
+            self._detach(rec["req"])
+        return records
+
+    def _detach(self, req: Request) -> None:
+        """Release every engine resource a request holds — exactly
+        :meth:`abort`'s propagation map — WITHOUT finishing it: no
+        terminal event, status back to QUEUED.  The request object itself
+        (prompt, generated history, sample key, codec state captured by
+        the caller) is the handoff payload."""
+        rid = req.request_id
+        slot = next((s for s, r in self.scheduler.active.items()
+                     if r.request_id == rid), None)
+        if slot is not None:
+            self.scheduler.drop_prefill_jobs(rid)
+            self._ready_jobs = [j for j in self._ready_jobs
+                                if j.req.request_id != rid]
+            self.scheduler.abort_slot(slot)
+            self.pool.free(slot)
+            self._live_slots.discard(slot)
+            self._spec_release(slot)
+            self._deactivate_slot(slot)
+        else:
+            self.scheduler.abort_pending(rid)
+            self._spec_jobs.pop(rid, None)
+        self._group_on_terminate(req)
+        self._cancel_media_job(rid)
+        self._release_lease(rid)
+        meta = self._evicted.pop(rid, None)
+        if meta is not None:
+            self._release_snapshot_value(meta["cache"])
+            if self.prefix_cache is not None:
+                self._release_snapshot_value(self.prefix_cache.take_exact(
+                    req.prompt_tokens + req.output_tokens,
+                    salt=self._salt(req)))
+        self._streamers.pop(rid, None)
+        self._stopchk.pop(rid, None)
+        req.status = RequestStatus.QUEUED
+
+    def import_handoff(self, rec: Dict[str, Any]) -> None:
+        """Adopt one exported record: requests with a cache snapshot seed
+        the eviction-resume table (``_bind_slot`` restores the slot through
+        ``_try_resume`` — the same code path preemption resume takes, so
+        the continuation is bit-identical); records without one re-prefill
+        prompt+history.  Codec state (mid-UTF-8 decoder, stop-sequence
+        holdback) is installed ahead of admission; ``sample_key`` is
+        already bound on the request and survives the hop untouched."""
+        req = rec["req"]
+        rid = req.request_id
+        self._assign_sample_key(req)      # idempotent: keeps the key stream
+        if rec.get("streamer") is not None:
+            self._streamers[rid] = rec["streamer"]
+        if rec.get("stopchk") is not None:
+            self._stopchk[rid] = rec["stopchk"]
+        if rec.get("cache") is not None:
+            self._evicted[rid] = {"cache": rec["cache"],
+                                  "ctx_valid": rec.get("ctx_valid")}
+        elif req.output_tokens:
+            # mid-generation record without a snapshot: resume by
+            # re-prefilling the whole history (the preemption fallback)
+            req.preempt_count = max(1, req.preempt_count)
+        req.status = RequestStatus.QUEUED
+        self.scheduler.add(req)
 
     # ------------------------------------------------------------------ #
     # public API
@@ -2055,6 +2305,15 @@ class InferenceEngine:
                 "echo is supported for text-only prompts (prompt logprobs "
                 "are teacher-forced over the token sequence alone)")
         self._assign_sample_key(req)
+        # an n>1 group leader opens its group entry here (i.e. at
+        # EngineClient.submit) so followers released later — possibly in a
+        # different admission round — find it and wait for the shared value
+        if (req.group_size > 1 and req.group_leader is None
+                and req.request_id not in self._prefill_groups):
+            self._prefill_groups[req.request_id] = {
+                "value": None, "remaining": req.group_size - 1,
+                "failed": False}
+            self.group_stats["groups"] += 1
 
     def add_request(self, req: Request) -> None:
         self.validate_request(req)

@@ -105,6 +105,13 @@ class Request:
     # queueing — core/admission.py); the OpenAI ``user`` field or the
     # ``x-tenant`` header map here
     tenant: str = "default"
+    # shared-prefix admission group (OpenAI ``n`` fan-out): every choice of
+    # one GenerationRequest carries the leader's request_id.  The engine
+    # prefills the leader once and admits the followers by sharing the
+    # leader's committed prompt cache (COW pages under the paged layout) —
+    # see InferenceEngine._group_value.  None = independent request.
+    group_leader: Optional[int] = None
+    group_size: int = 1
 
     # -- filled in by the engine --------------------------------------- #
     status: RequestStatus = RequestStatus.QUEUED
@@ -221,14 +228,24 @@ class GenerationRequest:
     priority: int = 0
     deadline_ms: Optional[float] = None
     tenant: str = "default"
+    # multi-turn session affinity hint (the ``session`` body extension /
+    # ``x-session`` header): the router pins a session's turns to one
+    # replica so its prefix cache stays warm.  None = no pin.
+    session: Optional[str] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
 
     def to_requests(self, tokenizer) -> List["Request"]:
-        """Expand into ``n`` engine requests (choice index in metadata)."""
+        """Expand into ``n`` engine requests (choice index in metadata).
+
+        With ``n > 1`` the choices form one shared-prefix admission group:
+        the first choice is the group leader, the rest carry its
+        ``request_id`` in ``group_leader`` so the engine prefills the
+        prompt once and shares the committed cache (COW pages under the
+        paged layout) instead of running n independent prefills."""
         if self.n < 1:
             raise ValueError(f"n must be >= 1, got {self.n}")
         tokens = self.prompt if not isinstance(self.prompt, str) else tokenizer.encode(self.prompt)
-        out = []
+        out: List[Request] = []
         for i in range(self.n):
             out.append(
                 Request(
@@ -240,6 +257,8 @@ class GenerationRequest:
                     priority=self.priority,
                     deadline_ms=self.deadline_ms,
                     tenant=self.tenant,
+                    group_leader=(out[0].request_id if i else None),
+                    group_size=self.n,
                     metadata={**self.metadata, "choice_index": i},
                 )
             )

@@ -17,7 +17,9 @@ from repro.core.admission import AdmissionController, TenantConfig
 from repro.core.engine import InferenceEngine
 from repro.core.faults import FaultInjector, parse_fault_rates
 from repro.serving.api import OpenAIServer
+from repro.serving.asgi import AsgiServer, uvicorn_available
 from repro.serving.client import EngineClient
+from repro.serving.router import ROUTER_POLICIES, Router
 from repro.serving.server import ApiServer
 
 
@@ -42,6 +44,22 @@ def main() -> None:
     ap.add_argument("--cache-len", type=int, default=512)
     ap.add_argument("--port", type=int, default=8177)
     ap.add_argument("--seed", type=int, default=0)
+    # -- multi-replica serving (PR 10; DESIGN_router.md) ----------------- #
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="in-process engine replicas behind the router "
+                         "(1 = single engine, no router layer)")
+    ap.add_argument("--router-policy", choices=ROUTER_POLICIES,
+                    default="affinity",
+                    help="replica placement: affinity (session pin -> "
+                         "prefix-digest match -> least outstanding "
+                         "tokens), least_loaded, round_robin, random")
+    ap.add_argument("--transport", choices=("asgi", "threaded"),
+                    default="asgi",
+                    help="HTTP transport: asyncio-native ASGI app "
+                         "(uvicorn when installed, bundled asyncio "
+                         "server otherwise — no thread per SSE "
+                         "connection), or the legacy thread-per-"
+                         "connection stdlib server")
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--no-content-cache", action="store_true")
     ap.add_argument("--no-vision-embed-cache", action="store_true",
@@ -188,48 +206,69 @@ def main() -> None:
     if rates:
         faults = FaultInjector(seed=args.fault_seed, rates=rates)
         print(f"chaos: fault injection active {rates} (seed {args.fault_seed})")
-    engine = InferenceEngine(
-        cfg, max_batch=args.max_batch, cache_len=args.cache_len,
-        seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
-        enable_content_cache=not args.no_content_cache,
-        cache_vision_embeddings=not args.no_vision_embed_cache,
-        cache_vision_kv=not args.no_vision_kv_cache,
-        content_cache_bytes=(None if args.content_cache_mb is None
-                             else args.content_cache_mb * 1024 * 1024),
-        vision_work_iters=args.vision_work_iters,
-        encode_wave=args.encode_wave,
-        max_decode_block=args.max_decode_block,
-        top_p=args.top_p, top_k=args.top_k, min_p=args.min_p,
-        prefill_chunk=args.prefill_chunk,
-        max_prefill_buckets=args.max_prefill_buckets,
-        sched_policy=args.sched_policy,
-        preemption=args.preemption,
-        max_preemptions=args.max_preemptions,
-        speculative_fill=not args.no_spec_fill,
-        aging_s=args.aging_s,
-        faults=faults,
-        kv_layout=args.kv_layout,
-        kv_page_size=args.kv_page_size,
-        kv_num_pages=args.kv_num_pages,
-        kv_dtype=args.kv_dtype,
-        spec_mode=args.spec_mode,
-        spec_k=args.spec_k,
-        spec_draft_config=spec_draft)
-    admission = None
-    if not args.no_admission:
-        admission = AdmissionController(
-            tenants=dict(parse_tenant_spec(s) for s in args.tenant),
-            max_queue_depth=args.max_queue_depth,
-            queue_timeout_s=args.queue_timeout,
-            shed_queue_depth=args.shed_queue_depth,
-            shed_wait_s=args.shed_wait)
-    client = EngineClient(
-        engine, admission=admission,
-        watchdog_timeout_s=(args.watchdog_timeout
-                            if args.watchdog_timeout > 0 else None))
-    server = ApiServer(OpenAIServer(client, cfg.name), port=args.port)
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+
+    def build_replica() -> EngineClient:
+        """One engine + admission + lifecycle client.  Replicas share the
+        seed, so they are weight-identical — the property drain/handoff
+        bit-identity rests on."""
+        engine = InferenceEngine(
+            cfg, max_batch=args.max_batch, cache_len=args.cache_len,
+            seed=args.seed, enable_prefix_cache=not args.no_prefix_cache,
+            enable_content_cache=not args.no_content_cache,
+            cache_vision_embeddings=not args.no_vision_embed_cache,
+            cache_vision_kv=not args.no_vision_kv_cache,
+            content_cache_bytes=(None if args.content_cache_mb is None
+                                 else args.content_cache_mb * 1024 * 1024),
+            vision_work_iters=args.vision_work_iters,
+            encode_wave=args.encode_wave,
+            max_decode_block=args.max_decode_block,
+            top_p=args.top_p, top_k=args.top_k, min_p=args.min_p,
+            prefill_chunk=args.prefill_chunk,
+            max_prefill_buckets=args.max_prefill_buckets,
+            sched_policy=args.sched_policy,
+            preemption=args.preemption,
+            max_preemptions=args.max_preemptions,
+            speculative_fill=not args.no_spec_fill,
+            aging_s=args.aging_s,
+            faults=faults,
+            kv_layout=args.kv_layout,
+            kv_page_size=args.kv_page_size,
+            kv_num_pages=args.kv_num_pages,
+            kv_dtype=args.kv_dtype,
+            spec_mode=args.spec_mode,
+            spec_k=args.spec_k,
+            spec_draft_config=spec_draft)
+        admission = None
+        if not args.no_admission:
+            admission = AdmissionController(
+                tenants=dict(parse_tenant_spec(s) for s in args.tenant),
+                max_queue_depth=args.max_queue_depth,
+                queue_timeout_s=args.queue_timeout,
+                shed_queue_depth=args.shed_queue_depth,
+                shed_wait_s=args.shed_wait)
+        return EngineClient(
+            engine, admission=admission,
+            watchdog_timeout_s=(args.watchdog_timeout
+                                if args.watchdog_timeout > 0 else None))
+
+    if args.replicas > 1:
+        client = Router([build_replica() for _ in range(args.replicas)],
+                        policy=args.router_policy, seed=args.seed)
+        print(f"router: {args.replicas} replicas, "
+              f"policy={args.router_policy}")
+    else:
+        client = build_replica()
+    api = OpenAIServer(client, cfg.name)
+    if args.transport == "asgi":
+        server = AsgiServer(api, port=args.port)
+        impl = "uvicorn" if uvicorn_available() else "bundled asyncio"
+    else:
+        server = ApiServer(api, port=args.port)
+        impl = "threaded http.server"
     server.start()
-    print(f"listening on http://127.0.0.1:{server.port} "
+    print(f"listening on http://127.0.0.1:{server.port} [{impl}] "
           "(chat + completions + models; stats: /stats; health: /healthz "
           "/readyz; drain: POST /admin/drain or SIGTERM)")
 

@@ -264,6 +264,12 @@ class OpenAIServer:
         user = body.get("user")
         if user is not None and not isinstance(user, str):
             raise OpenAIError("'user' must be a string", param="user")
+        # router session affinity (body extension; the HTTP wrapper also
+        # maps an ``x-session`` header here): multi-turn chat carrying the
+        # same session id pins to one replica so its prefix cache stays warm
+        session = body.get("session")
+        if session is not None and not isinstance(session, str):
+            raise OpenAIError("'session' must be a string", param="session")
         return GenerationRequest(
             prompt=prompt,
             sampling=sampling,
@@ -272,6 +278,7 @@ class OpenAIServer:
             priority=priority,
             deadline_ms=deadline_ms,
             tenant=user or "default",
+            session=session,
         )
 
     def _decode_chat(self, body: Dict[str, Any]) -> GenerationRequest:
@@ -397,10 +404,7 @@ class OpenAIServer:
     # ------------------------------------------------------------------ #
     # chat completions
     # ------------------------------------------------------------------ #
-    def chat_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
-        greq = self._decode_chat(body)
-        handle = self._submit(greq)
-        result = handle.result()
+    def _encode_chat_result(self, greq: GenerationRequest, result) -> Dict[str, Any]:
         choices = []
         for c in result.choices:
             choices.append(
@@ -425,9 +429,24 @@ class OpenAIServer:
             "usage": result.usage(),
         }
 
-    def chat_completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
-        """SSE-style chunk dicts.  Closing the generator early (client
-        disconnect) aborts the underlying request."""
+    def chat_completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        greq = self._decode_chat(body)
+        handle = self._submit(greq)
+        return self._encode_chat_result(greq, handle.result())
+
+    async def chat_completion_async(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        """Asyncio-native twin of :meth:`chat_completion`: awaiting the
+        handle parks on the engine-thread waker, not a worker thread, so
+        one event loop can hold hundreds of in-flight requests."""
+        greq = self._decode_chat(body)
+        handle = self._submit(greq)
+        return self._encode_chat_result(greq, await handle.result_async())
+
+    def _chat_stream_codec(self, body: Dict[str, Any]):
+        """Shared decode/submit/encode state for the sync and async chat
+        stream generators: returns ``(greq, handle, head_chunks,
+        event_chunks, tail_chunks)`` where the last three are pure
+        encoding closures over one chunk id."""
         greq = self._decode_chat(body)
         include_usage = self._include_usage(body)
         handle = self._submit(greq)
@@ -454,31 +473,50 @@ class OpenAIServer:
                 out["usage"] = None
             return out
 
+        def head_chunks() -> List[Dict[str, Any]]:
+            return [chunk(i, {"role": "assistant", "content": ""})
+                    for i in range(greq.n)]
+
+        def event_chunks(ev) -> List[Dict[str, Any]]:
+            if isinstance(ev, TokenEvent):
+                logprobs = None
+                if greq.sampling.logprobs:
+                    logprobs = self._chat_logprobs(
+                        [ev.token], [(ev.logprob, ev.top_logprobs or [])]
+                    )
+                if ev.text or logprobs:
+                    return [chunk(ev.index, {"content": ev.text}, logprobs=logprobs)]
+                return []
+            if isinstance(ev, FinishEvent):
+                delta = {"content": ev.text} if ev.text else {}
+                return [chunk(ev.index, delta, finish=ev.finish_reason)]
+            return []
+
+        def tail_chunks() -> List[Dict[str, Any]]:
+            if not include_usage:
+                return []
+            return [{
+                "id": cid,
+                "object": "chat.completion.chunk",
+                "created": created,
+                "model": self.model_name,
+                "choices": [],
+                "usage": handle.usage(),
+            }]
+
+        return greq, handle, head_chunks, event_chunks, tail_chunks
+
+    def chat_completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
+        """SSE-style chunk dicts.  Closing the generator early (client
+        disconnect) aborts the underlying request."""
+        _, handle, head, event_chunks, tail = self._chat_stream_codec(body)
+
         def gen() -> Iterator[Dict[str, Any]]:
             try:
-                for i in range(greq.n):
-                    yield chunk(i, {"role": "assistant", "content": ""})
+                yield from head()
                 for ev in handle.stream():
-                    if isinstance(ev, TokenEvent):
-                        logprobs = None
-                        if greq.sampling.logprobs:
-                            logprobs = self._chat_logprobs(
-                                [ev.token], [(ev.logprob, ev.top_logprobs or [])]
-                            )
-                        if ev.text or logprobs:
-                            yield chunk(ev.index, {"content": ev.text}, logprobs=logprobs)
-                    elif isinstance(ev, FinishEvent):
-                        delta = {"content": ev.text} if ev.text else {}
-                        yield chunk(ev.index, delta, finish=ev.finish_reason)
-                if include_usage:
-                    yield {
-                        "id": cid,
-                        "object": "chat.completion.chunk",
-                        "created": created,
-                        "model": self.model_name,
-                        "choices": [],
-                        "usage": handle.usage(),
-                    }
+                    yield from event_chunks(ev)
+                yield from tail()
             finally:
                 # GeneratorExit from a dropped SSE connection lands here:
                 # propagate it into true engine-side cancellation
@@ -486,6 +524,29 @@ class OpenAIServer:
                     handle.abort(wait=False)
 
         return gen()
+
+    def chat_completion_stream_async(self, body: Dict[str, Any]):
+        """Async twin of :meth:`chat_completion_stream` for the ASGI
+        transport: ``async for`` over the handle's event stream rides the
+        engine-thread waker, so no worker thread is parked per open SSE
+        connection.  Closing the generator aborts the request, same as
+        the sync path."""
+        _, handle, head, event_chunks, tail = self._chat_stream_codec(body)
+
+        async def agen():
+            try:
+                for c in head():
+                    yield c
+                async for ev in handle.stream():
+                    for c in event_chunks(ev):
+                        yield c
+                for c in tail():
+                    yield c
+            finally:
+                if not handle.finished:
+                    handle.abort(wait=False)
+
+        return agen()
 
     # ------------------------------------------------------------------ #
     # legacy completions
@@ -545,10 +606,21 @@ class OpenAIServer:
     def completion(self, body: Dict[str, Any]) -> Dict[str, Any]:
         greqs = self._decode_completion(body)
         handles = self._submit_all(greqs)
+        results = [handle.result() for handle in handles]
+        return self._encode_completion_results(greqs, results)
+
+    async def completion_async(self, body: Dict[str, Any]) -> Dict[str, Any]:
+        """Asyncio-native twin of :meth:`completion` (see
+        :meth:`chat_completion_async`)."""
+        greqs = self._decode_completion(body)
+        handles = self._submit_all(greqs)
+        results = [await handle.result_async() for handle in handles]
+        return self._encode_completion_results(greqs, results)
+
+    def _encode_completion_results(self, greqs, results) -> Dict[str, Any]:
         choices = []
         usage = {"prompt_tokens": 0, "completion_tokens": 0, "total_tokens": 0}
-        for p, (greq, handle) in enumerate(zip(greqs, handles)):
-            result = handle.result()
+        for p, (greq, result) in enumerate(zip(greqs, results)):
             for c in result.choices:
                 echo = greq.sampling.echo
                 text = c.text
@@ -582,7 +654,9 @@ class OpenAIServer:
             "usage": usage,
         }
 
-    def completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
+    def _completion_stream_codec(self, body: Dict[str, Any]):
+        """Shared decode/submit/encode state for the sync and async
+        completion stream generators (see :meth:`_chat_stream_codec`)."""
         greqs = self._decode_completion(body, stream=True)
         include_usage = self._include_usage(body)
         handles = self._submit_all(greqs)
@@ -609,40 +683,74 @@ class OpenAIServer:
                 out["usage"] = None
             return out
 
+        def event_chunks(greq: GenerationRequest, base: int, ev) -> List[Dict[str, Any]]:
+            if isinstance(ev, TokenEvent):
+                logprobs = None
+                if greq.sampling.logprobs:
+                    logprobs = self._completion_logprobs(
+                        [ev.token], [(ev.logprob, ev.top_logprobs or [])]
+                    )
+                if ev.text or logprobs:
+                    return [chunk(base + ev.index, ev.text, logprobs=logprobs)]
+                return []
+            if isinstance(ev, FinishEvent):
+                return [chunk(base + ev.index, ev.text, finish=ev.finish_reason)]
+            return []
+
+        def tail_chunks() -> List[Dict[str, Any]]:
+            if not include_usage:
+                return []
+            usage = {"prompt_tokens": 0, "completion_tokens": 0, "total_tokens": 0}
+            for handle in handles:
+                for key, val in handle.usage().items():
+                    usage[key] += val
+            return [{
+                "id": cid,
+                "object": "text_completion",
+                "created": created,
+                "model": self.model_name,
+                "choices": [],
+                "usage": usage,
+            }]
+
+        return greqs, handles, event_chunks, tail_chunks
+
+    def completion_stream(self, body: Dict[str, Any]) -> Iterator[Dict[str, Any]]:
+        greqs, handles, event_chunks, tail = self._completion_stream_codec(body)
+
         def gen() -> Iterator[Dict[str, Any]]:
             try:
                 for p, (greq, handle) in enumerate(zip(greqs, handles)):
                     base = p * greq.n
                     for ev in handle.stream():
-                        if isinstance(ev, TokenEvent):
-                            logprobs = None
-                            if greq.sampling.logprobs:
-                                logprobs = self._completion_logprobs(
-                                    [ev.token], [(ev.logprob, ev.top_logprobs or [])]
-                                )
-                            if ev.text or logprobs:
-                                yield chunk(base + ev.index, ev.text, logprobs=logprobs)
-                        elif isinstance(ev, FinishEvent):
-                            yield chunk(base + ev.index, ev.text, finish=ev.finish_reason)
-                if include_usage:
-                    usage = {"prompt_tokens": 0, "completion_tokens": 0, "total_tokens": 0}
-                    for handle in handles:
-                        for key, val in handle.usage().items():
-                            usage[key] += val
-                    yield {
-                        "id": cid,
-                        "object": "text_completion",
-                        "created": created,
-                        "model": self.model_name,
-                        "choices": [],
-                        "usage": usage,
-                    }
+                        yield from event_chunks(greq, base, ev)
+                yield from tail()
             finally:
                 for handle in handles:
                     if not handle.finished:
                         handle.abort(wait=False)
 
         return gen()
+
+    def completion_stream_async(self, body: Dict[str, Any]):
+        """Async twin of :meth:`completion_stream` for the ASGI transport."""
+        greqs, handles, event_chunks, tail = self._completion_stream_codec(body)
+
+        async def agen():
+            try:
+                for p, (greq, handle) in enumerate(zip(greqs, handles)):
+                    base = p * greq.n
+                    async for ev in handle.stream():
+                        for c in event_chunks(greq, base, ev):
+                            yield c
+                for c in tail():
+                    yield c
+            finally:
+                for handle in handles:
+                    if not handle.finished:
+                        handle.abort(wait=False)
+
+        return agen()
 
     @staticmethod
     def _include_usage(body: Dict[str, Any]) -> bool:
@@ -667,17 +775,23 @@ class OpenAIServer:
             ],
         }
 
-    def stats(self) -> Dict[str, Any]:
-        """Serving observability (``GET /stats``): scheduler queue depth and
-        wait age (starvation surface), decode-block and admission-pipeline
-        counters, scheduling-policy counters (speculative fill, preemptions,
-        per-class TTFT/e2e latency percentiles and deadline misses), abort
-        counts, and the engine's knobs — the signals the prefill/decode
-        overlap and cancellation work are judged by in production.  With
-        overload protection attached (PR 6) the payload also carries the
-        admission snapshot (degradation level, queue depth, est. wait,
-        per-tenant shed/timeout/release counters), watchdog state, and the
-        fault-injection counters when a chaos run is active."""
+    #: ``GET /stats`` envelope version.  v2 namespaces the payload into
+    #: ``router`` / ``replicas[]`` sections; the flat per-engine keys are
+    #: still mirrored at the top level for one release (see ``stats``).
+    STATS_SCHEMA_VERSION = 2
+
+    _STATS_DEPRECATION = (
+        "flat top-level engine keys are deprecated since schema_version 2; "
+        "read replicas[] (per-engine) and router (placement) instead — the "
+        "flat mirror is kept for one release and then removed"
+    )
+
+    def _engine_flat_stats(self) -> Dict[str, Any]:
+        """The legacy flat per-engine payload: client lifecycle counters
+        plus engine knobs and cache stats.  Single-replica deployments see
+        exactly the pre-v2 keys; with a router in front the flat mirror
+        aggregates across replicas (sums of counters, min of free slots)
+        via the router's own ``stats``."""
         eng = self.engine
         out = dict(self.client.stats())
         out.update(
@@ -701,6 +815,31 @@ class OpenAIServer:
                 "hits": eng.prefix_cache.stats.hits,
                 "misses": eng.prefix_cache.stats.misses,
             }
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving observability (``GET /stats``), schema_version 2: a
+        versioned envelope with a ``router`` section (placement counters —
+        ``None`` without a router), ``replicas[]`` (one per-engine snapshot
+        each: scheduler queue depth and wait age, decode-block and
+        admission-pipeline counters, per-class latency percentiles,
+        degradation level, watchdog state, fault counters on chaos runs),
+        and — deprecated, kept one release — the old flat keys mirrored at
+        the top level so existing dashboards survive the hop."""
+        out: Dict[str, Any] = {
+            "schema_version": self.STATS_SCHEMA_VERSION,
+            "model": self.model_name,
+        }
+        if hasattr(self.client, "stats_v2"):
+            v2 = self.client.stats_v2()
+            out["router"] = v2["router"]
+            out["replicas"] = v2["replicas"]
+        else:
+            out["router"] = None
+            out["replicas"] = [dict(self._engine_flat_stats(),
+                                    name="replica-0")]
+        out.update(self._engine_flat_stats())
+        out["deprecation"] = self._STATS_DEPRECATION
         return out
 
     # ------------------------------------------------------------------ #

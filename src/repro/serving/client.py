@@ -123,13 +123,36 @@ class GenerationResult:
         }
 
 
+@dataclass
+class HandoffRecord:
+    """One open request leaving a draining replica: the engine-level
+    record (live request object + optional cache snapshot + streaming
+    codec state) plus the client handle that migrates with it.  Produced
+    by :meth:`EngineClient.handoff_export`, consumed by
+    :meth:`EngineClient.handoff_import` — in-process only (the record
+    carries live objects, not bytes)."""
+
+    record: Dict[str, object]
+    handle: Optional["RequestHandle"] = None
+
+    @property
+    def request(self) -> Request:
+        return self.record["req"]  # type: ignore[return-value]
+
+
 class HandleStream:
     """Single-consumer event stream of a handle: iterate synchronously or
-    with ``async for`` (queue reads hop to a worker thread so the event
-    loop stays free)."""
+    with ``async for``.  The async path is event-driven, not
+    thread-bridged: the engine thread wakes a per-consumer
+    ``asyncio.Event`` via ``call_soon_threadsafe``, so one event loop can
+    hold hundreds of open streams without parking a worker thread per
+    stream (the old ``asyncio.to_thread(q.get)`` bridge capped concurrent
+    SSE streams at the default executor size)."""
 
-    def __init__(self, q: "queue.Queue[Optional[object]]") -> None:
+    def __init__(self, q: "queue.Queue[Optional[object]]",
+                 handle: Optional["RequestHandle"] = None) -> None:
         self._q = q
+        self._handle = handle
 
     def __iter__(self) -> Iterator[object]:
         while True:
@@ -142,11 +165,31 @@ class HandleStream:
         return self._agen()
 
     async def _agen(self):
-        while True:
-            ev = await asyncio.to_thread(self._q.get)
-            if ev is None:
-                return
-            yield ev
+        if self._handle is None:         # bare-queue stream (tests)
+            while True:
+                ev = await asyncio.to_thread(self._q.get)
+                if ev is None:
+                    return
+                yield ev
+        waker = self._handle._register_waker()
+        try:
+            while True:
+                try:
+                    ev = self._q.get_nowait()
+                except queue.Empty:
+                    waker.clear()
+                    # re-check after clear: an event put between get_nowait
+                    # and clear would otherwise be a lost wakeup
+                    try:
+                        ev = self._q.get_nowait()
+                    except queue.Empty:
+                        await waker.wait()
+                        continue
+                if ev is None:
+                    return
+                yield ev
+        finally:
+            self._handle._unregister_waker(waker)
 
 
 class RequestHandle:
@@ -160,6 +203,9 @@ class RequestHandle:
         self._done = threading.Event()
         self._open = len(requests)
         self._lock = threading.Lock()
+        # asyncio consumers: (loop, Event) pairs woken from the engine
+        # thread on every delivered event (see HandleStream._agen)
+        self._wakers: List[Tuple[object, object]] = []
 
     # -- identity / introspection -------------------------------------- #
     @property
@@ -199,7 +245,7 @@ class RequestHandle:
     # -- consumption ---------------------------------------------------- #
     def stream(self) -> HandleStream:
         """The handle's typed event stream (single consumer)."""
-        return HandleStream(self._queue)
+        return HandleStream(self._queue, self)
 
     def result(self, timeout: Optional[float] = None) -> GenerationResult:
         """Block until every choice finished (or aborted)."""
@@ -208,8 +254,42 @@ class RequestHandle:
         return self._result()
 
     async def result_async(self) -> GenerationResult:
-        await asyncio.to_thread(self._done.wait)
+        """Await completion without blocking a worker thread: the engine
+        thread wakes us through the handle's waker list."""
+        if not self._done.is_set():
+            waker = self._register_waker()
+            try:
+                while not self._done.is_set():
+                    waker.clear()
+                    if self._done.is_set():
+                        break
+                    await waker.wait()
+            finally:
+                self._unregister_waker(waker)
         return self._result()
+
+    # -- asyncio wakers (engine thread -> event loops) ------------------- #
+    def _register_waker(self) -> "asyncio.Event":
+        loop = asyncio.get_running_loop()
+        waker = asyncio.Event()
+        with self._lock:
+            self._wakers.append((loop, waker))
+            waker.set()                  # force an initial queue check
+        return waker
+
+    def _unregister_waker(self, waker: "asyncio.Event") -> None:
+        with self._lock:
+            self._wakers = [(lp, w) for lp, w in self._wakers
+                            if w is not waker]
+
+    def _wake(self) -> None:
+        with self._lock:
+            wakers = list(self._wakers)
+        for loop, waker in wakers:
+            try:
+                loop.call_soon_threadsafe(waker.set)
+            except RuntimeError:         # consumer's loop already closed
+                pass
 
     def _result(self) -> GenerationResult:
         choices = [
@@ -266,6 +346,9 @@ class RequestHandle:
                 self._done.set()
         elif ev.token is not None:
             self._queue.put(TokenEvent(idx, ev.token, ev.text, ev.logprob, ev.top_logprobs))
+        else:
+            return
+        self._wake()
 
 
 class EngineClient:
@@ -301,6 +384,12 @@ class EngineClient:
         self._draining = False
         self._drain_cutoff = False
         self._drained = threading.Event()
+        # rolling-restart handoff: the loop thread exports every open
+        # request at a block boundary (engine state is quiescent there),
+        # then terminates; see handoff_export()
+        self._handoff_requested = False
+        self._handoff_records: List[HandoffRecord] = []
+        self._handoff_done = threading.Event()
         # watchdog: _step_started is (re)stamped around every loop body;
         # the sidecar thread flips _wedged when one body overruns
         self.watchdog_timeout_s = watchdog_timeout_s
@@ -403,6 +492,7 @@ class EngineClient:
         out = dict(self.engine.scheduler.snapshot())
         out["content_cache"] = self.engine.content_cache_stats()
         out["speculation"] = self.engine.speculation_stats()
+        out["prefill_groups"] = dict(self.engine.group_stats)
         out["draining"] = self._draining
         out["loop_errors"] = self._loop_errors
         out["watchdog"] = {
@@ -461,6 +551,17 @@ class EngineClient:
                 if self._stop:
                     self._shutdown_locked()
                     self._drained.set()
+                    self._handoff_done.set()
+                    return
+                if self._handoff_requested:
+                    # block boundary: the engine is quiescent, so export
+                    # every open request and terminate this loop.  Handles
+                    # migrate with the records — no finish events here.
+                    self._handoff_requested = False
+                    self._handoff_export_locked()
+                    self._stop = True
+                    self._drained.set()
+                    self._handoff_done.set()
                     return
                 if (self._draining and not self._drain_cutoff
                         and not self._has_work_locked() and not self._aborts):
@@ -614,6 +715,81 @@ class EngineClient:
     @property
     def draining(self) -> bool:
         return self._draining
+
+    # ------------------------------------------------------------------ #
+    # rolling-restart handoff (DESIGN_router.md)
+    # ------------------------------------------------------------------ #
+    def handoff_export(self, timeout: Optional[float] = 30.0
+                       ) -> List[HandoffRecord]:
+        """Drain this replica *into records* instead of into the floor:
+        stop admitting, let the loop thread reach its next block boundary,
+        export every open request (live slots as exact cache snapshots,
+        everything else as re-prefill queue records — see
+        ``InferenceEngine.export_handoff``), and terminate the loop.  The
+        returned records carry the live request objects AND their client
+        handles; feeding them to a successor's :meth:`handoff_import`
+        resumes every stream bit-identically, with consumers never seeing
+        a finish event for the hop.  After this call the client is
+        stopped (``submit`` raises; a router fails over)."""
+        with self._cv:
+            if self._stop:
+                return []
+            self._draining = True
+            if self._admission is not None:
+                self._admission.start_drain()
+            self._handoff_requested = True
+            self._cv.notify_all()
+        if not self._handoff_done.wait(timeout):
+            raise TimeoutError(f"handoff export not finished in {timeout}s")
+        records, self._handoff_records = self._handoff_records, []
+        return records
+
+    def _handoff_export_locked(self) -> None:
+        """Loop-thread half of :meth:`handoff_export` (holds ``_cv``)."""
+        records: List[HandoffRecord] = []
+        # admission-queue waiters first: overdue ones expire with their
+        # usual typed timeout event; the rest become re-prefill records
+        if self._admission is not None:
+            ready, expired = self._admission.poll(1 << 30)
+            for req in expired:
+                for ev in self._finish_unstarted(
+                        req, FinishReason.TIMEOUT, RequestStatus.FAILED,
+                        error="queue-wait timeout at handoff"):
+                    handle = self._handles.pop(ev.request_id, None)
+                    if handle is not None:
+                        handle._on_event(ev)
+            for req in ready:
+                records.append(HandoffRecord(
+                    record={"req": req, "cache": None, "ctx_valid": None,
+                            "streamer": None, "stopchk": None}))
+        for rec in self.engine.export_handoff():
+            records.append(HandoffRecord(record=rec))
+        for hr in records:
+            hr.handle = self._handles.pop(hr.request.request_id, None)
+        self._handoff_records = records
+
+    def handoff_import(self, records: List[HandoffRecord]) -> int:
+        """Adopt a draining replica's exported requests: the engine seeds
+        its resume tables (cache snapshots restore through the preemption
+        -resume path, bit-identically), and each migrated handle re-binds
+        to this client so its consumer keeps iterating the same stream.
+        Admission control is bypassed — these requests were already
+        admitted once at the source.  Returns the number adopted."""
+        adopted = 0
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("EngineClient is stopped")
+            for hr in records:
+                req = hr.request
+                if req.is_finished:
+                    continue
+                self.engine.import_handoff(hr.record)
+                if hr.handle is not None:
+                    hr.handle._client = self
+                    self._handles[req.request_id] = hr.handle
+                adopted += 1
+            self._cv.notify_all()
+        return adopted
 
     def _shutdown_locked(self) -> None:
         """Terminate every in-flight consumer with an ABORT finish event

@@ -137,6 +137,11 @@ def make_handler(api: OpenAIServer):
                 tenant = self.headers.get("x-tenant")
                 if tenant and "user" not in body:
                     body["user"] = tenant
+                # the x-session header maps to the router's `session`
+                # affinity key (multi-turn chat pins to one replica)
+                session = self.headers.get("x-session")
+                if session and "session" not in body:
+                    body["session"] = session
                 if body.get("stream"):
                     self._stream_sse(streaming(body))
                 else:

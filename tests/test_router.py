@@ -1,0 +1,307 @@
+"""Multi-replica router: placement, affinity, drain/handoff, stats v2.
+
+Pins the PR 10 contract (DESIGN_router.md): the router fronts N
+in-process engine replicas with prefix-cache-aware placement and session
+affinity; draining a replica hands its live slots to a successor that
+resumes them *bit-identically* through the exact-sequence snapshot path;
+``n>1`` fan-out admits as one shared-prefix group with zero full-cache
+copies under the paged layout; and ``GET /stats`` serves the versioned
+``router`` / ``replicas[]`` envelope with the flat legacy keys mirrored
+one release."""
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.admission import AdmissionController, Overloaded, RateLimited
+from repro.core.admission import TenantConfig
+from repro.core.engine import InferenceEngine
+from repro.core.request import GenerationRequest, SamplingParams
+from repro.serving.api import OpenAIServer
+from repro.serving.client import EngineClient
+from repro.serving.router import (ReplicaStats, Router, RouterStats,
+                                  _digest_chain)
+
+LONG = "a shared system prompt that spans multiple digest blocks " * 3
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen3-0.6b-toy")
+
+
+def mk_client(cfg, *, admission=True, seed=0, layout="dense", **adm_kw):
+    eng = InferenceEngine(cfg, max_batch=4, cache_len=256, seed=seed,
+                          kv_layout=layout, kv_page_size=16)
+    adm = AdmissionController(**adm_kw) if admission else None
+    return EngineClient(eng, admission=adm)
+
+
+def greq(prompt, max_tokens=4, **kw):
+    return GenerationRequest(prompt=prompt,
+                             sampling=SamplingParams(max_tokens=max_tokens),
+                             **kw)
+
+
+# --------------------------------------------------------------------- #
+# shared-prefix n>1 groups (the PR 7 carried-forward API item)
+# --------------------------------------------------------------------- #
+def test_n_fanout_shares_prefix_with_zero_full_copies(cfg):
+    """n=4 admits as one group: one prefill, three shared admissions,
+    zero full-cache copies — and the choices match an independent n=1
+    run bit-for-bit (greedy).  Prefix cache OFF: sharing comes from the
+    engine-owned group table, not the cache."""
+    eng = InferenceEngine(cfg, max_batch=8, cache_len=256, seed=0,
+                          kv_layout="paged", kv_page_size=16,
+                          enable_prefix_cache=False)
+    with EngineClient(eng) as client:
+        res = client.submit(greq(LONG, max_tokens=8, n=4)).result(timeout=120)
+        texts = [c.text for c in res.choices]
+    assert len(texts) == 4 and len(set(texts)) == 1
+    assert eng.group_stats["groups"] == 1
+    assert eng.group_stats["shared_admits"] == 3
+    assert eng.pool.stats.full_copies == 0
+
+    eng2 = InferenceEngine(cfg, max_batch=8, cache_len=256, seed=0,
+                           kv_layout="paged", kv_page_size=16,
+                           enable_prefix_cache=False)
+    with EngineClient(eng2) as solo:
+        ref = solo.submit(greq(LONG, max_tokens=8, n=1)).result(timeout=120)
+    assert texts[0] == ref.choices[0].text
+
+
+def test_n_fanout_group_dense_layout(cfg):
+    """Dense layout shares through the snapshot row instead of COW pages;
+    outputs still identical across choices."""
+    eng = InferenceEngine(cfg, max_batch=8, cache_len=256, seed=0,
+                          enable_prefix_cache=False)
+    with EngineClient(eng) as client:
+        res = client.submit(greq(LONG, max_tokens=6, n=3)).result(timeout=120)
+        texts = [c.text for c in res.choices]
+    assert len(set(texts)) == 1
+    assert eng.group_stats["shared_admits"] == 2
+
+
+# --------------------------------------------------------------------- #
+# placement
+# --------------------------------------------------------------------- #
+def test_session_affinity_pins_to_one_replica(cfg):
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        for turn in range(3):
+            h = router.submit(greq(f"turn {turn} of the conversation",
+                                   session="chat-1"))
+            h.result(timeout=120)
+        stats = router.router_stats()
+        assert isinstance(stats, RouterStats)
+        # first turn placed by load, later turns by session pin
+        assert stats.placements["session"] == 2
+        assert stats.sessions_pinned == 1
+
+
+def test_prefix_affinity_routes_to_warm_replica(cfg):
+    """A second request sharing a long prompt prefix lands on the replica
+    that served the first (the router-side digest index), regardless of
+    load order."""
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        router.submit(greq(LONG + " question one")).result(timeout=120)
+        first = next(i for i, r in enumerate(router.replicas) if r.submitted)
+        router.submit(greq(LONG + " question two")).result(timeout=120)
+        stats = router.router_stats()
+        assert stats.placements["prefix"] == 1
+        # both requests on the same replica
+        assert router.replicas[first].submitted == 2
+
+
+def test_digest_chain_properties():
+    a = _digest_chain(LONG + "suffix one")
+    b = _digest_chain(LONG + "suffix two")
+    c = _digest_chain("completely different prompt " * 4)
+    shared = sum(1 for x, y in zip(a, b) if x == y)
+    assert shared >= 1                      # long shared prefix matches
+    assert a[:shared] == b[:shared]         # chain => prefix property
+    assert not set(a) & set(c)              # disjoint prompts, no overlap
+    # token prompts hash too (pre-tokenised API path)
+    assert _digest_chain(list(range(64))) != _digest_chain(list(range(64, 128)))
+
+
+def test_round_robin_and_random_policies(cfg):
+    with Router([mk_client(cfg), mk_client(cfg)],
+                policy="round_robin") as router:
+        for i in range(4):
+            router.submit(greq(f"rr {i}", max_tokens=2)).result(timeout=120)
+        assert router.router_stats().placements["round_robin"] == 4
+        # both replicas saw traffic
+        assert all(r.submitted > 0 for r in router.replicas)
+    with Router([mk_client(cfg), mk_client(cfg)], policy="random",
+                seed=7) as router:
+        for i in range(4):
+            router.submit(greq(f"rnd {i}", max_tokens=2)).result(timeout=120)
+        assert router.router_stats().placements["random"] == 4
+
+
+def test_shed_bulk_replica_stops_taking_batch_traffic(cfg):
+    """Degradation-ladder awareness: a replica stuck at SHED_BULK
+    (shed_queue_depth=0 makes the ladder trip immediately) receives no
+    batch-class requests while a healthy replica exists."""
+    shedding = mk_client(cfg, shed_queue_depth=0, shed_wait_s=0)
+    healthy = mk_client(cfg)
+    with Router([shedding, healthy]) as router:
+        assert router.replicas[0].sheds_batch()
+        for i in range(3):
+            router.submit(greq(f"batch job {i}", max_tokens=2)).result(timeout=120)
+        assert router.replicas[0].submitted == 0
+        assert router.replicas[1].submitted == 3
+
+
+def test_rate_limited_propagates_without_failover(cfg):
+    """Tenant budget rejection is policy, not replica fault: the router
+    must not retry it on another replica (double-spending the budget)."""
+    limited = mk_client(cfg, tenants={"t1": TenantConfig(
+        weight=1, rps=0.001, burst_requests=1.0)})
+    with Router([limited, mk_client(cfg)]) as router:
+        router.submit(greq("first", max_tokens=2, tenant="t1",
+                           session="pin")).result(timeout=120)
+        with pytest.raises(RateLimited):
+            router.submit(greq("second", max_tokens=2, tenant="t1",
+                               session="pin"))
+        assert router.router_stats().failovers == 0
+
+
+def test_failover_on_refusing_replica(cfg):
+    """A replica that refuses a submit (its admission entered drain
+    before the router noticed — the rolling-restart race) is failed over,
+    not surfaced to the caller.  Priority traffic bypasses the router's
+    SHED_BULK filter, so placement genuinely hits the refusing replica."""
+    a, b = mk_client(cfg), mk_client(cfg)
+    with Router([a, b], policy="round_robin") as router:
+        a._admission.start_drain()
+        for i in range(4):
+            router.submit(greq(f"after refusal {i}", max_tokens=2,
+                               priority=1)).result(timeout=120)
+        assert router.router_stats().failovers >= 1
+        assert router.replicas[0].submitted == 0
+        assert router.replicas[1].submitted == 4
+
+
+def test_all_draining_rejects_with_structured_503(cfg):
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        for rep in router.replicas:
+            rep.client._draining = True
+        with pytest.raises(Overloaded) as ei:
+            router.submit(greq("too late"))
+        assert ei.value.code == "draining"
+        assert ei.value.status == 503
+        assert ei.value.retry_after > 0
+
+
+# --------------------------------------------------------------------- #
+# drain / handoff
+# --------------------------------------------------------------------- #
+def _outputs(handles):
+    return [tuple(h._requests[0].output_tokens)
+            for h in handles if h.result(timeout=120)]
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_drain_handoff_bit_identity(cfg, layout):
+    """Mid-decode drain: live slots hand off as exact cache snapshots and
+    the successor's continuations match an undrained single-replica run
+    token for token."""
+    prompts = [f"handoff identity prompt {i} with several words" for i in range(3)]
+
+    ref = mk_client(cfg, admission=False, layout=layout)
+    with ref:
+        refs = [ref.submit(greq(p, max_tokens=24)) for p in prompts]
+        expected = _outputs(refs)
+
+    a = mk_client(cfg, admission=False, layout=layout)
+    b = mk_client(cfg, admission=False, layout=layout)
+    with Router([a, b], policy="round_robin") as router:
+        # pin all three to replica a so the drain moves live decode slots
+        handles = [a.submit(greq(p, max_tokens=24)) for p in prompts]
+        for rep, client in zip(router.replicas, (a, b)):
+            if client is a:
+                rep.open = [(h, 1000) for h in handles]
+        time.sleep(2.0)
+        info = router.drain_replica(0)
+        assert info["adopted"] == info["exported"] > 0
+        assert _outputs(handles) == expected
+        assert router.replicas[0].state == "stopped"
+        assert router.router_stats().handoffs == 1
+
+
+def test_session_affinity_survives_drain(cfg):
+    """A pinned session keeps streaming through its replica's drain: the
+    in-flight turn migrates with the handoff and the *next* turn follows
+    the re-pin to the successor."""
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        h = router.submit(greq("long running turn with words",
+                               max_tokens=32, session="sticky"))
+        time.sleep(1.5)
+        pinned = router._sessions["sticky"]
+        router.drain_replica(pinned)
+        assert h.result(timeout=120).choices[0].finish_reason in ("length", "stop")
+        next_turn = router.submit(greq("the next turn", max_tokens=2,
+                                       session="sticky"))
+        next_turn.result(timeout=120)
+        assert router._sessions["sticky"] != pinned
+        assert router.router_stats().placements["session"] >= 1
+
+
+def test_drain_replica_rejects_bad_successor(cfg):
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        with pytest.raises(ValueError):
+            router.drain_replica(0, successor=0)
+        assert router.replicas[0].state == "up"     # rolled back
+        router.replicas[1].client.stop()
+        with pytest.raises(RuntimeError):
+            router.drain_replica(0)                 # no successor available
+        assert router.replicas[0].state == "up"
+
+
+# --------------------------------------------------------------------- #
+# stats v2 envelope
+# --------------------------------------------------------------------- #
+def test_stats_v2_envelope_and_typed_accessors(cfg):
+    with Router([mk_client(cfg), mk_client(cfg)]) as router:
+        router.submit(greq("warm up", max_tokens=2)).result(timeout=120)
+        api = OpenAIServer(router, "toy")
+        out = api.stats()
+        assert out["schema_version"] == OpenAIServer.STATS_SCHEMA_VERSION
+        assert out["router"]["policy"] == "affinity"
+        assert len(out["replicas"]) == 2
+        names = [r["name"] for r in out["replicas"]]
+        assert names == ["replica-0", "replica-1"]
+        # legacy flat keys still mirrored (one release), with the notice
+        assert "max_batch" in out and "retired" in out
+        assert "deprecation" in out
+        # typed accessors
+        for rs in router.replica_stats():
+            assert isinstance(rs, ReplicaStats)
+            assert rs.state == "up" and rs.alive
+        assert isinstance(router.router_stats(), RouterStats)
+
+
+def test_stats_v2_single_replica_shape(cfg):
+    """Without a router the envelope still carries replicas[] (length 1)
+    and router: None, plus the untouched flat keys."""
+    with mk_client(cfg) as client:
+        api = OpenAIServer(client, "toy")
+        out = api.stats()
+        assert out["schema_version"] == 2
+        assert out["router"] is None
+        assert len(out["replicas"]) == 1
+        assert out["replicas"][0]["name"] == "replica-0"
+        assert "max_batch" in out
+
+
+def test_router_health_surface(cfg):
+    a, b = mk_client(cfg), mk_client(cfg)
+    with Router([a, b]) as router:
+        assert router.alive and router.ready and not router.draining
+        assert router.engine is a.engine
+        assert router._admission is a._admission
+        a.stop()
+        assert router.alive and router.ready       # b still up
+        b._draining = True
+        assert not router.ready
